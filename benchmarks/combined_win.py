@@ -1,0 +1,46 @@
+"""Combined window allocations (paper §4 / Fig. 13).
+
+Streaming writes+reads against a pure storage window vs combined windows at
+several factors: the pinned-memory fraction absorbs that share of the
+traffic, so throughput rises with the factor -- the paper measured ~2x at
+factor 0.5 on Lustre.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Bench, workdir
+from repro.core import Communicator, Window
+
+WINDOW = 32 << 20
+SEGMENT = 2 << 20
+
+
+def run(bench: Bench) -> None:
+    comm = Communicator(1)
+    data = np.random.default_rng(0).integers(0, 256, SEGMENT, dtype=np.uint8)
+    with workdir("cmb") as tmp:
+        base = None
+        for factor in ("0.0", "0.5", "0.8", "1.0"):
+            info = {"alloc_type": "storage",
+                    "storage_alloc_filename": f"{tmp}/w{factor}.bin",
+                    "storage_alloc_factor": factor}
+            # factor follows the paper: fraction of addresses in MEMORY
+            win = Window.allocate(comm, WINDOW, info=info, page_size=65536,
+                                  cache_bytes=WINDOW // 8)  # tight cache
+            t0 = time.perf_counter()
+            for it in range(2):
+                for off in range(0, WINDOW - SEGMENT, SEGMENT):
+                    win.put(data, 0, off)
+                    win.get(0, off, SEGMENT)
+            win.sync(0)
+            dt = time.perf_counter() - t0
+            bw = 2 * 2 * (WINDOW - SEGMENT) / dt / 2**30
+            if factor == "0.0":
+                base = dt
+            bench.add(f"factor_{factor}", dt, 1,
+                      f"bw={bw:.2f}GiB/s;speedup_x{base / dt:.2f}")
+            win.free()

@@ -1,0 +1,44 @@
+"""Shared benchmark plumbing: timing, CSV output, storage setup."""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import shutil
+import tempfile
+import time
+
+__all__ = ["timer", "Bench", "workdir"]
+
+
+@contextlib.contextmanager
+def timer():
+    box = {}
+    t0 = time.perf_counter()
+    yield box
+    box["s"] = time.perf_counter() - t0
+
+
+class Bench:
+    """Collects rows and prints the ``name,us_per_call,derived`` CSV."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: list[tuple[str, float, str]] = []
+
+    def add(self, label: str, seconds: float, calls: int = 1, derived: str = ""):
+        us = seconds / max(1, calls) * 1e6
+        self.rows.append((f"{self.name}/{label}", us, derived))
+
+    def emit(self) -> None:
+        for label, us, derived in self.rows:
+            print(f"{label},{us:.2f},{derived}")
+
+
+@contextlib.contextmanager
+def workdir(prefix: str):
+    d = tempfile.mkdtemp(prefix=prefix)
+    try:
+        yield d
+    finally:
+        shutil.rmtree(d, ignore_errors=True)

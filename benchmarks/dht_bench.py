@@ -1,0 +1,61 @@
+"""Distributed Hash Table benchmark (paper §3.3/§3.4, Fig. 9/10).
+
+Random inserts filling 80% of the table, memory vs storage vs combined
+windows, plus the out-of-core case where the memory budget is far below
+the table size (the paper's 2x-DRAM experiment, scaled down).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Bench, workdir
+from repro.core import Communicator, DistributedHashTable
+
+LV_ENTRIES = 1 << 12
+FILL = 0.8
+
+
+def _insert_all(dht, n) -> float:
+    rng = np.random.default_rng(0)
+    keys = rng.integers(1, 1 << 40, n)
+    t0 = time.perf_counter()
+    for k in keys:
+        dht.insert(int(k), 1, op="sum")
+    return time.perf_counter() - t0
+
+
+def run(bench: Bench) -> None:
+    n_insert = int(4 * LV_ENTRIES * FILL)
+    with workdir("dht") as tmp:
+        cases = [
+            ("memory", None, None),
+            ("storage", {"alloc_type": "storage",
+                         "storage_alloc_filename": f"{tmp}/d.bin"}, None),
+            ("combined_0.5", {"alloc_type": "storage",
+                              "storage_alloc_filename": f"{tmp}/c.bin",
+                              "storage_alloc_factor": "0.5"}, None),
+            # out-of-core: budget is 1/8 of the per-rank segment
+            ("out_of_core", {"alloc_type": "storage",
+                             "storage_alloc_filename": f"{tmp}/o.bin",
+                             "storage_alloc_factor": "auto"}, "budget"),
+        ]
+        base = None
+        for name, info, budget_flag in cases:
+            comm = Communicator(4)
+            dht = DistributedHashTable(
+                comm, LV_ENTRIES, info=info,
+                memory_budget=(LV_ENTRIES * 24 // 8) if budget_flag else None)
+            dt = _insert_all(dht, n_insert)
+            rate = n_insert / dt
+            if base is None:
+                base = dt
+            bench.add(f"insert/{name}", dt, n_insert,
+                      f"rate={rate:.0f}/s;overhead_x{dt / base:.2f}")
+            t0 = time.perf_counter()
+            flushed = dht.sync()
+            bench.add(f"checkpoint/{name}", time.perf_counter() - t0, 1,
+                      f"flushed={flushed >> 10}KiB")
+            dht.free()

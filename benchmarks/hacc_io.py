@@ -1,0 +1,88 @@
+"""HACC-IO checkpoint/restart benchmark (paper §3.5.1, Fig. 11).
+
+Particle state (the 9 HACC fields: xx yy zz vx vy vz phi pid mask) is
+checkpointed into ONE shared file with per-rank offsets through storage
+windows, versus a direct-POSIX individual-I/O baseline (the paper's
+MPI-I/O individual mode).  Both include a durability sync; restart reads
+everything back and verifies bit-exactness, strong-scaling over rank
+counts.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import Bench, workdir
+from repro.core import Communicator, Window
+
+N_PARTICLES = 200_000  # per run, split across ranks (paper: 100M)
+RECORD = 7 * 4 + 8 + 2  # 7 f32 + i64 pid + u16 mask = 38 B/particle
+
+
+def _particles(n, seed) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 256, n * RECORD, dtype=np.uint8)  # packed records
+
+
+def _windows_ckpt(tmp, ranks, per_rank) -> tuple[float, float]:
+    comm = Communicator(ranks)
+    seg = per_rank * RECORD
+    win = Window.allocate(comm, seg, info={
+        "alloc_type": "storage",
+        "storage_alloc_filename": f"{tmp}/hacc_win.bin"},
+        shared_file=True, page_size=65536)
+    blobs = [_particles(per_rank, r) for r in range(ranks)]
+    t0 = time.perf_counter()
+    for r in range(ranks):
+        win.put(blobs[r], r, 0)      # put == checkpoint write
+    win.sync()                        # durability point
+    t_w = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for r in range(ranks):
+        back = win.get(r, 0, seg)
+        assert (back == blobs[r]).all()  # restart verification
+    t_r = time.perf_counter() - t0
+    win.free()
+    return t_w, t_r
+
+
+def _posix_ckpt(tmp, ranks, per_rank) -> tuple[float, float]:
+    seg = per_rank * RECORD
+    path = f"{tmp}/hacc_posix.bin"
+    blobs = [_particles(per_rank, r) for r in range(ranks)]
+    fd = os.open(path, os.O_RDWR | os.O_CREAT, 0o644)
+    os.ftruncate(fd, ranks * seg)
+    t0 = time.perf_counter()
+    for r in range(ranks):
+        os.pwrite(fd, blobs[r].tobytes(), r * seg)
+    os.fsync(fd)
+    t_w = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for r in range(ranks):
+        back = np.frombuffer(os.pread(fd, seg, r * seg), np.uint8)
+        assert (back == blobs[r]).all()
+    t_r = time.perf_counter() - t0
+    os.close(fd)
+    return t_w, t_r
+
+
+def run(bench: Bench) -> None:
+    with workdir("hacc") as tmp:
+        for ranks in (1, 2, 4, 8):
+            per_rank = N_PARTICLES // ranks
+            ww, wr = _windows_ckpt(tmp, ranks, per_rank)
+            pw, pr = _posix_ckpt(tmp, ranks, per_rank)
+            mb = N_PARTICLES * RECORD / 2**20
+            bench.add(f"write/windows/{ranks}r", ww, 1,
+                      f"bw={mb / ww:.0f}MiB/s")
+            bench.add(f"write/posix/{ranks}r", pw, 1,
+                      f"bw={mb / pw:.0f}MiB/s")
+            bench.add(f"read/windows/{ranks}r", wr, 1,
+                      f"bw={mb / wr:.0f}MiB/s")
+            bench.add(f"read/posix/{ranks}r", pr, 1,
+                      f"bw={mb / pr:.0f}MiB/s")
+            bench.add(f"overhead/{ranks}r", ww / pw / 1e6, 1,
+                      f"windows_vs_posix_x{ww / pw:.2f}")

@@ -1,0 +1,109 @@
+"""IMB-RMA analogue (paper §3.1, Fig. 5/6).
+
+Single/multiple-transfer put/get + atomics throughput on MPI-style windows,
+memory vs storage allocation, *without* storage synchronization -- the
+paper's claim is that the page cache makes the two indistinguishable for
+RMA traffic (<=1% difference).  Transfer sizes 256 KiB..4 MiB, non-aggregate
+(one op per epoch), like the paper's configuration.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Bench, workdir
+from repro.core import Communicator, Window
+
+SIZES = [256 << 10, 1 << 20, 4 << 20]
+ITERS = 40
+
+
+def _win(comm, size, tmp, storage: bool):
+    info = None
+    if storage:
+        info = {"alloc_type": "storage",
+                "storage_alloc_filename": f"{tmp}/imb.bin"}
+    return Window.allocate(comm, size, info=info, page_size=65536)
+
+
+def _bw(nbytes, secs):
+    return f"{nbytes / secs / 2**30:.2f}GiB/s"
+
+
+def run(bench: Bench) -> None:
+    comm = Communicator(2)
+    with workdir("imb") as tmp:
+        for storage in (False, True):
+            kind = "storage" if storage else "memory"
+            for size in SIZES:
+                win = _win(comm, size, tmp, storage)
+                data = np.random.default_rng(0).integers(
+                    0, 256, size, dtype=np.uint8)
+                # unidirectional put
+                t0 = time.perf_counter()
+                for _ in range(ITERS):
+                    win.lock(1)
+                    win.put(data, 1, 0)
+                    win.unlock(1)
+                dt = time.perf_counter() - t0
+                bench.add(f"uni_put/{kind}/{size >> 10}KiB", dt, ITERS,
+                          _bw(size * ITERS, dt))
+                # unidirectional get
+                t0 = time.perf_counter()
+                for _ in range(ITERS):
+                    win.lock(1)
+                    win.get(1, 0, size)
+                    win.unlock(1)
+                dt = time.perf_counter() - t0
+                bench.add(f"uni_get/{kind}/{size >> 10}KiB", dt, ITERS,
+                          _bw(size * ITERS, dt))
+                win.free()
+            # bidirectional (Fig. 5c/d): both ranks exchange concurrently
+            win = _win(comm, 1 << 20, tmp, storage)
+            data = np.random.default_rng(1).integers(0, 256, 1 << 20,
+                                                     dtype=np.uint8)
+            t0 = time.perf_counter()
+            for _ in range(ITERS):
+                win.lock(0); win.put(data, 0, 0); win.unlock(0)
+                win.lock(1); win.put(data, 1, 0); win.unlock(1)
+            dt = time.perf_counter() - t0
+            bench.add(f"bidir_put/{kind}/1024KiB", dt, ITERS * 2,
+                      _bw(2 * (1 << 20) * ITERS, dt))
+            win.free()
+
+            # multiple transfer (Fig. 6a): one origin, many targets
+            comm8 = Communicator(8)
+            win = Window.allocate(comm8, 1 << 20, info=(
+                {"alloc_type": "storage",
+                 "storage_alloc_filename": f"{tmp}/imb8.bin"} if storage
+                else None), page_size=65536)
+            t0 = time.perf_counter()
+            for _ in range(ITERS // 4):
+                for r in range(1, 8):
+                    win.lock(r); win.put(data, r, 0); win.unlock(r)
+            dt = time.perf_counter() - t0
+            bench.add(f"multi_put/{kind}/7targets", dt, (ITERS // 4) * 7,
+                      _bw(7 * (1 << 20) * (ITERS // 4), dt))
+            win.free()
+
+            # atomics (fixed 8-byte ops, like IMB-RMA's atomic set)
+            win = _win(comm, 4096, tmp, storage)
+            t0 = time.perf_counter()
+            for i in range(ITERS * 10):
+                win.accumulate(np.asarray([i], np.int64), 1, 0, op="sum")
+            dt = time.perf_counter() - t0
+            bench.add(f"accumulate/{kind}", dt, ITERS * 10)
+            t0 = time.perf_counter()
+            for i in range(ITERS * 10):
+                win.compare_and_swap(i + 1, i, 1, 8)
+            dt = time.perf_counter() - t0
+            bench.add(f"cas/{kind}", dt, ITERS * 10)
+            win.free()
+
+        # paper's conclusion quantified: storage/memory put ratio at 1 MiB
+        mem = next(us for l, us, _ in bench.rows if l.endswith("uni_put/memory/1024KiB"))
+        sto = next(us for l, us, _ in bench.rows if l.endswith("uni_put/storage/1024KiB"))
+        bench.add("put_overhead_storage_vs_memory", sto / mem / 1e6, 1,
+                  f"ratio={sto / mem:.3f}")

@@ -1,0 +1,85 @@
+"""mSTREAM microbenchmark (paper §3.2, Fig. 7/8).
+
+Large SEQ / PAD / RND / MIX segment accesses over a window, alternating
+read/write, with a storage synchronization before the last iteration ends
+-- the worst case for write-back caching.  Compares memory windows vs
+storage windows (both the paper's mmap mechanism and our user-level cache),
+and reports the flush-time fraction (Fig. 8a analogue).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Bench, workdir
+from repro.core import Communicator, Window
+
+WINDOW = 64 << 20     # 64 MiB (scaled: paper used 16 GiB on a workstation)
+SEGMENT = 4 << 20     # 4 MiB  (paper: 16 MiB)
+ITERS = 2
+
+
+def _offsets(kind: str, nseg: int) -> np.ndarray:
+    if kind == "SEQ":
+        return np.arange(nseg)
+    if kind == "PAD":
+        return np.arange(nseg)  # padded stride handled at access time
+    if kind == "RND":
+        return np.random.default_rng(0).permutation(nseg)
+    mix = np.arange(nseg)
+    mix[1::2] = np.random.default_rng(1).permutation(nseg)[1::2]
+    return mix
+
+
+def _run_kernel(win, kind: str) -> tuple[float, float]:
+    """Returns (kernel_seconds, flush_seconds)."""
+    nseg = WINDOW // SEGMENT
+    data = np.random.default_rng(2).integers(0, 256, SEGMENT, dtype=np.uint8)
+    t0 = time.perf_counter()
+    for it in range(ITERS):
+        order = _offsets(kind, nseg)
+        for j, s in enumerate(order):
+            off = int(s) * SEGMENT
+            if kind == "PAD":
+                off = (off + 512) % (WINDOW - SEGMENT)
+            if j % 2 == 0:
+                win.put(data, 0, off)
+            else:
+                win.get(0, off, SEGMENT)
+    t_kernel = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    win.sync(0)  # enforced storage synchronization point
+    t_flush = time.perf_counter() - t0
+    return t_kernel, t_flush
+
+
+def run(bench: Bench) -> None:
+    comm = Communicator(1)
+    with workdir("mstream") as tmp:
+        variants = [
+            ("memory", None, "cached"),
+            ("storage_mmap", {"alloc_type": "storage",
+                              "storage_alloc_filename": f"{tmp}/m.bin"}, "mmap"),
+            ("storage_cached", {"alloc_type": "storage",
+                                "storage_alloc_filename": f"{tmp}/c.bin"}, "cached"),
+        ]
+        totals = {}
+        for name, info, mech in variants:
+            win = Window.allocate(comm, WINDOW, info=info, mechanism=mech,
+                                  page_size=65536)
+            for kind in ("SEQ", "PAD", "RND", "MIX"):
+                tk, tf = _run_kernel(win, kind)
+                total = tk + tf
+                bw = WINDOW * ITERS / total / 2**30
+                bench.add(f"{kind}/{name}", total, 1,
+                          f"bw={bw:.2f}GiB/s;flush_frac={tf / total:.2f}")
+                totals.setdefault(name, []).append(total)
+            win.free()
+        # Fig. 7 headline: average slowdown of storage vs memory windows
+        mem = np.mean(totals["memory"])
+        for name in ("storage_mmap", "storage_cached"):
+            ratio = np.mean(totals[name]) / mem
+            bench.add(f"slowdown/{name}", ratio / 1e6, 1,
+                      f"x{ratio:.2f}_vs_memory")

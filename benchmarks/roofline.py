@@ -1,0 +1,138 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, from the compiled per-device HLO:
+
+    compute term    = flops_per_device / peak_FLOPs          (197 TF bf16, v5e)
+    memory term     = traffic_bytes_per_device / HBM_bw      (819 GB/s)
+    collective term = collective_bytes_per_device / link_bw  (~50 GB/s/link)
+
+flops/traffic/collective come from the trip-count-aware HLO analyzer
+(repro.perf.hlo_analysis) -- raw ``cost_analysis`` counts while bodies once
+and is recorded alongside for reference.  MODEL_FLOPS = 6*N*D (train) or
+2*N*D (prefill/decode), with N = active params for MoE; the ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/padding/masked-attention waste.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+LINK_BW = 50e9           # bytes/s per ICI link (assignment constant)
+
+ART_DIR = os.environ.get("REPRO_ARTIFACTS", "artifacts/dryrun")
+
+
+def model_flops(arch: str, shape: str, n_devices: int) -> float:
+    """Useful-work FLOPs per device for the cell (6ND train / 2ND infer)."""
+    from repro.configs import SHAPES, get_config
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    n = cfg.param_count(active_only=bool(cfg.n_experts))
+    if sh.kind == "train":
+        tokens = sh.batch * sh.seq
+        total = 6.0 * n * tokens
+    elif sh.kind == "prefill":
+        tokens = sh.batch * sh.seq
+        total = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n * sh.batch
+    return total / n_devices
+
+
+def analyze_cell(rec: dict) -> dict:
+    f = rec["flops_per_device"]
+    b = rec["traffic_bytes_per_device"]
+    c = rec["collective_bytes_per_device"]
+    t_c = f / PEAK_FLOPS
+    t_m = b / HBM_BW
+    t_coll = c / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(rec["arch"], rec["shape"], rec["n_devices"])
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_fraction": t_c / bound if bound else 0.0,
+        "model_flops_per_dev": mf,
+        "useful_ratio": mf / f if f else 0.0,
+        "state_gib": rec["state_bytes_per_device"] / 2**30,
+    }
+
+
+def load_cells(mesh: str = "pod16x16", tag: str | None = None) -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(f"{ART_DIR}/{mesh}/*.json")):
+        rec = json.load(open(f))
+        has_tag = "__" in os.path.basename(f).replace(
+            f"{rec.get('arch','')}__{rec.get('shape','')}", "")
+        if tag is None and rec.get("tag"):
+            continue
+        base = os.path.basename(f)[:-5]
+        parts = base.split("__")
+        if tag is None and len(parts) > 2:
+            continue
+        if tag is not None and (len(parts) < 3 or parts[2] != tag):
+            continue
+        out.append(rec)
+    return out
+
+
+def table(mesh: str = "pod16x16") -> list[dict]:
+    rows = []
+    for rec in load_cells(mesh):
+        if rec.get("status") == "skip":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": mesh, "dominant": "SKIP",
+                         "reason": rec.get("reason", "")})
+            continue
+        rows.append(analyze_cell(rec))
+    return rows
+
+
+def run(bench) -> None:
+    for mesh in ("pod16x16",):
+        for row in table(mesh):
+            if row["dominant"] == "SKIP":
+                bench.add(f"{row['arch']}/{row['shape']}", 0.0, 1,
+                          "SKIP(full-attn-500k)")
+                continue
+            bench.add(
+                f"{row['arch']}/{row['shape']}",
+                max(row["compute_s"], row["memory_s"], row["collective_s"]),
+                1,
+                f"bound={row['dominant']};"
+                f"cmp={row['compute_s']:.3f}s;mem={row['memory_s']:.3f}s;"
+                f"coll={row['collective_s']:.3f}s;"
+                f"roofline={row['roofline_fraction'] * 100:.0f}%;"
+                f"useful={row['useful_ratio'] * 100:.0f}%")
+
+
+def markdown(mesh: str = "pod16x16") -> str:
+    rows = table(mesh)
+    out = [f"| arch | shape | compute s | memory s | collective s | bound | "
+           f"roofline | MODEL/HLO |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["dominant"] == "SKIP":
+            out.append(f"| {r['arch']} | {r['shape']} | -- | -- | -- | SKIP | -- | -- |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['dominant']} | "
+            f"{r['roofline_fraction'] * 100:.0f}% | {r['useful_ratio'] * 100:.0f}% |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "pod16x16"
+    print(markdown(mesh))

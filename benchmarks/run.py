@@ -1,0 +1,61 @@
+"""Benchmark driver: one suite per paper table/figure + the roofline report.
+
+Prints ``name,us_per_call,derived`` CSV rows (deliverable d).
+Suites:
+  imb_rma          -- paper Fig. 5/6  (RMA throughput, memory vs storage)
+  mstream          -- paper Fig. 7/8  (large streaming ops + flush fraction)
+  dht              -- paper Fig. 9/10 (DHT inserts, out-of-core, combined)
+  hacc_io          -- paper Fig. 11   (checkpoint/restart vs POSIX baseline)
+  mapreduce        -- paper Fig. 12   (transparent-ckpt overhead vs rewrite)
+  combined_win     -- paper Fig. 13   (combined-allocation throughput)
+  roofline         -- this task's §Roofline (from dry-run artifacts)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import Bench
+
+SUITES = ("imb_rma", "mstream", "dht", "hacc_io", "mapreduce",
+          "combined_win", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=SUITES, default=None)
+    args = ap.parse_args()
+    failures = []
+    for name in SUITES:
+        if args.only and name != args.only:
+            continue
+        bench = Bench(name)
+        try:
+            if name == "imb_rma":
+                from benchmarks import imb_rma as m
+            elif name == "mstream":
+                from benchmarks import mstream as m
+            elif name == "dht":
+                from benchmarks import dht_bench as m
+            elif name == "hacc_io":
+                from benchmarks import hacc_io as m
+            elif name == "mapreduce":
+                from benchmarks import mapreduce_bench as m
+            elif name == "combined_win":
+                from benchmarks import combined_win as m
+            else:
+                from benchmarks import roofline as m
+            m.run(bench)
+            bench.emit()
+        except Exception:
+            failures.append(name)
+            print(f"{name},ERROR,", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark suites failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Long-context serving with window-backed resumable sessions.
+
+A recurrent (RG-LRU hybrid) model decodes with O(1) state; the decode state
+lives in a *combined* storage window (factor 0.5: half pinned, half behind
+the page cache).  The session survives an engine restart -- the serving
+analogue of the paper's checkpoint/restart story.
+
+Run:  PYTHONPATH=src python examples/long_context_serve.py
+"""
+
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import Communicator
+from repro.models import init_cache_specs, init_params, param_specs
+from repro.serve import Engine, SessionStore
+
+tmp = tempfile.mkdtemp(prefix="repro_serve_")
+cfg = get_config("recurrentgemma-2b", smoke=True)
+params = init_params(param_specs(cfg), jax.random.PRNGKey(0))
+
+B, PROMPT, STEPS, MAX_LEN = 2, 8, 12, 64
+toks = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 0,
+                          cfg.vocab).astype("int32")
+
+store = SessionStore(Communicator(1), f"{tmp}/session.bin",
+                     init_cache_specs(cfg, B, MAX_LEN), factor="0.5")
+
+# -- serve 6 tokens, persist the session, drop the engine ---------------------
+eng = Engine(cfg, params, batch=B, max_len=MAX_LEN, session=store)
+nxt = eng.prefill({"inputs": toks})
+out = [nxt]
+for _ in range(5):
+    nxt = eng.step(nxt)
+    out.append(nxt)
+eng.generated = out
+flushed = eng.save_session()
+print(f"session persisted ({flushed >> 10} KiB flushed), killing engine")
+del eng
+
+# -- a fresh engine resumes exactly where the old one stopped ------------------
+eng2 = Engine(cfg, params, batch=B, max_len=MAX_LEN, session=store)
+eng2.load_session()
+print(f"resumed at position {eng2.pos}")
+for _ in range(STEPS - 6):
+    nxt = eng2.step(nxt)
+    out.append(nxt)
+resumed = np.stack(out, axis=1)
+
+# -- reference: one uninterrupted generation ------------------------------------
+eng3 = Engine(cfg, params, batch=B, max_len=MAX_LEN)
+ref = eng3.generate({"inputs": toks}, STEPS)
+assert (resumed == ref).all(), "resumed session must match uninterrupted run"
+print("resumed generation is bit-exact:", resumed[0].tolist())
+store.free()
+print("done")

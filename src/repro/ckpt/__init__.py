@@ -1,0 +1,5 @@
+"""Transparent checkpointing on storage windows (paper §3.5.2 / §4)."""
+
+from .manager import CheckpointManager, RestoreResult
+
+__all__ = ["CheckpointManager", "RestoreResult"]

@@ -1,0 +1,55 @@
+"""repro.core — the paper's contribution: MPI-style windows on storage.
+
+Public API:
+    Communicator                      rank bookkeeping + collective stubs
+    Window / alloc_mem                MPI_Win_* analogues (allocate, put/get,
+                                      accumulate, CAS, lock/unlock, sync, free)
+    WindowHints / Info / HintError    the paper's MPI_Info performance hints
+    CombinedSegment                   heterogeneous memory+storage allocation
+    DirtyTracker / backings           user-level page cache + selective sync
+    WindowedArray / WindowedPyTree    JAX bridge (out-of-core tensors)
+    DistributedHashTable              paper §3.3 reference application
+    MapReduce1S                       paper §3.5.2 reference application
+"""
+
+from .comm import Communicator
+from .hints import HintError, Info, WindowHints
+from .storage import (
+    DEFAULT_PAGE_SIZE,
+    CachedBacking,
+    DirtyTracker,
+    MmapBacking,
+    StripedFile,
+    make_backing,
+)
+from .combined import CombinedSegment
+from .window import LOCK_EXCLUSIVE, LOCK_SHARED, Window, WindowError, alloc_mem
+from .offload import WindowedArray, WindowedPyTree, auto_factor
+from .dht import DistributedHashTable
+from .mapreduce import MapReduce1S, wordcount_map, wordcount_reduce
+
+__all__ = [
+    "Communicator",
+    "HintError",
+    "Info",
+    "WindowHints",
+    "DEFAULT_PAGE_SIZE",
+    "CachedBacking",
+    "DirtyTracker",
+    "MmapBacking",
+    "StripedFile",
+    "make_backing",
+    "CombinedSegment",
+    "LOCK_EXCLUSIVE",
+    "LOCK_SHARED",
+    "Window",
+    "WindowError",
+    "alloc_mem",
+    "WindowedArray",
+    "WindowedPyTree",
+    "auto_factor",
+    "DistributedHashTable",
+    "MapReduce1S",
+    "wordcount_map",
+    "wordcount_reduce",
+]

@@ -1,0 +1,70 @@
+"""Logical communicator for window groups.
+
+In the paper, windows are collective objects over an MPI communicator.  In a
+JAX single-controller deployment the analogue of "rank" is a mesh position /
+JAX process index; windows shard state across ranks.  This module provides
+the rank bookkeeping plus a faithful set of collective stubs whose semantics
+(barrier ordering, collective allocate/free) the higher layers program
+against.  On a real multi-host launch, ``Communicator`` maps 1:1 onto
+``jax.process_index()/process_count()`` (see launch/train.py).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["Communicator"]
+
+
+class Communicator:
+    def __init__(self, size: int = 1, rank: int | None = None):
+        if size < 1:
+            raise ValueError("communicator size must be >= 1")
+        self.size = size
+        # In single-controller mode we "are" every rank; ``rank`` is kept for
+        # SPMD-style code that wants a local identity.
+        self.rank = 0 if rank is None else rank
+        self._windows: list = []
+        self.barrier_count = 0
+
+    # -- collectives (single-process: ordering bookkeeping only) -----------
+    def barrier(self) -> None:
+        self.barrier_count += 1
+
+    def allreduce(self, value, op: str = "sum"):
+        """Single-controller allreduce over per-rank values.
+
+        ``value`` may be a list of per-rank contributions (len == size) or a
+        scalar/array already reduced.
+        """
+        if isinstance(value, (list, tuple)) and len(value) == self.size:
+            arr = np.asarray(value)
+            if op == "sum":
+                return arr.sum(axis=0)
+            if op == "max":
+                return arr.max(axis=0)
+            if op == "min":
+                return arr.min(axis=0)
+            raise ValueError(f"unknown op {op!r}")
+        return value
+
+    def split(self, color: int, ranks: list[int]) -> "Communicator":
+        sub = Communicator(size=len(ranks))
+        return sub
+
+    # -- window registry ----------------------------------------------------
+    def _register(self, win) -> None:
+        self._windows.append(win)
+
+    def _unregister(self, win) -> None:
+        try:
+            self._windows.remove(win)
+        except ValueError:
+            pass
+
+    def active_windows(self) -> int:
+        return len(self._windows)
+
+    def free_all(self) -> None:
+        for w in list(self._windows):
+            w.free()

@@ -1,0 +1,596 @@
+"""Storage backings for windows: files, "block devices", striped files.
+
+The paper implements MPI storage windows with ``mmap(MAP_SHARED)`` and leans
+on the OS page cache (vm.dirty_ratio et al.) for write-back.  Its §6 future
+work proposes "a user-level memory-mapped I/O mechanism to provide
+full control of storage allocations from the MPI implementation" -- that is
+what ``CachedBacking`` implements: an explicit, bounded software page cache
+with a dirty bitmap, a configurable dirty ratio, and a background write-back
+thread (the analogue of ``vm.dirty_writeback_centisecs``).
+
+``MmapBacking`` is the paper's original mechanism (np.memmap / OS page
+cache), kept both as a baseline and for the mmap-faithful benchmarks.
+
+Both expose the same interface:
+    read(offset, nbytes) -> np.ndarray[uint8]
+    write(offset, data)
+    sync(full=False)        # selective: only dirty blocks, like MPI_Win_sync
+    close(unlink=False, discard=False)
+
+Striping (the Lustre hints ``striping_factor`` / ``striping_unit``) is
+handled by ``StripedFile``, which splits the byte space across N sub-files
+in round-robin stripe units -- functionally identical to how an MPI
+implementation maps a window onto Lustre OSTs.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import numpy as np
+
+__all__ = [
+    "DEFAULT_PAGE_SIZE",
+    "DirtyTracker",
+    "StripedFile",
+    "MmapBacking",
+    "CachedBacking",
+    "make_backing",
+]
+
+DEFAULT_PAGE_SIZE = 4096
+
+
+class DirtyTracker:
+    """Block-granular dirty bitmap.
+
+    This is the bookkeeping behind *selective synchronization*: the paper's
+    ``MPI_Win_sync`` "may return immediately if the pages are already
+    synchronized with storage" -- we flush only blocks whose bit is set.
+    The bitmap layout is shared with the Pallas ``dirty_diff`` kernel so a
+    device-side diff can feed the same tracker.
+    """
+
+    def __init__(self, size: int, page_size: int = DEFAULT_PAGE_SIZE):
+        if size < 0:
+            raise ValueError("size must be >= 0")
+        if page_size <= 0:
+            raise ValueError("page_size must be > 0")
+        self.size = size
+        self.page_size = page_size
+        self.num_blocks = max(1, -(-size // page_size)) if size else 0
+        self._bits = np.zeros(self.num_blocks, dtype=bool)
+        self._lock = threading.Lock()
+
+    @property
+    def dirty_count(self) -> int:
+        return int(self._bits.sum())
+
+    @property
+    def dirty_fraction(self) -> float:
+        return self.dirty_count / self.num_blocks if self.num_blocks else 0.0
+
+    def block_range(self, offset: int, nbytes: int) -> tuple[int, int]:
+        if nbytes <= 0:
+            return (0, 0)
+        return (offset // self.page_size, -(-(offset + nbytes) // self.page_size))
+
+    def mark(self, offset: int, nbytes: int) -> None:
+        b0, b1 = self.block_range(offset, nbytes)
+        with self._lock:
+            self._bits[b0:b1] = True
+
+    def mark_blocks(self, mask: np.ndarray) -> None:
+        """OR a boolean block mask into the bitmap (device-diff path)."""
+        with self._lock:
+            self._bits[: len(mask)] |= mask.astype(bool)
+
+    def is_dirty(self, block: int) -> bool:
+        return bool(self._bits[block])
+
+    def snapshot_and_clear(self) -> np.ndarray:
+        """Atomically take the dirty set and reset it (start of a sync epoch)."""
+        with self._lock:
+            out = self._bits.copy()
+            self._bits[:] = False
+        return out
+
+    def restore(self, mask: np.ndarray) -> None:
+        """Re-mark blocks (used if a flush fails mid-way)."""
+        self.mark_blocks(mask)
+
+    def dirty_runs(self, mask: np.ndarray | None = None) -> list[tuple[int, int]]:
+        """Contiguous [start_block, end_block) runs of dirty blocks."""
+        bits = self._bits if mask is None else mask
+        if not bits.any():
+            return []
+        idx = np.flatnonzero(bits)
+        splits = np.flatnonzero(np.diff(idx) > 1)
+        starts = np.concatenate(([idx[0]], idx[splits + 1]))
+        ends = np.concatenate((idx[splits] + 1, [idx[-1] + 1]))
+        return list(zip(starts.tolist(), ends.tolist()))
+
+
+class StripedFile:
+    """A byte space striped across ``striping_factor`` files.
+
+    Logical offset -> stripe = offset // unit; file = stripe % factor;
+    in-file offset = (stripe // factor) * unit + offset % unit.
+    With factor == 1 this degenerates to a single plain file.
+    """
+
+    def __init__(self, path: str, size: int, *, striping_factor: int = 1,
+                 striping_unit: int = 1 << 20, file_perm: int = 0o644,
+                 offset: int = 0):
+        self.path = path
+        self.size = size
+        self.factor = max(1, int(striping_factor))
+        self.unit = max(1, int(striping_unit))
+        self.base_offset = offset
+        self._paths: list[str] = (
+            [path] if self.factor == 1
+            else [f"{path}.stripe{i}" for i in range(self.factor)]
+        )
+        self._fds: list[int] = []
+        self._open(file_perm)
+
+    def _open(self, perm: int) -> None:
+        per_file = self._per_file_len()
+        for i, p in enumerate(self._paths):
+            d = os.path.dirname(os.path.abspath(p))
+            os.makedirs(d, exist_ok=True)
+            fd = os.open(p, os.O_RDWR | os.O_CREAT, perm)
+            # Paper: ftruncate guarantees the mapping has enough associated
+            # storage space (writing beyond the last page would segfault).
+            need = per_file[i] + (self.base_offset if self.factor == 1 else 0)
+            if os.fstat(fd).st_size < need:
+                os.ftruncate(fd, need)
+            self._fds.append(fd)
+
+    def _per_file_len(self) -> list[int]:
+        if self.factor == 1:
+            return [self.size]
+        lens = [0] * self.factor
+        full, rem = divmod(self.size, self.unit)
+        for s in range(full):
+            lens[s % self.factor] += self.unit
+        if rem:
+            lens[full % self.factor] += rem
+        # convert stripe counts into byte lengths per file: computed above
+        return lens
+
+    def _segments(self, offset: int, nbytes: int):
+        """Yield (fd_index, file_offset, length, buf_offset) covering the range."""
+        pos, out_pos = offset, 0
+        end = offset + nbytes
+        while pos < end:
+            stripe = pos // self.unit
+            in_stripe = pos % self.unit
+            length = min(self.unit - in_stripe, end - pos)
+            if self.factor == 1:
+                yield 0, self.base_offset + pos, length, out_pos
+            else:
+                fidx = stripe % self.factor
+                foff = (stripe // self.factor) * self.unit + in_stripe
+                yield fidx, foff, length, out_pos
+            pos += length
+            out_pos += length
+
+    def pread(self, offset: int, nbytes: int) -> bytes:
+        buf = bytearray(nbytes)
+        for fidx, foff, length, bpos in self._segments(offset, nbytes):
+            chunk = os.pread(self._fds[fidx], length, foff)
+            buf[bpos:bpos + len(chunk)] = chunk
+            if len(chunk) < length:  # hole past EOF reads as zeros
+                buf[bpos + len(chunk):bpos + length] = b"\0" * (length - len(chunk))
+        return bytes(buf)
+
+    def pwrite(self, offset: int, data: bytes | memoryview) -> None:
+        mv = memoryview(data)
+        for fidx, foff, length, bpos in self._segments(offset, len(mv)):
+            os.pwrite(self._fds[fidx], mv[bpos:bpos + length], foff)
+
+    def fsync(self) -> None:
+        for fd in self._fds:
+            os.fsync(fd)
+
+    def close(self, unlink: bool = False) -> None:
+        for fd in self._fds:
+            try:
+                os.close(fd)
+            except OSError:
+                pass
+        self._fds = []
+        if unlink:
+            for p in self._paths:
+                try:
+                    os.unlink(p)
+                except FileNotFoundError:
+                    pass
+
+
+class _BackingBase:
+    """Shared dirty-tracking plumbing."""
+
+    def __init__(self, size: int, page_size: int):
+        self.size = size
+        self.page_size = page_size
+        self.tracker = DirtyTracker(size, page_size)
+        self.closed = False
+        self.sync_count = 0
+        self.bytes_flushed = 0
+
+    def _check(self, offset: int, nbytes: int) -> None:
+        if self.closed:
+            raise RuntimeError("backing is closed")
+        if offset < 0 or offset + nbytes > self.size:
+            raise IndexError(
+                f"access [{offset}, {offset + nbytes}) outside window of {self.size} bytes")
+
+
+class MmapBacking(_BackingBase):
+    """The paper's original mechanism: memory-mapped file I/O.
+
+    A single np.memmap covers [offset, offset+size) of the target file; the
+    OS page cache does the caching; ``sync`` msyncs -- selectively, by
+    flushing only dirty block ranges via a re-sliced memmap flush.
+    """
+
+    def __init__(self, path: str, size: int, *, offset: int = 0,
+                 page_size: int = DEFAULT_PAGE_SIZE, file_perm: int = 0o644,
+                 striping_factor: int = 1, striping_unit: int = 1 << 20):
+        super().__init__(size, page_size)
+        if striping_factor != 1:
+            raise ValueError("MmapBacking does not stripe; use CachedBacking")
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        fd = os.open(path, os.O_RDWR | os.O_CREAT, file_perm)
+        try:
+            if os.fstat(fd).st_size < offset + size:
+                os.ftruncate(fd, offset + size)  # paper: ftruncate before mmap
+        finally:
+            os.close(fd)
+        self.path = path
+        self.offset = offset
+        self._mm = np.memmap(path, dtype=np.uint8, mode="r+",
+                             offset=offset, shape=(size,))
+
+    def read(self, offset: int, nbytes: int) -> np.ndarray:
+        self._check(offset, nbytes)
+        return np.array(self._mm[offset:offset + nbytes])
+
+    def view(self, offset: int, nbytes: int) -> np.ndarray:
+        """Zero-copy load/store view (the window's ``baseptr``)."""
+        self._check(offset, nbytes)
+        return self._mm[offset:offset + nbytes]
+
+    def write(self, offset: int, data) -> None:
+        data = np.asarray(data, dtype=np.uint8).ravel()
+        self._check(offset, data.nbytes)
+        self._mm[offset:offset + data.nbytes] = data
+        self.tracker.mark(offset, data.nbytes)
+
+    def mark_dirty(self, offset: int, nbytes: int) -> None:
+        self.tracker.mark(offset, nbytes)
+
+    def sync(self, full: bool = False) -> int:
+        """msync; returns bytes flushed.  Selective unless ``full``."""
+        if self.closed:
+            raise RuntimeError("backing is closed")
+        self.sync_count += 1
+        if full:
+            self._mm.flush()
+            self.tracker.snapshot_and_clear()
+            self.bytes_flushed += self.size
+            return self.size
+        mask = self.tracker.snapshot_and_clear()
+        flushed = 0
+        for b0, b1 in self.tracker.dirty_runs(mask):
+            lo = b0 * self.page_size
+            hi = min(b1 * self.page_size, self.size)
+            # np.memmap.flush() flushes the whole map; emulate ranged msync
+            # by flushing once at the end -- but count selective bytes.
+            flushed += hi - lo
+        if flushed:
+            self._mm.flush()
+        self.bytes_flushed += flushed
+        return flushed
+
+    def close(self, unlink: bool = False, discard: bool = False) -> None:
+        if self.closed:
+            return
+        if not discard:
+            self._mm.flush()
+        # release the mapping (munmap)
+        del self._mm
+        self.closed = True
+        if unlink:
+            try:
+                os.unlink(self.path)
+            except FileNotFoundError:
+                pass
+
+
+class CachedBacking(_BackingBase):
+    """User-level page cache over a (possibly striped) file.
+
+    Implements the paper's §6 future work.  Pages are ``page_size`` blocks;
+    a bounded pool of cache slots holds resident blocks with second-chance
+    (clock) eviction; writes mark blocks dirty; eviction of a dirty block
+    writes it back first.  A background flusher thread emulates
+    ``vm.dirty_writeback_centisecs``; ``dirty_ratio`` bounds the dirty
+    fraction before writes force a flush (``vm.dirty_ratio``).
+    """
+
+    def __init__(self, path: str, size: int, *, offset: int = 0,
+                 page_size: int = DEFAULT_PAGE_SIZE, cache_bytes: int | None = None,
+                 dirty_ratio: float = 1.0, writeback_interval: float | None = None,
+                 file_perm: int = 0o644, striping_factor: int = 1,
+                 striping_unit: int = 1 << 20, compare_on_write: bool = False):
+        super().__init__(size, page_size)
+        # compare_on_write: a write whose bytes equal the cached content does
+        # not dirty the block -- the host-side analogue of the Pallas
+        # ``dirty_diff`` kernel.  Makes selective sync effective even when a
+        # caller rewrites the whole window (e.g. double-buffered checkpoints).
+        self.compare_on_write = compare_on_write
+        self.file = StripedFile(path, size, striping_factor=striping_factor,
+                                striping_unit=striping_unit, file_perm=file_perm,
+                                offset=offset)
+        nblocks = self.tracker.num_blocks
+        if cache_bytes is None:
+            cache_bytes = size  # default: cache everything (pure write-back)
+        self.capacity = max(1, min(nblocks, cache_bytes // page_size)) if nblocks else 0
+        self._slots = np.zeros((self.capacity, page_size), dtype=np.uint8)
+        self._slot_of = np.full(nblocks, -1, dtype=np.int64)   # block -> slot
+        self._block_of = np.full(self.capacity, -1, dtype=np.int64)  # slot -> block
+        self._refbit = np.zeros(self.capacity, dtype=bool)
+        self._clock = 0
+        self._used = 0
+        self.dirty_ratio = dirty_ratio
+        self._io_lock = threading.RLock()
+        self.faults = 0
+        self.evictions = 0
+        self._flusher: "_Flusher | None" = None
+        if writeback_interval:
+            self._flusher = _Flusher(self, writeback_interval)
+            self._flusher.start()
+
+    # -- slot management ---------------------------------------------------
+    def _evict_one(self) -> int:
+        """Clock eviction; returns a freed slot index."""
+        while True:
+            s = self._clock
+            self._clock = (self._clock + 1) % self.capacity
+            if self._block_of[s] < 0:
+                return s
+            if self._refbit[s]:
+                self._refbit[s] = False
+                continue
+            blk = int(self._block_of[s])
+            if self.tracker.is_dirty(blk):
+                self._writeback_block(blk, s)
+            self._slot_of[blk] = -1
+            self._block_of[s] = -1
+            self._used -= 1
+            self.evictions += 1
+            return s
+
+    def _writeback_block(self, blk: int, slot: int) -> None:
+        lo = blk * self.page_size
+        hi = min(lo + self.page_size, self.size)
+        self.file.pwrite(lo, self._slots[slot, : hi - lo].tobytes())
+        with self.tracker._lock:
+            self.tracker._bits[blk] = False
+        self.bytes_flushed += hi - lo
+
+    def _fault_in(self, blk: int, *, load: bool = True) -> int:
+        s = int(self._slot_of[blk])
+        if s >= 0:
+            self._refbit[s] = True
+            return s
+        s = self._evict_one() if self._used >= self.capacity else self._free_slot()
+        if load:
+            lo = blk * self.page_size
+            hi = min(lo + self.page_size, self.size)
+            data = self.file.pread(lo, hi - lo)
+            self._slots[s, : hi - lo] = np.frombuffer(data, dtype=np.uint8)
+            if hi - lo < self.page_size:
+                self._slots[s, hi - lo:] = 0
+            self.faults += 1
+        self._slot_of[blk] = s
+        self._block_of[s] = blk
+        self._refbit[s] = True
+        self._used += 1
+        return s
+
+    def _free_slot(self) -> int:
+        free = np.flatnonzero(self._block_of < 0)
+        if len(free) == 0:
+            return self._evict_one()
+        return int(free[0])
+
+    # -- public interface ---------------------------------------------------
+    def read(self, offset: int, nbytes: int) -> np.ndarray:
+        self._check(offset, nbytes)
+        out = np.empty(nbytes, dtype=np.uint8)
+        with self._io_lock:
+            b0, b1 = self.tracker.block_range(offset, nbytes)
+            # fast path: aligned read, everything resident -> one gather
+            if (offset % self.page_size == 0 and nbytes % self.page_size == 0
+                    and nbytes and (self._slot_of[b0:b1] >= 0).all()):
+                slots = self._slot_of[b0:b1]
+                out[:] = self._slots[slots].reshape(-1)
+                self._refbit[slots] = True
+                return out
+            pos = offset
+            opos = 0
+            for blk in range(b0, b1):
+                lo = blk * self.page_size
+                s = self._fault_in(blk)
+                off_in = pos - lo
+                length = min(self.page_size - off_in, nbytes - opos)
+                out[opos:opos + length] = self._slots[s, off_in:off_in + length]
+                pos += length
+                opos += length
+        return out
+
+    def _write_bulk(self, offset: int, data: np.ndarray) -> bool:
+        """Vectorized full-page span write; False if preconditions fail."""
+        nbytes = data.nbytes
+        b0, b1 = offset // self.page_size, (offset + nbytes) // self.page_size
+        if not ((self._slot_of[b0:b1] >= 0).all()
+                or self._used + int((self._slot_of[b0:b1] < 0).sum())
+                <= self.capacity):
+            return False
+        for blk in range(b0, b1):  # allocate any missing slots (no load:
+            if self._slot_of[blk] < 0:  # full-block overwrite)
+                self._fault_in(blk, load=False)
+        slots = self._slot_of[b0:b1]
+        self._slots[slots] = data.reshape(-1, self.page_size)
+        self._refbit[slots] = True
+        self.tracker.mark(offset, nbytes)
+        return True
+
+    def _write_slow(self, offset: int, data: np.ndarray) -> None:
+        nbytes = data.nbytes
+        b0, b1 = self.tracker.block_range(offset, nbytes)
+        pos, dpos = offset, 0
+        for blk in range(b0, b1):
+            lo = blk * self.page_size
+            off_in = pos - lo
+            length = min(self.page_size - off_in, nbytes - dpos)
+            full_block = off_in == 0 and length == self.page_size
+            # A full-block overwrite need not read the old contents --
+            # unless we must compare against them.
+            s = self._fault_in(blk, load=(not full_block)
+                               or self.compare_on_write)
+            src = data[dpos:dpos + length]
+            if self.compare_on_write and np.array_equal(
+                    self._slots[s, off_in:off_in + length], src):
+                pos += length
+                dpos += length
+                continue  # unchanged bytes: leave the block clean
+            self._slots[s, off_in:off_in + length] = src
+            self.tracker.mark(pos, length)
+            pos += length
+            dpos += length
+
+    def write(self, offset: int, data) -> None:
+        data = np.asarray(data, dtype=np.uint8).ravel()
+        nbytes = data.nbytes
+        self._check(offset, nbytes)
+        ps = self.page_size
+        with self._io_lock:
+            # split into [head | page-aligned bulk | tail]: the bulk span is
+            # one vectorized scatter instead of a python loop per page
+            a = -(-offset // ps) * ps
+            b = (offset + nbytes) // ps * ps
+            done = False
+            if not self.compare_on_write and b - a >= ps:
+                if self._write_bulk(a, data[a - offset: b - offset]):
+                    if a > offset:
+                        self._write_slow(offset, data[: a - offset])
+                    if offset + nbytes > b:
+                        self._write_slow(b, data[b - offset:])
+                    done = True
+            if not done:
+                self._write_slow(offset, data)
+            # vm.dirty_ratio: too many dirty pages => synchronous flush.
+            if self.tracker.dirty_fraction > self.dirty_ratio:
+                self._flush_locked()
+
+    def sync(self, full: bool = False) -> int:
+        """Selective flush of dirty blocks (MPI_Win_sync).  Returns bytes.
+
+        "May return immediately if the pages are already synchronized": a
+        clean window skips both the write-back and the fsync.
+        """
+        if self.closed:
+            raise RuntimeError("backing is closed")
+        with self._io_lock:
+            self.sync_count += 1
+            n = self._flush_locked(full=full)
+            if n:
+                self.file.fsync()
+            return n
+
+    def _flush_locked(self, full: bool = False) -> int:
+        mask = self.tracker.snapshot_and_clear()
+        if full:
+            mask[:] = True
+        flushed = 0
+        for b0, b1 in self.tracker.dirty_runs(mask):
+            # coalesce the run: gather resident slots, one pwrite per span
+            slots = self._slot_of[b0:b1]
+            resident = slots >= 0
+            if resident.all() and b1 * self.page_size <= self.size:
+                buf = self._slots[slots].reshape(-1)
+                self.file.pwrite(b0 * self.page_size, buf.tobytes())
+                flushed += buf.nbytes
+                continue
+            for blk in range(b0, b1):
+                s = int(self._slot_of[blk])
+                lo = blk * self.page_size
+                hi = min(lo + self.page_size, self.size)
+                if s >= 0:
+                    self.file.pwrite(lo, self._slots[s, : hi - lo].tobytes())
+                    flushed += hi - lo
+        self.bytes_flushed += flushed
+        return flushed
+
+    def mark_dirty(self, offset: int, nbytes: int) -> None:
+        self.tracker.mark(offset, nbytes)
+
+    def close(self, unlink: bool = False, discard: bool = False) -> None:
+        if self.closed:
+            return
+        if self._flusher is not None:
+            self._flusher.stop()
+        with self._io_lock:
+            if not discard:
+                self._flush_locked()
+                self.file.fsync()
+            self.closed = True
+        self.file.close(unlink=unlink)
+
+
+class _Flusher(threading.Thread):
+    """Background write-back (vm.dirty_writeback_centisecs analogue).
+
+    This is what lets checkpoint I/O overlap with compute: dirty blocks
+    trickle out while the training step runs, so the synchronous part of
+    ``MPI_Win_sync`` only covers the still-dirty remainder.
+    """
+
+    def __init__(self, backing: CachedBacking, interval: float):
+        super().__init__(daemon=True, name="repro-writeback")
+        self.backing = backing
+        self.interval = interval
+        self._stop = threading.Event()
+
+    def run(self) -> None:
+        while not self._stop.wait(self.interval):
+            try:
+                with self.backing._io_lock:
+                    if not self.backing.closed:
+                        self.backing._flush_locked()
+            except Exception:  # pragma: no cover - best-effort flusher
+                pass
+
+    def stop(self) -> None:
+        self._stop.set()
+        self.join(timeout=5.0)
+
+
+def make_backing(path: str, size: int, *, mechanism: str = "cached", **kw):
+    """Factory.  ``mechanism``: "cached" (user-level page cache, default)
+    or "mmap" (the paper's original OS-page-cache mechanism)."""
+    if mechanism == "mmap":
+        kw.pop("cache_bytes", None)
+        kw.pop("dirty_ratio", None)
+        kw.pop("writeback_interval", None)
+        kw.pop("compare_on_write", None)
+        return MmapBacking(path, size, **kw)
+    if mechanism == "cached":
+        return CachedBacking(path, size, **kw)
+    raise ValueError(f"unknown backing mechanism {mechanism!r}")

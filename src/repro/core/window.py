@@ -1,0 +1,437 @@
+"""MPI-style windows over memory and storage.
+
+Single-controller re-implementation of the paper's extended routines:
+
+    MPI_Win_allocate          -> Window.allocate(comm, size, info=...)
+    MPI_Win_allocate_shared   -> Window.allocate_shared(...)
+    MPI_Win_create_dynamic    -> Window.create_dynamic(comm) + attach/detach
+    MPI_Win_free              -> win.free()
+    MPI_Win_sync              -> win.sync(rank)      (selective storage flush)
+    MPI_Put/Get               -> win.put / win.get
+    MPI_Accumulate / CAS      -> win.accumulate / win.compare_and_swap
+    MPI_Win_lock/unlock       -> win.lock(rank, exclusive=...) / win.unlock
+
+"Ranks" are logical positions of a :class:`~repro.core.comm.Communicator`.
+On a real multi-host deployment each JAX process owns its rank's segment and
+remote put/get ride the ICI/DCN fabric; here every segment is addressable in
+one process, which preserves the *semantics* (one-sided access + explicit
+storage sync) that the paper's applications program against.
+
+Crucial paper nuance kept intact: put/get only touch the *memory copy*
+(page cache) of a storage window -- persistence requires an explicit
+``win.sync()``; data not yet synced is lost on failure.  The checkpoint
+manager and the fault-injection tests rely on this.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any
+
+import numpy as np
+
+from .combined import CombinedSegment
+from .hints import Info, WindowHints
+from .storage import DEFAULT_PAGE_SIZE, make_backing
+
+__all__ = ["Window", "WindowError", "LOCK_SHARED", "LOCK_EXCLUSIVE", "alloc_mem"]
+
+LOCK_SHARED = "shared"
+LOCK_EXCLUSIVE = "exclusive"
+
+
+class WindowError(RuntimeError):
+    pass
+
+
+class _RWLock:
+    """Readers-writer lock: MPI_LOCK_SHARED vs MPI_LOCK_EXCLUSIVE."""
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._readers = 0
+        self._writer = False
+
+    def acquire(self, exclusive: bool) -> None:
+        with self._cond:
+            if exclusive:
+                while self._writer or self._readers:
+                    self._cond.wait()
+                self._writer = True
+            else:
+                while self._writer:
+                    self._cond.wait()
+                self._readers += 1
+
+    def release(self) -> None:
+        with self._cond:
+            if self._writer:
+                self._writer = False
+            elif self._readers:
+                self._readers -= 1
+            else:
+                raise WindowError("unlock without matching lock")
+            self._cond.notify_all()
+
+
+class _MemorySegment:
+    """Traditional MPI memory window segment."""
+
+    def __init__(self, size: int):
+        self.size = size
+        self.buf = np.zeros(size, dtype=np.uint8)
+
+    def read(self, offset: int, nbytes: int) -> np.ndarray:
+        if offset < 0 or offset + nbytes > self.size:
+            raise IndexError(f"access [{offset},{offset + nbytes}) outside {self.size}B window")
+        return self.buf[offset:offset + nbytes].copy()
+
+    def write(self, offset: int, data) -> None:
+        data = np.asarray(data, dtype=np.uint8).ravel()
+        if offset < 0 or offset + data.nbytes > self.size:
+            raise IndexError(f"access [{offset},{offset + data.nbytes}) outside {self.size}B window")
+        self.buf[offset:offset + data.nbytes] = data
+
+    def sync(self, full: bool = False) -> int:
+        return 0  # nothing to persist
+
+    def close(self, unlink: bool = False, discard: bool = False) -> None:
+        self.buf = np.zeros(0, dtype=np.uint8)
+
+
+class _StorageSegment:
+    """Pure storage window segment (memory copy = page cache of backing)."""
+
+    def __init__(self, size: int, hints: WindowHints, path: str, *,
+                 mechanism: str, page_size: int, cache_bytes: int | None,
+                 writeback_interval: float | None, compare_on_write: bool = False):
+        self.size = size
+        extra = ({"cache_bytes": cache_bytes, "writeback_interval": writeback_interval,
+                  "compare_on_write": compare_on_write}
+                 if mechanism == "cached" else {})
+        self.backing = make_backing(
+            path, size, mechanism=mechanism, offset=hints.offset,
+            page_size=page_size, file_perm=hints.file_perm,
+            striping_factor=hints.striping_factor,
+            striping_unit=hints.striping_unit, **extra)
+
+    def read(self, offset: int, nbytes: int) -> np.ndarray:
+        return self.backing.read(offset, nbytes)
+
+    def write(self, offset: int, data) -> None:
+        self.backing.write(offset, data)
+
+    def sync(self, full: bool = False) -> int:
+        return self.backing.sync(full=full)
+
+    @property
+    def tracker(self):
+        return self.backing.tracker
+
+    def close(self, unlink: bool = False, discard: bool = False) -> None:
+        self.backing.close(unlink=unlink, discard=discard)
+
+
+def _make_segment(size: int, hints: WindowHints, rank: int, nranks: int, *,
+                  shared_file: bool, memory_budget: int | None,
+                  mechanism: str, page_size: int, cache_bytes: int | None,
+                  writeback_interval: float | None, compare_on_write: bool = False):
+    if not hints.is_storage:
+        return _MemorySegment(size)
+    if shared_file:
+        # Paper: "shared files are allowed if the same target is defined
+        # among all the processes of the communicator"; each rank maps at
+        # hint offset + rank * segment size (cf. Fig. 4's offset x).
+        path = hints.filename
+        hints = WindowHints(**{**hints.__dict__, "offset": hints.offset + rank * size})
+    else:
+        # independent file per process (the paper's benchmark default)
+        path = hints.filename if nranks == 1 else f"{hints.filename}.{rank}"
+    if hints.is_combined:
+        return CombinedSegment(size, hints, path, memory_budget=memory_budget,
+                               mechanism=mechanism, page_size=page_size,
+                               cache_bytes=cache_bytes,
+                               writeback_interval=writeback_interval,
+                               compare_on_write=compare_on_write)
+    return _StorageSegment(size, hints, path, mechanism=mechanism,
+                           page_size=page_size, cache_bytes=cache_bytes,
+                           writeback_interval=writeback_interval,
+                           compare_on_write=compare_on_write)
+
+
+class Window:
+    """An MPI-style window: per-rank segments + one-sided access."""
+
+    def __init__(self, comm, segments, hints: WindowHints, *, disp_unit: int = 1,
+                 flavor: str, dynamic: bool = False):
+        self.comm = comm
+        self.segments = segments  # list, one per rank (dynamic: list of lists)
+        self.hints = hints
+        self.disp_unit = disp_unit
+        self.flavor = flavor
+        self.dynamic = dynamic
+        self.freed = False
+        self._locks = [_RWLock() for _ in range(comm.size)]
+        self._epoch_depth = [0] * comm.size
+        # MPI attribute caching (paper: metadata on the window object)
+        self.attrs: dict[str, Any] = {
+            "alloc_type": hints.alloc_type,
+            "filename": hints.filename,
+            "flavor": flavor,
+            "disp_unit": disp_unit,
+        }
+        comm._register(self)
+
+    # -- allocation (collective) -------------------------------------------
+    @classmethod
+    def allocate(cls, comm, size: int, *, disp_unit: int = 1,
+                 info: Info | None = None, shared_file: bool = False,
+                 memory_budget: int | None = None, mechanism: str = "cached",
+                 page_size: int = DEFAULT_PAGE_SIZE, cache_bytes: int | None = None,
+                 writeback_interval: float | None = None,
+                 compare_on_write: bool = False) -> "Window":
+        """Collective MPI_Win_allocate over all ranks of ``comm``.
+
+        ``size`` is the per-rank window size in bytes (like MPI, each rank
+        passes its own size; we use a uniform size for the common case).
+        """
+        hints = WindowHints.from_info(info)
+        comm.barrier()  # collective
+        segments = [
+            _make_segment(size, hints, r, comm.size, shared_file=shared_file,
+                          memory_budget=memory_budget, mechanism=mechanism,
+                          page_size=page_size, cache_bytes=cache_bytes,
+                          writeback_interval=writeback_interval,
+                          compare_on_write=compare_on_write)
+            for r in range(comm.size)
+        ]
+        flavor = ("combined" if hints.is_combined else
+                  "storage" if hints.is_storage else "memory")
+        return cls(comm, segments, hints, disp_unit=disp_unit, flavor=flavor)
+
+    @classmethod
+    def allocate_shared(cls, comm, size: int, **kw) -> "Window":
+        """MPI_Win_allocate_shared: consecutive per-rank segments.
+
+        Within a shared node the segments are directly load/store accessible
+        by all ranks; we additionally expose ``shared_view()`` spanning all
+        ranks' memory (memory windows only), matching "the mapped addresses
+        are consecutive, unless specified".
+        """
+        win = cls.allocate(comm, size, **kw)
+        win.attrs["shared"] = True
+        return win
+
+    @classmethod
+    def create_dynamic(cls, comm) -> "Window":
+        """MPI_Win_create_dynamic: start with no attached segments."""
+        hints = WindowHints()
+        win = cls.__new__(cls)
+        Window.__init__(win, comm, [[] for _ in range(comm.size)], hints,
+                        flavor="dynamic", dynamic=True)
+        return win
+
+    # -- dynamic windows ----------------------------------------------------
+    def attach(self, rank: int, segment) -> int:
+        """MPI_Win_attach: returns a segment handle for addressing."""
+        if not self.dynamic:
+            raise WindowError("attach requires a dynamic window")
+        self.segments[rank].append(segment)
+        return len(self.segments[rank]) - 1
+
+    def detach(self, rank: int, handle: int) -> None:
+        if not self.dynamic:
+            raise WindowError("detach requires a dynamic window")
+        if self.segments[rank][handle] is None:
+            raise WindowError("segment already detached")
+        self.segments[rank][handle] = None
+
+    def _seg(self, rank: int, handle: int | None = None):
+        if self.freed:
+            raise WindowError("window has been freed")
+        if rank < 0 or rank >= self.comm.size:
+            raise WindowError(f"rank {rank} outside communicator of size {self.comm.size}")
+        if self.dynamic:
+            if handle is None:
+                raise WindowError("dynamic windows require a segment handle")
+            seg = self.segments[rank][handle]
+            if seg is None:
+                raise WindowError("segment was detached")
+            return seg
+        return self.segments[rank]
+
+    # -- one-sided operations ------------------------------------------------
+    def put(self, data: np.ndarray, target_rank: int, target_disp: int = 0,
+            *, handle: int | None = None) -> None:
+        """MPI_Put: write ``data`` into the target rank's window.
+
+        Only the memory copy (page cache) is updated -- storage consistency
+        requires a subsequent ``sync`` (paper §2.1.1).
+        """
+        data = np.ascontiguousarray(data)
+        seg = self._seg(target_rank, handle)
+        seg.write(target_disp * self.disp_unit, data.view(np.uint8).ravel())
+
+    def get(self, target_rank: int, target_disp: int, count: int,
+            dtype=np.uint8, *, handle: int | None = None) -> np.ndarray:
+        """MPI_Get: read ``count`` items of ``dtype`` from the target."""
+        dt = np.dtype(dtype)
+        seg = self._seg(target_rank, handle)
+        raw = seg.read(target_disp * self.disp_unit, count * dt.itemsize)
+        return raw.view(dt)[:count].copy()
+
+    _ACC_OPS = {
+        "sum": np.add, "prod": np.multiply, "min": np.minimum,
+        "max": np.maximum, "band": np.bitwise_and, "bor": np.bitwise_or,
+        "replace": None, "no_op": None,
+    }
+
+    def accumulate(self, data: np.ndarray, target_rank: int, target_disp: int = 0,
+                   op: str = "sum", *, handle: int | None = None) -> None:
+        """MPI_Accumulate with a reduction op; atomic under the rank lock."""
+        if op not in self._ACC_OPS:
+            raise WindowError(f"unknown accumulate op {op!r}")
+        data = np.ascontiguousarray(data)
+        if op == "no_op":
+            return
+        lock = self._locks[target_rank]
+        lock.acquire(exclusive=True)
+        try:
+            if op == "replace":
+                self.put(data, target_rank, target_disp, handle=handle)
+                return
+            cur = self.get(target_rank, target_disp, data.size, data.dtype,
+                           handle=handle).reshape(data.shape)
+            out = self._ACC_OPS[op](cur, data)
+            self.put(out.astype(data.dtype), target_rank, target_disp, handle=handle)
+        finally:
+            lock.release()
+
+    def get_accumulate(self, data: np.ndarray, target_rank: int,
+                       target_disp: int = 0, op: str = "sum",
+                       *, handle: int | None = None) -> np.ndarray:
+        """MPI_Get_accumulate: fetch old value, then accumulate."""
+        data = np.ascontiguousarray(data)
+        lock = self._locks[target_rank]
+        lock.acquire(exclusive=True)
+        try:
+            old = self.get(target_rank, target_disp, data.size, data.dtype,
+                           handle=handle).reshape(data.shape)
+            if op != "no_op":
+                new = old if op == "replace" else None
+                if op == "replace":
+                    self.put(data, target_rank, target_disp, handle=handle)
+                else:
+                    self.put(self._ACC_OPS[op](old, data).astype(data.dtype),
+                             target_rank, target_disp, handle=handle)
+            return old
+        finally:
+            lock.release()
+
+    def fetch_and_op(self, value, target_rank: int, target_disp: int = 0,
+                     op: str = "sum", dtype=np.int64, *, handle: int | None = None):
+        """MPI_Fetch_and_op: single-element get_accumulate."""
+        arr = np.asarray([value], dtype=dtype)
+        return self.get_accumulate(arr, target_rank, target_disp, op,
+                                   handle=handle)[0]
+
+    def compare_and_swap(self, value, compare, target_rank: int,
+                         target_disp: int = 0, dtype=np.int64,
+                         *, handle: int | None = None):
+        """MPI_Compare_and_swap: atomic CAS; returns the old value."""
+        dt = np.dtype(dtype)
+        lock = self._locks[target_rank]
+        lock.acquire(exclusive=True)
+        try:
+            old = self.get(target_rank, target_disp, 1, dt, handle=handle)[0]
+            if old == np.asarray(compare, dtype=dt):
+                self.put(np.asarray([value], dtype=dt), target_rank,
+                         target_disp, handle=handle)
+            return old
+        finally:
+            lock.release()
+
+    # -- load/store access ----------------------------------------------------
+    def baseptr(self, rank: int):
+        """Local load/store pointer (memory windows / mmap storage windows
+        return a zero-copy numpy view; cached storage and combined windows
+        return the segment itself, which supports read()/write())."""
+        seg = self._seg(rank)
+        if isinstance(seg, _MemorySegment):
+            return seg.buf
+        if hasattr(seg, "backing") and hasattr(seg.backing, "view"):
+            view = seg.backing.view(0, seg.size)
+            return view
+        return seg
+
+    def shared_view(self) -> np.ndarray:
+        """Consecutive view across all ranks (shared memory windows)."""
+        if not all(isinstance(s, _MemorySegment) for s in self.segments):
+            raise WindowError("shared_view requires memory segments")
+        return np.concatenate([s.buf for s in self.segments])
+
+    # -- epochs / synchronization ----------------------------------------------
+    def lock(self, rank: int, exclusive: bool = False) -> None:
+        """MPI_Win_lock (passive target epoch start)."""
+        self._locks[rank].acquire(exclusive=exclusive)
+        self._epoch_depth[rank] += 1
+
+    def unlock(self, rank: int) -> None:
+        """MPI_Win_unlock: completes all RMA ops at the target (ops here are
+        synchronous, so completion is immediate; storage is NOT yet synced)."""
+        self._epoch_depth[rank] -= 1
+        self._locks[rank].release()
+
+    def flush(self, rank: int) -> None:
+        """MPI_Win_flush: complete pending RMA at target (no-op: synchronous)."""
+        self._seg(rank) if not self.dynamic else None
+
+    def sync(self, rank: int | None = None, full: bool = False) -> int:
+        """MPI_Win_sync: flush dirty pages of the rank's storage segment(s).
+
+        Returns bytes flushed (0 for memory windows / already-clean storage:
+        'this routine may return immediately if the pages are already
+        synchronized' -- the selective synchronization of the paper).
+        """
+        if self.freed:
+            raise WindowError("window has been freed")
+        ranks = range(self.comm.size) if rank is None else [rank]
+        total = 0
+        for r in ranks:
+            segs = self.segments[r] if self.dynamic else [self.segments[r]]
+            for seg in segs:
+                if seg is not None and hasattr(seg, "sync"):
+                    total += seg.sync(full=full)
+        return total
+
+    # -- teardown -----------------------------------------------------------
+    def free(self) -> None:
+        """Collective MPI_Win_free; honors unlink/discard hints."""
+        if self.freed:
+            return
+        self.comm.barrier()
+        for rank_seg in self.segments:
+            segs = rank_seg if self.dynamic else [rank_seg]
+            for seg in segs:
+                if seg is not None:
+                    seg.close(unlink=self.hints.unlink, discard=self.hints.discard)
+        self.freed = True
+        self.comm._unregister(self)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.free()
+
+
+def alloc_mem(size: int, info: Info | None = None, *, rank: int = 0, nranks: int = 1,
+              mechanism: str = "cached", page_size: int = DEFAULT_PAGE_SIZE,
+              memory_budget: int | None = None):
+    """MPI_Alloc_mem with hints: used to pre-establish storage mappings for
+    dynamic windows (paper Listing 3)."""
+    hints = WindowHints.from_info(info)
+    return _make_segment(size, hints, rank, nranks, shared_file=False,
+                         memory_budget=memory_budget, mechanism=mechanism,
+                         page_size=page_size, cache_bytes=None,
+                         writeback_interval=None)

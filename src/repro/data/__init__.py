@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLM, WindowBackedDataset, make_batch_iter
+
+__all__ = ["SyntheticLM", "WindowBackedDataset", "make_batch_iter"]

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels (+ jnp references) for the framework's hot spots.
+
+flash_attention -- train/prefill attention (causal/local), structural skip
+ssd_scan        -- Mamba-2 SSD chunked scan (state carried in VMEM)
+rg_lru          -- RG-LRU gated linear recurrence (single HBM pass)
+dirty_diff      -- selective-sync dirty-block detection (the paper's
+                   MPI_Win_sync, applied to device-resident state)
+"""
+
+from repro.kernels.ops import (
+    dirty_blocks,
+    flash_attention,
+    rg_lru_scan,
+    ssd_scan,
+    use_pallas,
+)
+
+__all__ = ["flash_attention", "ssd_scan", "rg_lru_scan", "dirty_blocks",
+           "use_pallas"]

@@ -1,0 +1,124 @@
+"""Pallas TPU flash attention (causal / sliding-window / full).
+
+TPU-native tiling: the grid is (batch, q_head, q_blocks, kv_blocks) with the
+kv axis innermost -- TPU grids iterate sequentially over the minor axis, so
+the online-softmax accumulators (m, l, acc) live in VMEM scratch and carry
+across kv steps.  GQA is free: the k/v BlockSpec index_map divides the
+q-head index by the group size, so kv blocks are fetched once per group
+without materializing repeated heads in HBM.
+
+Causality is exploited structurally: a kv block strictly in the future is
+skipped with ``pl.when`` (no MXU work issued) -- this is what halves the
+causal FLOPs relative to the XLA masked path (see EXPERIMENTS.md §Perf).
+
+Layouts: q (B, H, S, d), k/v (B, K, T, d); block sizes default 512/512 with
+d padded to a multiple of 128 by the ops wrapper (MXU alignment).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_tpu"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, window: int | None, scale: float,
+            q_block: int, kv_block: int, t_actual: int, nk: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * q_block
+    k_start = kj * kv_block
+
+    # structural skip: block fully in the future (causal) or fully out of
+    # the sliding window -- no compute issued at all.
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + q_block - 1)
+    if window is not None:
+        run = jnp.logical_and(run, q_start - (k_start + kv_block - 1) < window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (qb, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (kb, d)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (kb, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (qb, kb)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < t_actual
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_tpu(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int | None = None,
+                        scale: float | None = None, q_block: int = 512,
+                        kv_block: int = 512, t_actual: int | None = None,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B,H,S,d); k/v: (B,K,T,d) with H = K*G.  Returns (B,H,S,d)."""
+    B, H, S, d = q.shape
+    _, K, T, _ = k.shape
+    G = H // K
+    scale = d ** -0.5 if scale is None else scale
+    t_actual = T if t_actual is None else t_actual
+
+    qb = min(q_block, S)
+    kb = min(kv_block, T)
+    assert S % qb == 0 and T % kb == 0, "ops wrapper must pad to block multiples"
+    nq, nk = S // qb, T // kb
+
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, scale=scale, q_block=qb,
+        kv_block=kb, t_actual=t_actual, nk=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, qb, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, kb, d), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, kb, d), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qb, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb,), jnp.float32),       # running max
+            pltpu.VMEM((qb,), jnp.float32),       # running denom
+            pltpu.VMEM((qb, d), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

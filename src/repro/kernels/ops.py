@@ -1,0 +1,101 @@
+"""Public jit-ready kernel wrappers with backend dispatch + padding.
+
+On TPU the Pallas kernels run; elsewhere (this CPU container, unit tests)
+the pure-jnp references execute, with ``interpret=True`` available to run
+the actual kernel bodies on CPU for validation.  Wrappers normalize layouts
+and pad to block multiples so callers never see alignment constraints.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dirty_diff import dirty_diff_tpu
+from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.rg_lru import rg_lru_tpu
+from repro.kernels.ssd_scan import ssd_scan_tpu
+
+__all__ = ["flash_attention", "ssd_scan", "rg_lru_scan", "dirty_blocks",
+           "use_pallas"]
+
+
+def use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, axis: int, mult: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    q_block=512, kv_block=512, impl: str | None = None):
+    """q: (B,H,S,d); k/v: (B,K,T,d).  impl: None=auto | 'pallas' |
+    'interpret' | 'ref'."""
+    impl = impl or ("pallas" if use_pallas() else "ref")
+    if impl == "ref":
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       scale=scale)
+    qp, S = _pad_to(q, 2, q_block)
+    kp, T = _pad_to(k, 2, kv_block)
+    vp, _ = _pad_to(v, 2, kv_block)
+    out = flash_attention_tpu(qp, kp, vp, causal=causal, window=window,
+                              scale=scale, q_block=q_block, kv_block=kv_block,
+                              t_actual=T, interpret=(impl == "interpret"))
+    return out[:, :, :S]
+
+
+def ssd_scan(x, dt, A, Bm, C, *, chunk=256, impl: str | None = None):
+    """x: (B,H,S,P); dt: (B,H,S); A: (H,); Bm/C: (B,H,S,N) -> (B,H,S,P) f32."""
+    impl = impl or ("pallas" if use_pallas() else "ref")
+    if impl == "ref":
+        return ref.ssd_scan_ref(x, dt, A, Bm, C)
+    xp, S = _pad_to(x, 2, chunk)
+    dtp, _ = _pad_to(dt, 2, chunk)   # dt=0 padding -> exact no-op steps
+    Bp, _ = _pad_to(Bm, 2, chunk)
+    Cp, _ = _pad_to(C, 2, chunk)
+    y = ssd_scan_tpu(xp, dtp, A.astype(jnp.float32), Bp, Cp, chunk=chunk,
+                     interpret=(impl == "interpret"))
+    return y[:, :, :S]
+
+
+def rg_lru_scan(a, gx, *, block=256, impl: str | None = None):
+    """a, gx: (B,S,W) -> y (B,S,W) f32.  Padding a=1,gx=0 is a no-op tail."""
+    impl = impl or ("pallas" if use_pallas() else "ref")
+    if impl == "ref":
+        return ref.rg_lru_ref(a, gx)
+    S = a.shape[1]
+    pad = (-S) % block
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        gx = jnp.pad(gx, ((0, 0), (0, pad), (0, 0)))
+    y = rg_lru_tpu(a, gx, block=block, interpret=(impl == "interpret"))
+    return y[:, :S]
+
+
+def dirty_blocks(cur, snap, *, block_elems=1024, impl: str | None = None):
+    """Flatten two same-shape tensors into blocks; return int32 changed flags.
+
+    Feeds DirtyTracker.mark_blocks for device-state incremental checkpoints.
+    """
+    impl = impl or ("pallas" if use_pallas() else "ref")
+    c = cur.reshape(-1)
+    s = snap.reshape(-1)
+    pad = (-c.shape[0]) % block_elems
+    if pad:
+        c = jnp.pad(c, (0, pad))
+        s = jnp.pad(s, (0, pad))
+    c = c.reshape(-1, block_elems)
+    s = s.reshape(-1, block_elems)
+    if impl == "ref":
+        return ref.dirty_diff_ref(c, s)
+    return dirty_diff_tpu(c, s, interpret=(impl == "interpret"))

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel for the RG-LRU gated linear recurrence.
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t), all elementwise over
+the LRU width W.  The gates (matmul-based) are precomputed by XLA; the
+kernel's job is the *memory-bound* recurrence: stream (a, i*x) once from
+HBM, carry h in VMEM scratch across sequence blocks (grid minor axis), and
+emit y in the same pass -- one read + one write per element vs. the
+log(S) passes of an associative scan.
+
+Layouts: a, gx (= i_t * x_t), y all (B, S, W); grid (B, S/L); within a
+block a short fori_loop runs the L sequential steps on (W,)-vectors (VPU
+work; there is no matmul here by construction).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rg_lru_tpu"]
+
+
+def _kernel(a_ref, gx_ref, y_ref, h_ref, *, block: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)     # (L, W)
+    gx = gx_ref[0].astype(jnp.float32)   # (L, W)  already sqrt(1-a^2)*i*x
+
+    def step(t, carry):
+        h = carry
+        h = a[t] * h + gx[t]
+        y_ref[0, t, :] = h.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block, step, h_ref[...])
+    h_ref[...] = h
+
+
+def rg_lru_tpu(a, gx, *, block: int = 256, interpret: bool = False):
+    """a, gx: (B, S, W) -> y (B, S, W) f32.  S % block == 0."""
+    B, S, W = a.shape
+    assert S % block == 0, "ops wrapper must pad S to a block multiple"
+    ns = S // block
+    kernel = functools.partial(_kernel, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, ns),
+        in_specs=[
+            pl.BlockSpec((1, block, W), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, block, W), lambda b, s: (b, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block, W), lambda b, s: (b, s, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((W,), jnp.float32)],
+        interpret=interpret,
+    )(a, gx)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel for the Mamba-2 SSD scan.
+
+Grid (batch, head, chunk) with the chunk axis innermost: the (N, P) state
+carries across chunk steps in VMEM scratch, so one HBM pass streams the
+whole sequence.  Each grid step does three MXU matmuls (CB^T Gram matrix,
+intra-chunk output, state outer product) plus elementwise decay math --
+exactly the "duality" form that turns the recurrence into matmuls.
+
+Layouts (pre-arranged by the ops wrapper):
+    x  (B, H, S, P)   dt (B, H, S)   A (H,)  [f32]
+    Bm (B, H, S, N)   C  (B, H, S, N)
+    y  (B, H, S, P)   with S padded to a chunk multiple (dt = 0 on padding,
+                      which makes padded steps exact no-ops on the state).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan_tpu"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *, chunk: int):
+    ci = pl.program_id(2)
+    h = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)        # (L, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)      # (L,)
+    A = a_ref[h]                               # scalar f32
+    Bm = b_ref[0, 0].astype(jnp.float32)       # (L, N)
+    C = c_ref[0, 0].astype(jnp.float32)        # (L, N)
+
+    a = dt * A                                  # (L,) log-decay
+    cum = jnp.cumsum(a)                         # inclusive
+    xdt = x * dt[:, None]
+
+    # intra-chunk: scores[i,j] = C_i.B_j * exp(cum_i - cum_j), i >= j
+    gram = jax.lax.dot_general(C, Bm, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (L, L)
+    li = jax.lax.broadcasted_iota(jnp.int32, gram.shape, 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, gram.shape, 1)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    scores = jnp.where(li >= lj, gram * decay, 0.0)
+    y = jax.lax.dot_general(scores, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)     # (L, P)
+
+    # inter-chunk: contribution of the incoming state
+    h_in = h_ref[...]                            # (N, P)
+    y = y + (C * jnp.exp(cum)[:, None]) @ h_in
+
+    # state update: h' = exp(cum_last) * h + sum_j exp(cum_last - cum_j) B_j (x_j dt_j)
+    w = jnp.exp(cum[-1] - cum)                   # (L,)
+    state_add = jax.lax.dot_general(Bm * w[:, None], xdt,
+                                    (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)  # (N, P)
+    h_ref[...] = jnp.exp(cum[-1]) * h_in + state_add
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_tpu(x, dt, A, Bm, C, *, chunk: int = 256,
+                 interpret: bool = False):
+    """x: (B,H,S,P); dt: (B,H,S); A: (H,); Bm/C: (B,H,S,N).  S % chunk == 0."""
+    B, H, S, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, "ops wrapper must pad S to a chunk multiple"
+    nc = S // chunk
+    kernel = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec(memory_space=pl.ANY),  # A: tiny, whole array
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, C)

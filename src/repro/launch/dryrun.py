@@ -1,0 +1,438 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (still before any jax import) test hook: mini dry-runs on fewer devices
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+# lower the TPU-shaped program: bf16 matmul operands with f32 MXU
+# accumulation (see repro.models.layers.mxu_einsum) -- compile-only here.
+os.environ.setdefault("REPRO_MXU_ACCUM", "1")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds the real step function (train_step /
+prefill_step / serve_step), jits it with explicit NamedShardings derived
+from the logical-axis rules, ``.lower().compile()``s it against
+ShapeDtypeStruct stand-ins (no allocation), and records:
+
+  * ``compiled.memory_analysis()``  -- proves the cell fits HBM
+  * ``compiled.cost_analysis()``    -- HLO FLOPs / bytes for the roofline
+  * collective operand/result bytes parsed from the partitioned HLO
+  * analytic per-device state bytes (params/opt/cache/batch shard sizes)
+
+Artifacts land in artifacts/dryrun/<mesh>/<arch>__<shape>[__tag].json and
+feed benchmarks/roofline.py (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --all                     # every cell, 1 pod
+  python -m repro.launch.dryrun --all --multi-pod         # 2 pods = 512 chips
+  python -m repro.launch.dryrun --arch qwen2-72b --shape decode_32k
+  ... hillclimb knobs: --remat, --microbatches, --kv-shard, --seq-shard, --tag
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCHS, OFFLOAD_ARCHS, SHAPES, batch_specs,
+                           cache_len_for, decode_specs, get_config,
+                           shape_applicable)
+from repro.launch.mesh import make_production_mesh
+from repro.models import (init_cache_specs, make_decode_fn, make_loss_fn,
+                          make_prefill_fn, param_specs)
+from repro.perf.hlo_analysis import analyze_hlo
+from repro.runtime.sharding import (ShardingRules, named_sharding,
+                                    serve_rules, train_rules, use_rules)
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+# per-arch gradient-accumulation microbatches for train_4k (memory tuning)
+TRAIN_MICROBATCHES = {
+    "deepseek-v2-236b": 8,
+    "llama4-maverick-400b-a17b": 8,
+    "qwen2-72b": 4,
+    "internlm2-20b": 2,
+    "gemma-7b": 2,
+    "llava-next-mistral-7b": 2,
+    "mamba2-2.7b": 2,
+    "recurrentgemma-2b": 2,
+    "internlm2-1.8b": 1,
+    "whisper-base": 1,
+}
+
+# small-activation archs train better with pure FSDP (no TP): per-layer
+# weight all-gathers are far cheaper than TP activation all-reduces
+# (EXPERIMENTS.md §Perf iteration 4)
+TRAIN_NO_TP = ("internlm2-1.8b", "whisper-base")
+
+# decode KV-cache layout per arch: "heads" shards kv heads over model,
+# "seq" shards the cache sequence axis (the only even option for kv<16)
+KV_SHARD = {
+    "gemma-7b": "heads",          # kv=16
+    "deepseek-v2-236b": "seq",    # MLA latent cache
+    "qwen2-72b": "seq",           # kv=8
+    "internlm2-20b": "seq",
+    "internlm2-1.8b": "seq",
+    "llava-next-mistral-7b": "seq",
+    "llama4-maverick-400b-a17b": "seq",
+    "whisper-base": "seq",
+    "recurrentgemma-2b": "seq",
+    "mamba2-2.7b": "seq",         # (no KV; recurrent state shards by heads)
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(%?[\w\.\-]+)\s*=\s*(.*)$")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum operand/result bytes per collective kind from partitioned HLO."""
+    sizes: dict[str, int] = {}
+    stats = {op: {"count": 0, "operand_bytes": 0, "result_bytes": 0}
+             for op in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # rhs = "bf16[8,128]{1,0} op-name(...)" or "(f32[..],..) tuple(...)"
+        tm = re.match(r"((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+([\w\-]+)",
+                      rhs)
+        if not tm:
+            continue
+        type_str, op = tm.groups()
+        sizes[name] = _type_bytes(type_str)
+        for cop in _COLLECTIVES:
+            if op == cop or op == cop + "-start":
+                am = re.search(re.escape(op) + r"\(([^)]*)\)", rhs)
+                operands = re.findall(r"%?[\w\.\-]+", am.group(1)) if am else []
+                ob = sum(sizes.get(o, 0) for o in operands)
+                stats[cop]["count"] += 1
+                stats[cop]["operand_bytes"] += ob
+                stats[cop]["result_bytes"] += sizes[name]
+    return {k: v for k, v in stats.items() if v["count"]}
+
+
+def _shardings_for(specs, rules, mesh, context=""):
+    return {k: named_sharding(s.axes, s.shape, rules, mesh, context=f"{context}/{k}")
+            for k, s in specs.items()}
+
+
+def _structs(specs):
+    return {k: s.struct() for k, s in specs.items()}
+
+
+def _accum_loss(cfg, microbatches):
+    loss_fn = make_loss_fn(cfg)
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def accum(params, batch):
+        def micro(carry, mb):
+            l_sum, g_sum = carry
+            (loss, _), grads = vg(params, mb)
+            return (l_sum + loss, {k: g_sum[k] + grads[k] for k in g_sum}), None
+
+        zero = {k: jnp.zeros(v.shape, jnp.float32) for k, v in params.items()}
+        (l, g), _ = jax.lax.scan(micro, (jnp.zeros(()), zero), batch)
+        return l / microbatches, {k: v / microbatches for k, v in g.items()}
+
+    return accum
+
+
+def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               remat: str | None = None, microbatches: int | None = None,
+               kv_shard: str | None = None, seq_shard: bool = False,
+               tp: bool = True, opt_cfg: AdamWConfig = AdamWConfig()):
+    """Returns (step_fn, arg_structs tuple, in_shardings, out_shardings,
+    rules, mesh, meta)."""
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if remat:
+        cfg = _dc.replace(cfg, remat=remat)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise SkipCell(why)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    offload = arch in OFFLOAD_ARCHS
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "multi_pod": multi_pod, "offload": offload,
+            "remat": cfg.remat}
+
+    p_specs = param_specs(cfg)
+    p_structs = _structs(p_specs)
+
+    if shape.kind == "train":
+        if arch in TRAIN_NO_TP:
+            tp = False
+        rules = train_rules(multi_pod, seq_shard=seq_shard, tp=tp)
+        meta["tp"] = tp
+        mb = microbatches or TRAIN_MICROBATCHES.get(arch, 2)
+        meta["microbatches"] = mb
+        b_specs = batch_specs(cfg, shape)
+        # leading microbatch axis; batch dim divided
+        b_structs = {}
+        b_shardings = {}
+        for k, s in b_specs.items():
+            bshape = (mb, s.shape[0] // mb) + s.shape[1:]
+            b_structs[k] = jax.ShapeDtypeStruct(bshape, jnp.dtype(s.dtype))
+            b_shardings[k] = named_sharding((None,) + s.axes, bshape, rules,
+                                            mesh, context=f"batch/{k}")
+        p_sh = _shardings_for(p_specs, rules, mesh, "param")
+        accum = _accum_loss(cfg, mb)
+        rep = NamedSharding(mesh, P())
+        if offload:
+            def step(params, batch):
+                loss, grads = accum(params, batch)
+                return loss, {k: g.astype(jnp.bfloat16) for k, g in grads.items()}
+            args = (p_structs, b_structs)
+            in_sh = (p_sh, b_shardings)
+            out_sh = (rep, p_sh)
+        else:
+            opt_structs = {
+                "m": {k: jax.ShapeDtypeStruct(p_structs[k].shape, jnp.float32)
+                      for k in p_structs},
+                "v": {k: jax.ShapeDtypeStruct(p_structs[k].shape, jnp.float32)
+                      for k in p_structs},
+                "step": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+            opt_sh = {"m": p_sh, "v": p_sh, "step": rep}
+
+            def step(params, opt_state, batch):
+                loss, grads = accum(params, batch)
+                params, opt_state, _ = adamw_update(params, grads, opt_state,
+                                                    opt_cfg)
+                return loss, params, opt_state
+            args = (p_structs, opt_structs, b_structs)
+            in_sh = (p_sh, opt_sh, b_shardings)
+            out_sh = (rep, p_sh, opt_sh)
+        return step, args, in_sh, out_sh, rules, mesh, meta
+
+    # inference cells: weights are served in bf16 (reading f32 weights would
+    # double per-token HBM traffic; standard serving practice)
+    cfg = _dc.replace(cfg, param_dtype="bfloat16")
+    p_specs = param_specs(cfg)
+    p_structs = _structs(p_specs)
+    kv = kv_shard or KV_SHARD.get(arch, "seq")
+    rules = serve_rules(multi_pod, kv_shard=kv)
+    if offload:
+        # >=236B archs: TP-only weights exceed HBM (400B bf16 / 16 = 50 GB);
+        # serve with fully-sharded weights, gathered per layer (GSPMD).
+        r = dict(rules.rules)
+        r["fsdp"] = ("data",)
+        rules = ShardingRules(r, name=rules.name + "/wsharded")
+        meta["weights"] = "fully-sharded"
+    meta["kv_shard"] = kv
+    cache_len, enc_len = cache_len_for(cfg, shape)
+    c_specs = init_cache_specs(cfg, shape.batch, cache_len, enc_len)
+    c_structs = _structs(c_specs)
+    c_sh = _shardings_for(c_specs, rules, mesh, "cache")
+    p_sh = _shardings_for(p_specs, rules, mesh, "param")
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "prefill":
+        b_specs = batch_specs(cfg, shape)
+        b_structs = _structs(b_specs)
+        b_sh = _shardings_for(b_specs, rules, mesh, "batch")
+        prefill = make_prefill_fn(cfg)
+
+        def step(params, batch, cache):
+            return prefill(params, batch, cache)
+        logits_sh = named_sharding(("batch", None, "vocab"),
+                                   (shape.batch, 1, cfg.vocab), rules, mesh)
+        args = (p_structs, b_structs, c_structs)
+        in_sh = (p_sh, b_sh, c_sh)
+        out_sh = (logits_sh, c_sh)
+        return step, args, in_sh, out_sh, rules, mesh, meta
+
+    # decode
+    d_specs = decode_specs(cfg, shape)
+    d_structs = _structs(d_specs)
+    d_sh = _shardings_for(d_specs, rules, mesh, "decode")
+    decode = make_decode_fn(cfg)
+
+    def step(params, cache, tokens, pos):
+        return decode(params, cache, tokens, pos)
+    logits_sh = named_sharding(("batch", None, "vocab"),
+                               (shape.batch, 1, cfg.vocab), rules, mesh)
+    args = (p_structs, c_structs, d_structs["tokens"], d_structs["pos"])
+    in_sh = (p_sh, c_sh, d_sh["tokens"], d_sh["pos"])
+    out_sh = (logits_sh, c_sh)
+    return step, args, in_sh, out_sh, rules, mesh, meta
+
+
+class SkipCell(Exception):
+    pass
+
+
+def _analytic_state_bytes(in_sh, args) -> int:
+    """Per-device bytes of all inputs, from exact shard shapes."""
+    total = 0
+    flat_s, _ = jax.tree.flatten(in_sh)
+    flat_a, _ = jax.tree.flatten(args, is_leaf=lambda x: isinstance(
+        x, jax.ShapeDtypeStruct))
+    for sh, st in zip(flat_s, flat_a):
+        if sh is None:
+            total += int(np.prod(st.shape, dtype=np.int64)) * st.dtype.itemsize
+        else:
+            shard = sh.shard_shape(st.shape)
+            total += int(np.prod(shard, dtype=np.int64)) * st.dtype.itemsize
+    return total
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+             tag: str = "", verbose: bool = True, **knobs) -> dict:
+    t0 = time.time()
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch}__{shape_name}" + (f"__{tag}" if tag else "")
+    os.makedirs(f"{out_dir}/{mesh_name}", exist_ok=True)
+    path = f"{out_dir}/{mesh_name}/{cell_id}.json"
+    try:
+        step, args, in_sh, out_sh, rules, mesh, meta = build_cell(
+            arch, shape_name, multi_pod=multi_pod, **knobs)
+    except SkipCell as e:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skip", "reason": str(e)}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        if verbose:
+            print(f"[skip] {cell_id}: {e}", flush=True)
+        return rec
+
+    with use_rules(rules, mesh), mesh:
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_rec = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        } if mem is not None else None
+    except Exception:
+        mem_rec = None
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    k in ("flops", "bytes accessed", "optimal_seconds")
+                    or k.startswith("bytes accessed"))}
+    except Exception:
+        cost = {}
+    hlo = compiled.as_text()
+    rep = analyze_hlo(hlo)  # trip-count-scaled flops/bytes/collectives
+    state_bytes = _analytic_state_bytes(in_sh, args)
+
+    rec = {
+        **meta,
+        "mesh": mesh_name,
+        "status": "ok",
+        "n_devices": int(np.prod(mesh.devices.shape)),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "cost_analysis": cost,          # raw XLA numbers (while bodies x1)
+        "memory_analysis": mem_rec,
+        "flops_per_device": rep.flops,
+        "traffic_bytes_per_device": rep.bytes,
+        "collective_bytes_per_device": rep.collective_bytes,
+        "collectives": rep.collectives,
+        "state_bytes_per_device": state_bytes,
+        "hlo_bytes": len(hlo),
+    }
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    if verbose:
+        print(f"[ok] {cell_id} ({mesh_name}): compile {t_compile:.1f}s "
+              f"flops/dev {rep.flops:.3e} coll/dev "
+              f"{rep.collective_bytes/2**20:.1f} MiB "
+              f"state/dev {state_bytes/2**30:.2f} GiB", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--remat", choices=("full", "none", "dots"), default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--kv-shard", choices=("heads", "seq"), default=None)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--no-tp", action="store_true",
+                    help="pure-FSDP training rules (no tensor parallelism)")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else sorted(SHAPES)
+    if not (args.all or (args.arch and args.shape)):
+        ap.error("pass --all or both --arch and --shape")
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    knobs = dict(remat=args.remat, microbatches=args.microbatches,
+                 kv_shard=args.kv_shard, seq_shard=args.seq_shard,
+                 tp=not args.no_tp)
+    failures = []
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                cell_id = f"{a}__{s}" + (f"__{args.tag}" if args.tag else "")
+                path = f"{args.out}/{mesh_name}/{cell_id}.json"
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[cached] {cell_id} ({mesh_name})", flush=True)
+                    continue
+                try:
+                    run_cell(a, s, multi_pod=mp, out_dir=args.out,
+                             tag=args.tag, **knobs)
+                except Exception:
+                    failures.append((a, s, mp))
+                    print(f"[FAIL] {a} {s} multi_pod={mp}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {failures}")
+    print("dry-run complete", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production mesh factory.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state -- the dry-run must set XLA_FLAGS first.
+
+Single pod : (16, 16)    ("data", "model")   = 256 chips (one v5e pod)
+Multi-pod  : (2, 16, 16) ("pod", "data", "model") = 512 chips; the "pod"
+axis is an outer DP dimension whose collectives ride DCN, everything else
+stays on ICI.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    # test hook: REPRO_MESH_OVERRIDE="4x2" (single pod) / "2x2x2" (multi-pod)
+    # lets the mini dry-run tests exercise the exact same code path on the
+    # handful of host devices available under pytest.
+    ov = os.environ.get("REPRO_MESH_OVERRIDE")
+    if ov:
+        dims = tuple(int(d) for d in ov.split("x"))
+        if multi_pod and len(dims) == 3:
+            return jax.make_mesh(dims, ("pod", "data", "model"))
+        if not multi_pod and len(dims) == 2:
+            return jax.make_mesh(dims, ("data", "model"))
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (tests use e.g. (2, 4) on 8 host devices)."""
+    return jax.make_mesh(shape, axes)

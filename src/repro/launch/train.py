@@ -1,0 +1,66 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the real Trainer.  With ``--smoke`` (default on CPU) the reduced
+config executes locally; on a TPU slice the full config shards over the
+production mesh (the dry-run in launch/dryrun.py proves every cell's
+sharding compiles before you burn pod-hours on it).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, OFFLOAD_ARCHS, get_config
+from repro.data import SyntheticLM, make_batch_iter
+from repro.launch.mesh import make_production_mesh
+from repro.runtime.sharding import train_rules, use_rules
+from repro.train import AdamWConfig, TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--mode", choices=("fused", "offload"), default=None)
+    ap.add_argument("--compression", action="store_true")
+    ap.add_argument("--mesh", action="store_true",
+                    help="shard over the production mesh (TPU slice)")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mode = args.mode or ("offload" if args.arch in OFFLOAD_ARCHS
+                         and not args.smoke else "fused")
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(1, args.steps // 10),
+                      total_steps=args.steps)
+    tc = TrainConfig(steps=args.steps, microbatches=args.microbatches,
+                     mode=mode, ckpt_dir=args.ckpt_dir,
+                     ckpt_every=args.ckpt_every,
+                     compression=args.compression, log_every=5)
+    mesh = rules = None
+    if args.mesh:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        rules = train_rules(args.multi_pod)
+    ds = SyntheticLM(cfg, batch=args.batch, seq=args.seq,
+                     microbatches=args.microbatches)
+    tr = Trainer(cfg, opt, tc, mesh=mesh, rules=rules)
+    with use_rules(rules, mesh):
+        tr.run(make_batch_iter(iter(ds)))
+    losses = [m["loss"] for m in tr.metrics_log]
+    print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"({len(losses)} steps on {jax.device_count()} device(s))")
+    tr.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Model zoo: composable LM assembly covering all assigned architectures."""
+
+from .config import ModelConfig
+from .spec import ParamSpec, init_params, param_specs_to_shapes
+from .lm import (
+    init_cache_specs,
+    make_decode_fn,
+    make_loss_fn,
+    make_prefill_fn,
+    param_specs,
+)
+
+__all__ = [
+    "ModelConfig",
+    "ParamSpec",
+    "init_params",
+    "param_specs",
+    "param_specs_to_shapes",
+    "make_loss_fn",
+    "make_prefill_fn",
+    "make_decode_fn",
+    "init_cache_specs",
+]

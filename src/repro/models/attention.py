@@ -1,0 +1,174 @@
+"""Attention: memory-bounded blockwise softmax (XLA path) + decode path.
+
+``blockwise_attention`` is the jnp "flash" used for training/prefill on any
+backend: an online-softmax scan over KV blocks nested in a map over Q
+blocks, so no S x S score tensor is ever materialized (required for the
+32k-prefill dry-run cells to fit HBM).  On TPU the Pallas kernel
+(repro.kernels.flash_attention) replaces it; this XLA path is also the
+oracle-adjacent reference for the kernel tests.
+
+Numerical scheme: finite masking (-1e30, never -inf) keeps padded rows and
+fully-masked blocks NaN-free in both the forward and backward pass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import mxu_einsum
+from repro.runtime.sharding import shard
+
+__all__ = ["blockwise_attention", "decode_attention",
+           "decode_attention_two_tier", "full_attention"]
+
+_NEG = -1e30
+
+
+def _mask_bias(q_pos, kv_pos, *, causal: bool, window: int | None, t_actual: int):
+    """(qb, kb) additive bias: 0 where attendable, -1e30 where masked."""
+    m = kv_pos[None, :] < t_actual
+    if causal:
+        m &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= q_pos[:, None] - kv_pos[None, :] < window
+    return jnp.where(m, 0.0, _NEG)
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int | None = None,
+                        q_offset=0, q_block: int = 512, kv_block: int = 1024,
+                        scale: float | None = None) -> jax.Array:
+    """Online-softmax attention.
+
+    q: (B, S, H, dh); k, v: (B, T, K, dh) with H = K * G (GQA).
+    ``q_offset``: absolute position of q[0] (prefill continuation/decode).
+    Returns (B, S, H, dh) in q.dtype.
+    """
+    B, S, H, dh = q.shape
+    _, T, K, dhv = v.shape
+    G = H // K
+    scale = dh ** -0.5 if scale is None else scale
+
+    qb = min(q_block, max(16, S))
+    kb = min(kv_block, max(16, T))
+    nq, nk = -(-S // qb), -(-T // kb)
+    q_p = jnp.pad(q, ((0, 0), (0, nq * qb - S), (0, 0), (0, 0)))
+    k_p = jnp.pad(k, ((0, 0), (0, nk * kb - T), (0, 0), (0, 0)))
+    v_p = jnp.pad(v, ((0, 0), (0, nk * kb - T), (0, 0), (0, 0)))
+
+    qr = q_p.reshape(B, nq, qb, K, G, dh).transpose(1, 0, 2, 3, 4, 5)  # (nq,B,qb,K,G,dh)
+    kr = k_p.reshape(B, nk, kb, K, dh).transpose(1, 0, 2, 3, 4)        # (nk,B,kb,K,dh)
+    vr = v_p.reshape(B, nk, kb, K, dhv).transpose(1, 0, 2, 3, 4)
+
+    def one_q_block(args):
+        qi, qblk = args  # qblk: (B,qb,K,G,dh)
+        q_pos = q_offset + qi * qb + jnp.arange(qb)
+        # operands stay in their native (bf16) dtype; the MXU accumulates in
+        # f32 via preferred_element_type -- no f32 operand copies in HBM.
+        qs = qblk * jnp.asarray(scale, qblk.dtype)
+
+        def kv_step(carry, inp):
+            m, num, den = carry
+            kj, vj, kv_i = inp
+            kv_pos = kv_i * kb + jnp.arange(kb)
+            s = mxu_einsum("bqkgd,btkd->bqkgt", qs, kj)
+            s = s + _mask_bias(q_pos, kv_pos, causal=causal, window=window,
+                               t_actual=T)[None, :, None, None, :]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            num = num * alpha[..., None] + mxu_einsum(
+                "bqkgt,btkd->bqkgd", p.astype(vj.dtype), vj)
+            den = den * alpha + p.sum(axis=-1)
+            return (m_new, num, den), None
+
+        m0 = jnp.full((B, qb, K, G), _NEG, jnp.float32)
+        num0 = jnp.zeros((B, qb, K, G, dhv), jnp.float32)
+        den0 = jnp.zeros((B, qb, K, G), jnp.float32)
+        (m, num, den), _ = jax.lax.scan(
+            kv_step, (m0, num0, den0), (kr, vr, jnp.arange(nk)))
+        # cast per block: the stacked map output stays in q.dtype (bf16)
+        return (num / jnp.maximum(den, 1e-30)[..., None]).astype(q.dtype)
+
+    out = jax.lax.map(one_q_block, (jnp.arange(nq), qr))  # (nq,B,qb,K,G,dhv)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * qb, H, dhv)[:, :S]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length, *, window: int | None = None,
+                     scale: float | None = None) -> jax.Array:
+    """Single-step attention against a cache.
+
+    q: (B, 1, H, dh); caches: (B, T, K, dh); ``length``: number of valid
+    cache positions (scalar).  Memory-bound by design -- one pass over the
+    cache, f32 softmax.
+    """
+    B, _, H, dh = q.shape
+    _, T, K, dhv = v_cache.shape
+    G = H // K
+    scale = dh ** -0.5 if scale is None else scale
+    qs = q.reshape(B, K, G, dh) * jnp.asarray(scale, q.dtype)
+    s = mxu_einsum("bkgd,btkd->bkgt", qs, k_cache)
+    idx = jnp.arange(T)
+    valid = idx[None, :] < length
+    if window is not None:
+        valid &= idx[None, :] >= length - window
+    s = jnp.where(valid[:, None, None, :] if valid.ndim == 2 else valid,
+                  s, _NEG)
+    s = shard(s, ("batch", "kv_heads", "heads", "cache_seq"), "decode.scores")
+    p = jax.nn.softmax(s, axis=-1)
+    out = mxu_einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, dhv).astype(q.dtype)
+
+
+def full_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                   scale=None) -> jax.Array:
+    """Naive O(S*T) attention -- test oracle only."""
+    B, S, H, dh = q.shape
+    _, T, K, dhv = v.shape
+    G = H // K
+    scale = dh ** -0.5 if scale is None else scale
+    qf = q.reshape(B, S, K, G, dh).astype(jnp.float32) * scale
+    s = jnp.einsum("bqkgd,btkd->bqkgt", qf, k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(S)
+    bias = _mask_bias(q_pos, jnp.arange(T), causal=causal, window=window,
+                      t_actual=T)
+    s = s + bias[None, :, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgt,btkd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, dhv).astype(q.dtype)
+
+
+def decode_attention_two_tier(q, k_main, v_main, k_tail, v_tail, pos, *,
+                              scale: float | None = None) -> jax.Array:
+    """Decode attention over a two-tier cache.
+
+    The *main* cache (B, Tm, K, d) may be sequence-sharded; the *tail*
+    (B, Tt, K, d) is a small replicated append buffer written O(1) per step
+    (an update at a dynamic index of a sharded dim would otherwise rewrite
+    the whole local shard -- see EXPERIMENTS.md 'two-tier KV cache').
+    Invariant: positions [0, pos - pos%Tt) live in main, the rest in tail.
+    """
+    B, _, H, dh = q.shape
+    _, Tm, K, dhv = v_main.shape
+    Tt = v_tail.shape[1]
+    G = H // K
+    scale = dh ** -0.5 if scale is None else scale
+    n_tail = pos % Tt
+    main_len = pos - n_tail
+    qs = q.reshape(B, K, G, dh) * jnp.asarray(scale, q.dtype)
+    sm = mxu_einsum("bkgd,btkd->bkgt", qs, k_main)
+    st = mxu_einsum("bkgd,btkd->bkgt", qs, k_tail)
+    sm = jnp.where(jnp.arange(Tm)[None, None, None, :] < main_len, sm, _NEG)
+    st = jnp.where(jnp.arange(Tt)[None, None, None, :] <= n_tail, st, _NEG)
+    sm = shard(sm, ("batch", "kv_heads", "heads", "cache_seq"), "decode.sm")
+    s = jnp.concatenate([sm, st], axis=-1)
+    p = jax.nn.softmax(s, axis=-1)
+    pm, pt = p[..., :Tm], p[..., Tm:]
+    out = (mxu_einsum("bkgt,btkd->bkgd", pm.astype(v_main.dtype), v_main)
+           + mxu_einsum("bkgt,btkd->bkgd", pt.astype(v_tail.dtype), v_tail))
+    return out.reshape(B, 1, H, dhv).astype(q.dtype)

@@ -1,0 +1,86 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The gated linear recurrence h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+is elementwise, so the gates (which depend only on x_t) are precomputed with
+two big matmuls and the recurrence itself runs as a *parallel associative
+scan* -- no sequential while-loop in the HLO, FLOPs visible to
+cost_analysis, and log-depth on TPU.  The Pallas kernel
+(repro.kernels.rg_lru) provides the single-pass VMEM version.
+
+Block structure (Griffin recurrent block):
+    norm -> { y = gelu(x @ wy) ; r = rglru(conv1d(x @ wx)) } -> (y * r) @ wo
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d
+from repro.runtime.sharding import shard
+
+__all__ = ["rg_lru", "rg_lru_step", "griffin_forward", "griffin_decode_step"]
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def _gates(p, x):
+    """i_t, log_a_t from x (B,S,W); all f32."""
+    xf = x.astype(jnp.float32)
+    i_t = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32) + p["b_i"].astype(jnp.float32))
+    r_t = jax.nn.sigmoid(xf @ p["w_r"].astype(jnp.float32) + p["b_r"].astype(jnp.float32))
+    # a_t = exp(-c * softplus(Lambda) * r_t)  -> log_a in (-inf, 0)
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r_t
+    return i_t, log_a
+
+
+def rg_lru(p, x, h0=None):
+    """x: (B,S,W) -> (y (B,S,W) f32, h_last (B,W) f32) via associative scan."""
+    i_t, log_a = _gates(p, x)
+    a = jnp.exp(log_a)
+    gate = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    b = gate * i_t * x.astype(jnp.float32)
+
+    if h0 is not None:
+        # fold the carried state into the first step's additive term
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(l, r):
+        a_l, b_l = l
+        a_r, b_r = r
+        return a_l * a_r, b_l * a_r + b_r
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1, :]
+
+
+def rg_lru_step(p, x_t, h):
+    """One step.  x_t: (B,1,W); h: (B,W)."""
+    i_t, log_a = _gates(p, x_t)
+    a = jnp.exp(log_a[:, 0])
+    gate = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    h = a * h.astype(jnp.float32) + gate * (i_t[:, 0] * x_t[:, 0].astype(jnp.float32))
+    return h[:, None, :], h
+
+
+def griffin_forward(cfg, p, x, *, h0=None, conv_state=None, return_state=False):
+    """Full-sequence recurrent block.  x: (B,S,D) -> (B,S,D)."""
+    y_branch = jax.nn.gelu(x @ p["wy"], approximate=True)
+    r = x @ p["wx"]
+    r = shard(r, ("batch", "seq", "state"), "rglru.x")
+    r, new_conv = causal_conv1d(r, p["conv_w"], conv_state)
+    r_out, h_last = rg_lru(p, r, h0)
+    out = (y_branch.astype(jnp.float32) * r_out).astype(x.dtype) @ p["wo"]
+    if return_state:
+        return out, (h_last, new_conv)
+    return out
+
+
+def griffin_decode_step(cfg, p, x, h, conv_state):
+    """One-token step.  x: (B,1,D); h: (B,W); conv_state: (B,K-1,W)."""
+    y_branch = jax.nn.gelu(x @ p["wy"], approximate=True)
+    r = x @ p["wx"]
+    r, conv_state = causal_conv1d(r, p["conv_w"], conv_state)
+    r_out, h = rg_lru_step(p, r, h)
+    out = (y_branch.astype(jnp.float32) * r_out).astype(x.dtype) @ p["wo"]
+    return out, h, conv_state

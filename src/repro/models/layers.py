@@ -1,0 +1,117 @@
+"""Shared primitive layers: norms, RoPE, gated MLPs, embeddings, conv."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import shard
+
+__all__ = [
+    "rms_norm", "layer_norm", "rope", "apply_act", "mlp", "causal_conv1d",
+    "sinusoidal_positions", "mxu_einsum",
+]
+
+
+def mxu_einsum(spec: str, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Matmul with f32 accumulation and NO f32 operand copies (TPU form).
+
+    On TPU (and in the dry-run, which lowers the TPU-shaped program on CPU
+    hosts -- REPRO_MXU_ACCUM=1), operands stay bf16 and the MXU accumulates
+    in f32 via ``preferred_element_type``.  XLA:CPU cannot *execute*
+    bf16 x bf16 -> f32 dots, so the runnable CPU path (tests, examples)
+    upcasts instead -- numerically the oracle of the TPU form.
+    """
+    if jax.default_backend() == "tpu" or os.environ.get("REPRO_MXU_ACCUM"):
+        return jnp.einsum(spec, a, b, preferred_element_type=jnp.float32)
+    return jnp.einsum(spec, a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding on the last axis; ``positions`` broadcastable to x[..., S, :].
+
+    x: (..., S, H, d) with d even; positions: (S,) or (B, S).
+    """
+    d = x.shape[-1]
+    dt = x.dtype
+    freqs = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)  # (d/2,)
+    pos = positions.astype(jnp.float32)
+    angles = pos[..., None] * freqs  # (..., S, d/2)
+    # broadcast over the head axis: x is (..., S, H, d)
+    angles = angles[..., None, :]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def sinusoidal_positions(positions: jax.Array, d_model: int) -> jax.Array:
+    """Transformer sinusoidal table for arbitrary positions (Whisper stub)."""
+    pos = positions.astype(jnp.float32)
+    inv = 10000.0 ** (-jnp.arange(0, d_model, 2, dtype=jnp.float32) / d_model)
+    ang = pos[..., None] * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def apply_act(h: jax.Array, g: jax.Array | None, act: str) -> jax.Array:
+    if act == "silu":
+        return jax.nn.silu(g) * h if g is not None else jax.nn.silu(h)
+    if act == "geglu":
+        return jax.nn.gelu(g, approximate=True) * h if g is not None else jax.nn.gelu(h)
+    if act == "gelu":
+        return jax.nn.gelu(h, approximate=True)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def mlp(params, x: jax.Array, act: str) -> jax.Array:
+    """(Gated) feed-forward block; params: wi, wo [, wg] [, bi, bo]."""
+    h = x @ params["wi"]
+    if "bi" in params:
+        h = h + params["bi"]
+    g = (x @ params["wg"]) if "wg" in params else None
+    h = apply_act(h, g, act)
+    h = shard(h, ("batch", "seq", "ff"), "mlp.h")
+    o = h @ params["wo"]
+    if "bo" in params:
+        o = o + params["bo"]
+    return o
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal 1-D conv.
+
+    x: (B, S, C); w: (K, C).  Returns (y, new_state) where state is the last
+    (K-1) inputs -- the decode carry.  When ``state`` is given, x is the new
+    chunk (decode: S == 1) and the conv sees [state, x].
+    """
+    k = w.shape[0]
+    if state is not None:
+        xx = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    else:
+        xx = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # windowed sum: y[t] = sum_j w[j] * xx[t + j]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for j in range(k):
+        y = y + xx[:, j:j + x.shape[1], :].astype(jnp.float32) * w[j].astype(jnp.float32)
+    new_state = xx[:, -(k - 1):, :] if k > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return y.astype(x.dtype), new_state.astype(x.dtype)

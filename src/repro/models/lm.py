@@ -1,0 +1,711 @@
+"""Composable LM assembly: specs, init, train / prefill / decode.
+
+One code path covers all ten assigned architectures.  A config's
+``groups()`` (repeats x block-pattern) drives a scan over stacked layer
+parameters; block kinds dispatch to GQA/MLA attention, MoE, Mamba-2 SSD,
+RG-LRU, or local attention.  Whisper adds an encoder stack + cross
+attention; LLaVA prepends projected patch embeddings (frontend stubs per
+the assignment).
+
+Conventions
+-----------
+* params / caches are flat dicts: ``g{gi}/p{pj}/<name>`` with a leading
+  "layers" axis of length ``reps`` (scanned).
+* activations bf16, softmax/recurrences f32, logits reduced in f32.
+* every tensor is annotated with logical axes via ``runtime.sharding.shard``
+  -- a no-op without an active mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import griffin as G
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.attention import (blockwise_attention, decode_attention,
+                                    decode_attention_two_tier)
+from repro.models.config import ModelConfig
+from repro.models.layers import mlp, rms_norm, rope, sinusoidal_positions
+from repro.models.spec import ParamSpec, sub
+from repro.runtime.sharding import shard
+
+__all__ = ["param_specs", "init_cache_specs", "make_loss_fn", "make_prefill_fn",
+           "make_decode_fn", "MOE_AUX_WEIGHT"]
+
+MOE_AUX_WEIGHT = 0.01
+
+# parameters kept in f32 inside the (bf16) forward pass
+_KEEP_F32 = {"A_log", "dt_bias", "D", "lam", "b_i", "b_r", "router"}
+
+
+def _cast_params(cfg: ModelConfig, params):
+    """Cast matmul weights to the compute dtype (norms/gates stay f32)."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def cast(name, a):
+        leaf = name.split("/")[-1]
+        if leaf in _KEEP_F32 or "norm" in leaf:
+            return a
+        return a.astype(dt)
+
+    return {k: cast(k, v) for k, v in params.items()}
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _norm(d: int) -> ParamSpec:
+    return ParamSpec((d,), "float32", (None,), init="zeros")
+
+
+def _attn_specs(cfg: ModelConfig, prefix: str = "") -> dict[str, ParamSpec]:
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.param_dtype
+    s = {
+        f"{prefix}wq": ParamSpec((D, H * hd), dt, ("fsdp", "qkv")),
+        f"{prefix}wk": ParamSpec((D, K * hd), dt, ("fsdp", "qkv")),
+        f"{prefix}wv": ParamSpec((D, K * hd), dt, ("fsdp", "qkv")),
+        f"{prefix}wo": ParamSpec((H * hd, D), dt, ("qkv", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        s[f"{prefix}bq"] = ParamSpec((H * hd,), dt, ("qkv",), init="zeros")
+        s[f"{prefix}bk"] = ParamSpec((K * hd,), dt, ("qkv",), init="zeros")
+        s[f"{prefix}bv"] = ParamSpec((K * hd,), dt, ("qkv",), init="zeros")
+    return s
+
+
+def _mla_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    D, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv, r, qr = (cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim,
+                         cfg.kv_lora_rank, cfg.q_lora_rank)
+    dt = cfg.param_dtype
+    return {
+        "wq_a": ParamSpec((D, qr), dt, ("fsdp", None)),
+        "q_norm": _norm(qr),
+        "wq_b": ParamSpec((qr, H * (dn + dr)), dt, ("fsdp", "qkv")),
+        "wkv_a": ParamSpec((D, r + dr), dt, ("fsdp", None)),
+        "kv_norm": _norm(r),
+        "wkv_b": ParamSpec((r, H * (dn + dv)), dt, ("fsdp", "qkv")),
+        "wo": ParamSpec((H * dv, D), dt, ("qkv", "fsdp")),
+    }
+
+
+def _mlp_specs(cfg: ModelConfig, d_ff: int | None = None,
+               prefix: str = "mlp_") -> dict[str, ParamSpec]:
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    dt = cfg.param_dtype
+    s = {
+        f"{prefix}wi": ParamSpec((D, F), dt, ("fsdp", "ff")),
+        f"{prefix}wo": ParamSpec((F, D), dt, ("ff", "fsdp")),
+    }
+    if cfg.is_gated_mlp:
+        s[f"{prefix}wg"] = ParamSpec((D, F), dt, ("fsdp", "ff"))
+    return s
+
+
+def _moe_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    D, E, Fe = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    dt = cfg.param_dtype
+    s = {
+        "router": ParamSpec((D, E), "float32", ("fsdp", "experts")),
+        "we_up": ParamSpec((E, D, Fe), dt, ("experts", "fsdp", None)),
+        "we_down": ParamSpec((E, Fe, D), dt, ("experts", None, "fsdp")),
+    }
+    if cfg.is_gated_mlp:
+        s["we_gate"] = ParamSpec((E, D, Fe), dt, ("experts", "fsdp", None))
+    if cfg.n_shared_experts:
+        Fs = cfg.n_shared_experts * Fe
+        s["ws_up"] = ParamSpec((D, Fs), dt, ("fsdp", "ff"))
+        s["ws_down"] = ParamSpec((Fs, D), dt, ("ff", "fsdp"))
+        if cfg.is_gated_mlp:
+            s["ws_gate"] = ParamSpec((D, Fs), dt, ("fsdp", "ff"))
+    return s
+
+
+def _ssm_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    D = cfg.d_model
+    d_in, N, Gr, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    conv_dim = d_in + 2 * Gr * N
+    zxbcdt = 2 * d_in + 2 * Gr * N + H
+    dt = cfg.param_dtype
+    return {
+        "in_proj": ParamSpec((D, zxbcdt), dt, ("fsdp", "ff")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_dim), dt, ("conv", None)),
+        "A_log": ParamSpec((H,), "float32", (None,), init="zeros"),
+        "D": ParamSpec((H,), "float32", (None,), init="ones"),
+        "dt_bias": ParamSpec((H,), "float32", (None,), init="zeros"),
+        "norm": _norm(d_in),
+        "out_proj": ParamSpec((d_in, D), dt, ("ff", "fsdp")),
+    }
+
+
+def _rglru_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    D, W = cfg.d_model, cfg.lru
+    dt = cfg.param_dtype
+    return {
+        "wx": ParamSpec((D, W), dt, ("fsdp", "state")),
+        "wy": ParamSpec((D, W), dt, ("fsdp", "state")),
+        "conv_w": ParamSpec((cfg.ssm_conv, W), dt, ("conv", None)),
+        "w_i": ParamSpec((W, W), dt, ("fsdp", "state")),
+        "b_i": ParamSpec((W,), "float32", (None,), init="zeros"),
+        "w_r": ParamSpec((W, W), dt, ("fsdp", "state")),
+        "b_r": ParamSpec((W,), "float32", (None,), init="zeros"),
+        "lam": ParamSpec((W,), "float32", (None,), init="ones"),
+        "wo": ParamSpec((W, D), dt, ("state", "fsdp")),
+    }
+
+
+def _block_specs(cfg: ModelConfig, kind: str) -> dict[str, ParamSpec]:
+    D = cfg.d_model
+    s: dict[str, ParamSpec] = {"norm1": _norm(D)}
+    if kind in ("attn", "moe", "local_attn", "xattn", "enc_attn"):
+        if cfg.attn_kind == "mla":
+            s.update(_mla_specs(cfg))
+        else:
+            s.update(_attn_specs(cfg))
+        s["norm2"] = _norm(D)
+    if kind == "xattn":  # whisper decoder: + cross attention
+        s["normx"] = _norm(D)
+        s.update(_attn_specs(cfg, prefix="x_"))
+    if kind in ("attn", "local_attn", "xattn", "enc_attn"):
+        s.update(_mlp_specs(cfg))
+    if kind == "moe":
+        s.update(_moe_specs(cfg))
+    if kind == "ssm":
+        s.update(_ssm_specs(cfg))
+    if kind == "rglru":
+        s.update(_rglru_specs(cfg))
+        s["norm2"] = _norm(D)
+        s.update(_mlp_specs(cfg))
+    return s
+
+
+def param_specs(cfg: ModelConfig) -> dict[str, ParamSpec]:
+    """Full parameter spec dict for an architecture."""
+    D, V = cfg.d_model, cfg.vocab
+    out: dict[str, ParamSpec] = {
+        "embed/tok": ParamSpec((V, D), cfg.param_dtype, ("vocab", "fsdp"),
+                               init="embed"),
+        "final_norm": _norm(D),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ParamSpec((D, V), cfg.param_dtype, ("fsdp", "vocab"))
+    if cfg.frontend == "vlm_stub":
+        out["mm_proj"] = ParamSpec((D, D), cfg.param_dtype, ("fsdp", None))
+    if cfg.is_encdec:
+        for name, spec in _block_specs(cfg, "enc_attn").items():
+            out[f"enc/g0/p0/{name}"] = spec.stack(cfg.enc_layers)
+        out["enc_norm"] = _norm(D)
+    for gi, (reps, pattern) in enumerate(cfg.groups()):
+        for pj, kind in enumerate(pattern):
+            for name, spec in _block_specs(cfg, kind).items():
+                out[f"g{gi}/p{pj}/{name}"] = spec.stack(reps)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cache specs
+# ---------------------------------------------------------------------------
+
+def _block_cache_specs(cfg: ModelConfig, kind: str, B: int, T: int,
+                       enc_T: int = 0) -> dict[str, ParamSpec]:
+    K, hd = cfg.n_kv_heads, cfg.hd
+    s: dict[str, ParamSpec] = {}
+    Tt = min(cfg.decode_tail, max(1, T))
+    if kind in ("attn", "moe") and cfg.attn_kind == "mla":
+        s["ckv"] = ParamSpec((B, T, cfg.kv_lora_rank), "bfloat16",
+                             ("batch", "cache_seq", None))
+        s["kr"] = ParamSpec((B, T, cfg.rope_head_dim), "bfloat16",
+                            ("batch", "cache_seq", None))
+        # two-tier append buffer (replicated): O(1) per-token writes
+        s["tckv"] = ParamSpec((B, Tt, cfg.kv_lora_rank), "bfloat16",
+                              ("batch", None, None))
+        s["tkr"] = ParamSpec((B, Tt, cfg.rope_head_dim), "bfloat16",
+                             ("batch", None, None))
+    elif kind in ("attn", "moe", "xattn"):
+        s["k"] = ParamSpec((B, T, K, hd), "bfloat16",
+                           ("batch", "cache_seq", "kv_heads", None))
+        s["v"] = ParamSpec((B, T, K, hd), "bfloat16",
+                           ("batch", "cache_seq", "kv_heads", None))
+        s["tk"] = ParamSpec((B, Tt, K, hd), "bfloat16",
+                            ("batch", None, None, None))
+        s["tv"] = ParamSpec((B, Tt, K, hd), "bfloat16",
+                            ("batch", None, None, None))
+    elif kind == "local_attn":
+        W = min(T, cfg.window or T)
+        s["k"] = ParamSpec((B, W, K, hd), "bfloat16",
+                           ("batch", "cache_seq", "kv_heads", None))
+        s["v"] = ParamSpec((B, W, K, hd), "bfloat16",
+                           ("batch", "cache_seq", "kv_heads", None))
+    if kind == "xattn":
+        s["xk"] = ParamSpec((B, enc_T, K, hd), "bfloat16",
+                            ("batch", "cache_seq", "kv_heads", None))
+        s["xv"] = ParamSpec((B, enc_T, K, hd), "bfloat16",
+                            ("batch", "cache_seq", "kv_heads", None))
+    if kind == "ssm":
+        s["h"] = ParamSpec((B, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                           "float32", ("batch", "heads", None, None))
+        s["conv"] = ParamSpec(
+            (B, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state),
+            "bfloat16", ("batch", "conv", None))
+    if kind == "rglru":
+        s["h"] = ParamSpec((B, cfg.lru), "float32", ("batch", "state"))
+        s["conv"] = ParamSpec((B, cfg.ssm_conv - 1, cfg.lru), "bfloat16",
+                              ("batch", "conv", "state"))
+    return s
+
+
+def init_cache_specs(cfg: ModelConfig, batch: int, cache_len: int,
+                     enc_len: int = 0) -> dict[str, ParamSpec]:
+    out: dict[str, ParamSpec] = {}
+    for gi, (reps, pattern) in enumerate(cfg.groups()):
+        for pj, kind in enumerate(pattern):
+            for name, spec in _block_cache_specs(cfg, kind, batch, cache_len,
+                                                 enc_len).items():
+                out[f"g{gi}/p{pj}/{name}"] = spec.stack(reps)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Block forwards
+# ---------------------------------------------------------------------------
+
+def _use_rope(cfg: ModelConfig) -> bool:
+    return cfg.family != "audio"
+
+
+def _qkv(cfg, p, h, positions, prefix=""):
+    B, S, _ = h.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = h @ p[f"{prefix}wq"]
+    k = h @ p[f"{prefix}wk"]
+    v = h @ p[f"{prefix}wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p[f"{prefix}bq"], k + p[f"{prefix}bk"], v + p[f"{prefix}bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    if _use_rope(cfg) and positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, ("batch", "seq", "heads", None), "attn.q")
+    k = shard(k, ("batch", "seq", "kv_heads", None), "attn.k")
+    v = shard(v, ("batch", "seq", "kv_heads", None), "attn.v")
+    return q, k, v
+
+
+def _attn_block(cfg, p, x, positions, *, causal=True, window=None,
+                q_offset=0, want_cache=False):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if cfg.attn_kind == "mla":
+        out, cache = MLA.mla_attention(cfg, p, h, positions, causal=causal,
+                                       q_offset=q_offset)
+        x = x + out
+        return (x, cache) if want_cache else x
+    q, k, v = _qkv(cfg, p, h, positions)
+    B, S = x.shape[:2]
+    o = blockwise_attention(q, k, v, causal=causal, window=window,
+                            q_offset=q_offset)
+    x = x + o.reshape(B, S, -1) @ p["wo"]
+    return (x, (k, v)) if want_cache else x
+
+
+def _mlp_res(cfg, p, x):
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    pp = {k[4:]: v for k, v in p.items() if k.startswith("mlp_")}
+    return x + mlp(pp, h, cfg.act)
+
+
+def _xattn_cross(cfg, p, x, enc_out=None, cached_kv=None):
+    """Cross-attention sub-block: q from x, k/v from encoder output."""
+    B, S, _ = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, p["normx"], cfg.norm_eps)
+    q = (h @ p["x_wq"]).reshape(B, S, H, hd)
+    if cached_kv is not None:
+        k, v = cached_kv
+    else:
+        k = (enc_out @ p["x_wk"]).reshape(B, enc_out.shape[1], K, hd)
+        v = (enc_out @ p["x_wv"]).reshape(B, enc_out.shape[1], K, hd)
+    o = blockwise_attention(q, k, v, causal=False)
+    return x + o.reshape(B, S, -1) @ p["x_wo"], (k, v)
+
+
+def _block_train(cfg, kind, p, x, positions, aux, enc_out=None, *,
+                 causal=True, q_offset=0):
+    """Full-sequence block application (train / encoder)."""
+    if kind in ("attn", "enc_attn"):
+        x = _attn_block(cfg, p, x, positions, causal=causal and kind != "enc_attn",
+                        q_offset=q_offset)
+        x = _mlp_res(cfg, p, x)
+    elif kind == "local_attn":
+        x = _attn_block(cfg, p, x, positions, causal=True, window=cfg.window,
+                        q_offset=q_offset)
+        x = _mlp_res(cfg, p, x)
+    elif kind == "xattn":
+        x = _attn_block(cfg, p, x, positions, causal=True, q_offset=q_offset)
+        x, _ = _xattn_cross(cfg, p, x, enc_out=enc_out)
+        x = _mlp_res(cfg, p, x)
+    elif kind == "moe":
+        x = _attn_block(cfg, p, x, positions, causal=True, q_offset=q_offset)
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        y, a = MOE.moe_mlp(cfg, p, h)
+        x = x + y
+        aux = aux + a
+    elif kind == "ssm":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        x = x + SSM.mamba2_forward(cfg, p, h)
+    elif kind == "rglru":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        x = x + G.griffin_forward(cfg, p, h)
+        x = _mlp_res(cfg, p, x)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    x = shard(x, ("batch", "seq", "d_model"), f"block.{kind}.out")
+    return x, aux
+
+
+def _block_prefill(cfg, kind, p, x, positions, cache, enc_out=None):
+    """Like train, but also fills the block's cache (S = prompt length)."""
+    new_cache = dict(cache)
+
+    def fill(buf, val):
+        """Write the prompt's entries into the (longer) decode buffer."""
+        return jax.lax.dynamic_update_slice(
+            buf, val.astype(buf.dtype), (0,) * buf.ndim)
+
+    if kind in ("attn", "moe"):
+        # two-tier invariant: [0, S - S%Tt) -> main, remainder -> tail
+        if cfg.attn_kind == "mla":
+            x2, (ckv, kr) = _attn_block(cfg, p, x, positions, want_cache=True)
+            Tt = cache["tckv"].shape[1]
+            S = ckv.shape[1]
+            base = S - S % Tt
+            new_cache["ckv"] = fill(cache["ckv"], ckv[:, :base])
+            new_cache["kr"] = fill(cache["kr"], kr[:, :base])
+            new_cache["tckv"] = fill(cache["tckv"], ckv[:, base:])
+            new_cache["tkr"] = fill(cache["tkr"], kr[:, base:])
+        else:
+            x2, (k, v) = _attn_block(cfg, p, x, positions, want_cache=True)
+            Tt = cache["tk"].shape[1]
+            S = k.shape[1]
+            base = S - S % Tt
+            new_cache["k"] = fill(cache["k"], k[:, :base])
+            new_cache["v"] = fill(cache["v"], v[:, :base])
+            new_cache["tk"] = fill(cache["tk"], k[:, base:])
+            new_cache["tv"] = fill(cache["tv"], v[:, base:])
+        x = x2
+        if kind == "moe":
+            h = rms_norm(x, p["norm2"], cfg.norm_eps)
+            y, _ = MOE.moe_mlp(cfg, p, h)
+            x = x + y
+        else:
+            x = _mlp_res(cfg, p, x)
+    elif kind == "local_attn":
+        x, (k, v) = _attn_block(cfg, p, x, positions, causal=True,
+                                window=cfg.window, want_cache=True)
+        # ring buffer: keep the last W positions, slot = absolute pos % W
+        W = cache["k"].shape[1]
+        S = k.shape[1]
+        take = jnp.arange(max(0, S - W), S)
+        slots = take % W
+        new_cache["k"] = cache["k"].at[:, slots].set(
+            k[:, take].astype(cache["k"].dtype))
+        new_cache["v"] = cache["v"].at[:, slots].set(
+            v[:, take].astype(cache["v"].dtype))
+        x = _mlp_res(cfg, p, x)
+    elif kind == "xattn":
+        x, (k, v) = _attn_block(cfg, p, x, positions, want_cache=True)
+        Tt = cache["tk"].shape[1]
+        S = k.shape[1]
+        base = S - S % Tt
+        new_cache["k"] = fill(cache["k"], k[:, :base])
+        new_cache["v"] = fill(cache["v"], v[:, :base])
+        new_cache["tk"] = fill(cache["tk"], k[:, base:])
+        new_cache["tv"] = fill(cache["tv"], v[:, base:])
+        x, (xk, xv) = _xattn_cross(cfg, p, x, enc_out=enc_out)
+        new_cache["xk"] = fill(cache["xk"], xk)
+        new_cache["xv"] = fill(cache["xv"], xv)
+        x = _mlp_res(cfg, p, x)
+    elif kind == "ssm":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        o, (hs, conv) = SSM.mamba2_forward(cfg, p, h, return_state=True)
+        x = x + o
+        new_cache["h"] = hs.astype(cache["h"].dtype)
+        new_cache["conv"] = conv.astype(cache["conv"].dtype)
+    elif kind == "rglru":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        o, (hs, conv) = G.griffin_forward(cfg, p, h, return_state=True)
+        x = x + o
+        new_cache["h"] = hs.astype(cache["h"].dtype)
+        new_cache["conv"] = conv.astype(cache["conv"].dtype)
+        x = _mlp_res(cfg, p, x)
+    else:
+        raise ValueError(kind)
+    x = shard(x, ("batch", "seq", "d_model"), f"prefill.{kind}.out")
+    return x, new_cache
+
+
+def _block_decode(cfg, kind, p, x, pos, cache):
+    """One-token step.  x: (B,1,D); pos: scalar absolute position."""
+    new_cache = dict(cache)
+    positions = jnp.full((1,), pos, jnp.int32)
+    if kind in ("attn", "moe", "xattn", "local_attn"):
+        if cfg.attn_kind == "mla":
+            h = rms_norm(x, p["norm1"], cfg.norm_eps)
+            o, tckv, tkr = MLA.mla_decode_two_tier(
+                cfg, p, h, pos, cache["ckv"], cache["kr"],
+                cache["tckv"], cache["tkr"])
+            new_cache["tckv"], new_cache["tkr"] = tckv, tkr
+            x = x + o
+        else:
+            h = rms_norm(x, p["norm1"], cfg.norm_eps)
+            q, k, v = _qkv(cfg, p, h, positions)
+            if kind == "local_attn":
+                W = cache["k"].shape[1]
+                slot = pos % W
+                k_c = jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+                v_c = jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+                # every resident slot is within the window by construction
+                length = jnp.minimum(pos + 1, W)
+                o = decode_attention(q, k_c, v_c, length)
+                new_cache["k"], new_cache["v"] = k_c, v_c
+            else:
+                # O(1) write into the replicated tail; main is read-only
+                Tt = cache["tk"].shape[1]
+                slot = pos % Tt
+                tk = jax.lax.dynamic_update_slice(
+                    cache["tk"], k.astype(cache["tk"].dtype), (0, slot, 0, 0))
+                tv = jax.lax.dynamic_update_slice(
+                    cache["tv"], v.astype(cache["tv"].dtype), (0, slot, 0, 0))
+                o = decode_attention_two_tier(q, cache["k"], cache["v"],
+                                              tk, tv, pos)
+                new_cache["tk"], new_cache["tv"] = tk, tv
+            B = x.shape[0]
+            x = x + o.reshape(B, 1, -1) @ p["wo"]
+        if kind == "xattn":
+            x, _ = _xattn_cross(cfg, p, x, cached_kv=(cache["xk"], cache["xv"]))
+        if kind == "moe":
+            h = rms_norm(x, p["norm2"], cfg.norm_eps)
+            y, _ = MOE.moe_mlp(cfg, p, h)
+            x = x + y
+        else:
+            x = _mlp_res(cfg, p, x)
+    elif kind == "ssm":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        o, hs, conv = SSM.mamba2_decode_step(cfg, p, h, cache["h"], cache["conv"])
+        x = x + o
+        new_cache["h"] = hs.astype(cache["h"].dtype)
+        new_cache["conv"] = conv.astype(cache["conv"].dtype)
+    elif kind == "rglru":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        o, hs, conv = G.griffin_decode_step(cfg, p, h, cache["h"], cache["conv"])
+        x = x + o
+        new_cache["h"] = hs.astype(cache["h"].dtype)
+        new_cache["conv"] = conv.astype(cache["conv"].dtype)
+        x = _mlp_res(cfg, p, x)
+    else:
+        raise ValueError(kind)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stacked-group scans
+# ---------------------------------------------------------------------------
+
+def _remat(cfg: ModelConfig, fn: Callable) -> Callable:
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)  # "full"
+
+
+def _scan_group_train(cfg, params, gi, reps, pattern, x, positions, aux,
+                      enc_out=None, *, causal=True, q_offset=0):
+    gp = sub(params, f"g{gi}" if gi >= 0 else "enc/g0")
+
+    def body(carry, layer_params):
+        x, aux = carry
+        for pj, kind in enumerate(pattern):
+            x, aux = _block_train(cfg, kind, sub(layer_params, f"p{pj}"), x,
+                                  positions, aux, enc_out,
+                                  causal=causal, q_offset=q_offset)
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(_remat(cfg, body), (x, aux), gp)
+    return x, aux
+
+
+def _scan_group_prefill(cfg, params, cache, gi, reps, pattern, x, positions,
+                        enc_out=None):
+    gp = sub(params, f"g{gi}")
+    gc = sub(cache, f"g{gi}")
+
+    def body(x, inp):
+        layer_params, layer_cache = inp
+        new_lc = {}
+        for pj, kind in enumerate(pattern):
+            x, nc = _block_prefill(cfg, kind, sub(layer_params, f"p{pj}"), x,
+                                   positions, sub(layer_cache, f"p{pj}"), enc_out)
+            for k, v in nc.items():
+                new_lc[f"p{pj}/{k}"] = v
+        return x, new_lc
+
+    x, new_gc = jax.lax.scan(body, x, (gp, gc))
+    return x, {f"g{gi}/{k}": v for k, v in new_gc.items()}
+
+
+def _scan_group_decode(cfg, params, cache, gi, reps, pattern, x, pos):
+    gp = sub(params, f"g{gi}")
+    gc = sub(cache, f"g{gi}")
+
+    def body(x, inp):
+        layer_params, layer_cache = inp
+        new_lc = {}
+        for pj, kind in enumerate(pattern):
+            x, nc = _block_decode(cfg, kind, sub(layer_params, f"p{pj}"), x,
+                                  pos, sub(layer_cache, f"p{pj}"))
+            for k, v in nc.items():
+                new_lc[f"p{pj}/{k}"] = v
+        return x, new_lc
+
+    x, new_gc = jax.lax.scan(body, x, (gp, gc))
+    return x, {f"g{gi}/{k}": v for k, v in new_gc.items()}
+
+
+# ---------------------------------------------------------------------------
+# Embedding / heads / encoder
+# ---------------------------------------------------------------------------
+
+def _embed(cfg, params, tokens):
+    x = jnp.take(params["embed/tok"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return shard(x, ("batch", "seq", "d_model"), "embed")
+
+
+def _logits(cfg, params, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed/tok"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    logits = shard(logits, ("batch", "seq", "vocab"), "logits")
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def _encode(cfg, params, frames):
+    """Whisper encoder over stubbed frame embeddings (B, S_enc, D)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    pos = sinusoidal_positions(jnp.arange(x.shape[1]), cfg.d_model)
+    x = x + pos[None].astype(x.dtype)
+    aux = jnp.zeros((), jnp.float32)
+    x, _ = _scan_group_train(cfg, params, -1, cfg.enc_layers, ("enc_attn",), x,
+                             jnp.arange(x.shape[1]), aux, causal=False)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _prepare_inputs(cfg, params, batch):
+    """Returns (x, positions, enc_out, target_mask_prefix_len)."""
+    tokens = batch["inputs"]
+    x = _embed(cfg, params, tokens)
+    enc_out = None
+    img = 0
+    if cfg.frontend == "vlm_stub":
+        patches = batch["patches"].astype(x.dtype) @ params["mm_proj"].astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        img = patches.shape[1]
+    if cfg.is_encdec:
+        enc_out = _encode(cfg, params, batch["frames"])
+        x = x + sinusoidal_positions(jnp.arange(x.shape[1]),
+                                     cfg.d_model)[None].astype(x.dtype)
+    positions = jnp.arange(x.shape[1])
+    return x, positions, enc_out, img
+
+
+# ---------------------------------------------------------------------------
+# Public factories
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg: ModelConfig):
+    """Returns loss(params, batch) -> (loss, metrics).
+
+    batch: inputs (B,S) int32, targets (B,S) int32 (-1 = masked), plus
+    "patches" (vlm) / "frames" (audio).
+    """
+
+    def loss_fn(params, batch):
+        params = _cast_params(cfg, params)
+        x, positions, enc_out, img = _prepare_inputs(cfg, params, batch)
+        aux = jnp.zeros((), jnp.float32)
+        for gi, (reps, pattern) in enumerate(cfg.groups()):
+            x, aux = _scan_group_train(cfg, params, gi, reps, pattern, x,
+                                       positions, aux, enc_out)
+        if img:
+            x = x[:, img:]
+        logits = _logits(cfg, params, x)
+        targets = batch["targets"]
+        mask = (targets >= 0).astype(jnp.float32)
+        tgt = jnp.maximum(targets, 0)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        tl = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+        ce = (lse - tl.astype(jnp.float32)) * mask
+        ntok = jnp.maximum(mask.sum(), 1.0)
+        loss = ce.sum() / ntok
+        if cfg.n_experts:
+            loss = loss + MOE_AUX_WEIGHT * aux
+        return loss, {"ce": ce.sum() / ntok, "aux": aux, "ntok": ntok}
+
+    return loss_fn
+
+
+def make_prefill_fn(cfg: ModelConfig):
+    """Returns prefill(params, batch, cache0) -> (last_logits, cache).
+
+    cache0 must be sized for the prompt (or window-capped for local attn).
+    """
+
+    def prefill_fn(params, batch, cache0):
+        params = _cast_params(cfg, params)
+        x, positions, enc_out, img = _prepare_inputs(cfg, params, batch)
+        cache = dict(cache0)
+        for gi, (reps, pattern) in enumerate(cfg.groups()):
+            x, new_gc = _scan_group_prefill(cfg, params, cache, gi, reps,
+                                            pattern, x, positions, enc_out)
+            cache.update(new_gc)
+        logits = _logits(cfg, params, x[:, -1:])
+        return logits, cache
+
+    return prefill_fn
+
+
+def make_decode_fn(cfg: ModelConfig):
+    """Returns decode(params, cache, tokens (B,1), pos) -> (logits, cache)."""
+
+    def decode_fn(params, cache, tokens, pos):
+        params = _cast_params(cfg, params)
+        x = _embed(cfg, params, tokens)
+        if cfg.is_encdec:
+            x = x + sinusoidal_positions(jnp.full((1,), pos, jnp.int32),
+                                         cfg.d_model)[None].astype(x.dtype)
+        for gi, (reps, pattern) in enumerate(cfg.groups()):
+            x, new_gc = _scan_group_decode(cfg, params, cache, gi, reps,
+                                           pattern, x, pos)
+            cache = {**cache, **new_gc}
+        logits = _logits(cfg, params, x)
+        return logits, cache
+
+    return decode_fn

@@ -1,0 +1,156 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+Prefill/train run the factored attention with full K/V materialized per
+block (inside the blockwise flash).  Decode uses the *absorbed* form: the
+KV up-projection is folded into the query and output projections, so the
+per-token cache is only the compressed latent ``c_kv`` (kv_lora_rank) plus
+the shared rope key -- the whole point of MLA (93% KV-cache reduction).
+
+Params (see lm.py builders):
+    wq_a (D, q_lora)        q_norm (q_lora,)        wq_b (q_lora, H*(dn+dr))
+    wkv_a (D, kv_lora+dr)   kv_norm (kv_lora,)      wkv_b (kv_lora, H*(dn+dv))
+    wo (H*dv, D)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import blockwise_attention, decode_attention
+from repro.models.layers import mxu_einsum, rms_norm, rope
+from repro.runtime.sharding import shard
+
+__all__ = ["mla_project_qkv", "mla_attention", "mla_decode",
+           "mla_decode_two_tier"]
+
+
+def _split_q(cfg, q):
+    """(B,S,H*(dn+dr)) -> nope (B,S,H,dn), rope (B,S,H,dr)."""
+    B, S, _ = q.shape
+    q = q.reshape(B, S, cfg.n_heads, cfg.nope_head_dim + cfg.rope_head_dim)
+    return q[..., : cfg.nope_head_dim], q[..., cfg.nope_head_dim:]
+
+
+def mla_project_qkv(cfg, p, x, positions):
+    """Returns q (B,S,H,dn+dr), latent c_kv (B,S,r), k_rope (B,S,dr)."""
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = cq @ p["wq_b"]
+    qn, qr = _split_q(cfg, q)
+    qr = rope(qr, positions, cfg.rope_theta)
+    q_full = jnp.concatenate([qn, qr], axis=-1)
+    q_full = shard(q_full, ("batch", "seq", "heads", "head_dim"), "mla.q")
+
+    ckv_full = x @ p["wkv_a"]  # (B,S,r+dr)
+    c_kv = rms_norm(ckv_full[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_r = ckv_full[..., cfg.kv_lora_rank:][..., None, :]  # (B,S,1,dr) shared head
+    k_r = rope(k_r, positions, cfg.rope_theta)[..., 0, :]
+    return q_full, c_kv, k_r
+
+
+def _up_project_kv(cfg, p, c_kv):
+    """latent (B,T,r) -> k_nope (B,T,H,dn), v (B,T,H,dv)."""
+    B, T, _ = c_kv.shape
+    kv = c_kv @ p["wkv_b"]
+    kv = kv.reshape(B, T, cfg.n_heads, cfg.nope_head_dim + cfg.v_head_dim)
+    return kv[..., : cfg.nope_head_dim], kv[..., cfg.nope_head_dim:]
+
+
+def mla_attention(cfg, p, x, positions, *, causal=True, q_offset=0):
+    """Train/prefill path.  Returns (out, (c_kv, k_rope)) for cache write."""
+    q, c_kv, k_r = mla_project_qkv(cfg, p, x, positions)
+    kn, v = _up_project_kv(cfg, p, c_kv)
+    B, T = kn.shape[:2]
+    k_full = jnp.concatenate(
+        [kn, jnp.broadcast_to(k_r[:, :, None, :], (B, T, cfg.n_heads, cfg.rope_head_dim))],
+        axis=-1)
+    out = blockwise_attention(q, k_full, v, causal=causal, q_offset=q_offset,
+                              scale=(cfg.nope_head_dim + cfg.rope_head_dim) ** -0.5)
+    out = out.reshape(B, -1, cfg.n_heads * cfg.v_head_dim)
+    return out @ p["wo"], (c_kv, k_r)
+
+
+def mla_decode(cfg, p, x, pos, cache_ckv, cache_kr, length):
+    """Absorbed decode: scores and values in latent space.
+
+    x: (B,1,D); caches: (B,T,r) and (B,T,dr).  Returns (out, new caches).
+    """
+    B = x.shape[0]
+    H, dn, dv, r = cfg.n_heads, cfg.nope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, c_kv_new, k_r_new = mla_project_qkv(cfg, p, x, positions)
+    qn, qr = q[..., :dn], q[..., dn:]  # (B,1,H,dn),(B,1,H,dr)
+
+    # write the step's latent into the cache
+    cache_ckv = jax.lax.dynamic_update_slice(cache_ckv, c_kv_new.astype(cache_ckv.dtype),
+                                             (0, pos, 0))
+    cache_kr = jax.lax.dynamic_update_slice(cache_kr, k_r_new.astype(cache_kr.dtype),
+                                            (0, pos, 0))
+
+    # absorb W_uk into the query:  q_lat[h, r] = qn[h, dn] @ w_uk[r, h, dn]
+    # (operands in native dtype, f32 accumulation -- no f32 cache copies)
+    w = p["wkv_b"].reshape(r, H, dn + dv)
+    w_uk, w_uv = w[..., :dn], w[..., dn:]
+    q_lat = mxu_einsum("bshn,rhn->bshr", qn, w_uk)  # (B,1,H,r)
+
+    scale = (dn + cfg.rope_head_dim) ** -0.5
+    s = (mxu_einsum("bshr,btr->bhst", q_lat.astype(cache_ckv.dtype),
+                    cache_ckv)
+         + mxu_einsum("bshd,btd->bhst", qr.astype(cache_kr.dtype),
+                      cache_kr)) * scale
+    idx = jnp.arange(cache_ckv.shape[1])
+    s = jnp.where(idx[None, None, None, :] < length, s, -1e30)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    o_lat = mxu_einsum("bhst,btr->bshr", p_attn.astype(cache_ckv.dtype),
+                       cache_ckv)
+    o = mxu_einsum("bshr,rhv->bshv", o_lat.astype(w_uv.dtype),
+                   w_uv)  # (B,1,H,dv)
+    out = o.reshape(B, 1, H * dv).astype(x.dtype) @ p["wo"]
+    return out, cache_ckv, cache_kr
+
+
+def mla_decode_two_tier(cfg, p, x, pos, main_ckv, main_kr, tckv, tkr):
+    """Absorbed MLA decode over a two-tier latent cache.
+
+    main_* may be sequence-sharded (read-only here); t* is the small
+    replicated append buffer written O(1) per step.  Invariant: positions
+    [0, pos - pos%Tt) in main, the rest in the tail.
+    """
+    B = x.shape[0]
+    H, dn, dv, r = cfg.n_heads, cfg.nope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    Tt = tckv.shape[1]
+    n_tail = pos % Tt
+    main_len = pos - n_tail
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, c_kv_new, k_r_new = mla_project_qkv(cfg, p, x, positions)
+    qn, qr = q[..., :dn], q[..., dn:]
+
+    tckv = jax.lax.dynamic_update_slice(tckv, c_kv_new.astype(tckv.dtype),
+                                        (0, n_tail, 0))
+    tkr = jax.lax.dynamic_update_slice(tkr, k_r_new.astype(tkr.dtype),
+                                       (0, n_tail, 0))
+
+    w = p["wkv_b"].reshape(r, H, dn + dv)
+    w_uk, w_uv = w[..., :dn], w[..., dn:]
+    q_lat = mxu_einsum("bshn,rhn->bshr", qn, w_uk).astype(main_ckv.dtype)
+    qr_l = qr.astype(main_kr.dtype)
+    scale = (dn + cfg.rope_head_dim) ** -0.5
+
+    def scores(ckv, kr):
+        return (mxu_einsum("bshr,btr->bhst", q_lat, ckv)
+                + mxu_einsum("bshd,btd->bhst", qr_l, kr)) * scale
+
+    sm = scores(main_ckv, main_kr)   # (B,H,1,Tm)
+    st = scores(tckv, tkr)           # (B,H,1,Tt)
+    Tm = main_ckv.shape[1]
+    sm = jnp.where(jnp.arange(Tm)[None, None, None, :] < main_len, sm, -1e30)
+    st = jnp.where(jnp.arange(Tt)[None, None, None, :] <= n_tail, st, -1e30)
+    s = jnp.concatenate([sm, st], axis=-1)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    pm = p_attn[..., :Tm].astype(main_ckv.dtype)
+    pt = p_attn[..., Tm:].astype(tckv.dtype)
+    o_lat = (mxu_einsum("bhst,btr->bshr", pm, main_ckv)
+             + mxu_einsum("bhst,btr->bshr", pt, tckv))
+    o = mxu_einsum("bshr,rhv->bshv", o_lat.astype(w_uv.dtype), w_uv)
+    out = o.reshape(B, 1, H * dv).astype(x.dtype) @ p["wo"]
+    return out, tckv, tkr

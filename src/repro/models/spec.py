@@ -1,0 +1,87 @@
+"""Parameter specs: shape + dtype + logical sharding axes, all in one place.
+
+Every model declares its parameters as a flat ``dict[str, ParamSpec]``
+(names are "/"-joined paths; scan groups stack a leading "layers" axis).
+From the same spec dict we derive
+  * real initialized parameters (smoke tests, examples),
+  * ``jax.ShapeDtypeStruct`` stand-ins (the dry-run),
+  * ``NamedSharding`` in/out shardings (via runtime.sharding rules).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamSpec", "init_params", "param_specs_to_shapes", "sub", "add_prefix"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    dtype: Any
+    axes: tuple[str | None, ...]  # logical axes, len == len(shape)
+    init: str = "fan_in"          # fan_in | zeros | ones | embed | small
+
+    def __post_init__(self):
+        if len(self.axes) != len(self.shape):
+            raise ValueError(f"axes {self.axes} rank != shape {self.shape}")
+
+    def struct(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, jnp.dtype(self.dtype))
+
+    def stack(self, reps: int) -> "ParamSpec":
+        """Add a leading scan ("layers") axis."""
+        return ParamSpec((reps,) + self.shape, self.dtype,
+                         ("layers",) + self.axes, self.init)
+
+
+def param_specs_to_shapes(specs: Mapping[str, ParamSpec]) -> dict[str, jax.ShapeDtypeStruct]:
+    return {k: v.struct() for k, v in specs.items()}
+
+
+def _fan_in(spec: ParamSpec) -> int:
+    """Fan-in for init stddev; skips the stacked layers axis."""
+    shape = spec.shape
+    if spec.axes and spec.axes[0] == "layers":
+        shape = shape[1:]
+    if len(shape) >= 2:
+        return int(np.prod(shape[:-1]))
+    return max(1, shape[0] if shape else 1)
+
+
+def init_params(specs: Mapping[str, ParamSpec], rng: jax.Array,
+                dtype_override: Any | None = None) -> dict[str, jax.Array]:
+    """Deterministic per-name initialization of a spec dict."""
+    out: dict[str, jax.Array] = {}
+    for i, name in enumerate(sorted(specs)):
+        spec = specs[name]
+        key = jax.random.fold_in(rng, i)
+        dt = jnp.dtype(dtype_override or spec.dtype)
+        if spec.init == "zeros":
+            out[name] = jnp.zeros(spec.shape, dt)
+        elif spec.init == "ones":
+            out[name] = jnp.ones(spec.shape, dt)
+        elif spec.init == "embed":
+            out[name] = (jax.random.normal(key, spec.shape, jnp.float32) * 0.02).astype(dt)
+        elif spec.init == "small":
+            out[name] = (jax.random.normal(key, spec.shape, jnp.float32) * 1e-4).astype(dt)
+        else:  # fan_in
+            std = _fan_in(spec) ** -0.5
+            out[name] = (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dt)
+    return out
+
+
+def sub(tree: Mapping[str, Any], prefix: str) -> dict[str, Any]:
+    """View of a flat dict under ``prefix/`` with the prefix stripped."""
+    p = prefix + "/"
+    return {k[len(p):]: v for k, v in tree.items() if k.startswith(p)}
+
+
+def add_prefix(tree: Mapping[str, Any], prefix: str) -> dict[str, Any]:
+    return {f"{prefix}/{k}": v for k, v in tree.items()}

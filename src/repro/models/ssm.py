@@ -1,0 +1,185 @@
+"""Mamba-2 block: state-space duality (SSD) in its chunked, MXU-native form.
+
+The SSD scan is expressed as chunk-local matmuls (which map onto the MXU)
+plus a short inter-chunk recurrence over chunk states -- the TPU adaptation
+of the paper's CUDA scan.  This jnp implementation is both the model path
+for dry-runs/CPU and the oracle for the Pallas kernel
+(repro.kernels.ssd_scan).
+
+Block structure (Mamba-2):
+    in_proj -> [z | xBC | dt]; causal depthwise conv on xBC; SSD(x, dt, A, B, C)
+    -> gated RMSNorm(y * silu(z)) -> out_proj; +D*x skip per head.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d, mxu_einsum, rms_norm
+from repro.runtime.sharding import shard
+
+__all__ = ["ssd_chunked", "ssd_step", "mamba2_forward", "mamba2_decode_step"]
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular segment sums: out[..., i, j] = sum_{j<m<=i} a[..., m].
+
+    a: (..., L) -> (..., L, L); entries above the diagonal are -inf-like.
+    """
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., i, j) = cs_i - cs_j
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -1e30)
+
+
+def ssd_chunked(x, dt, A, Bm, C, *, chunk: int, h0=None):
+    """Chunked SSD.
+
+    x:  (B, S, H, P)   inputs per head
+    dt: (B, S, H)      positive step sizes (already softplus'ed)
+    A:  (H,)           negative decay rates
+    Bm: (B, S, H, N)   input->state projection (already head-broadcast)
+    C:  (B, S, H, N)   state->output projection
+    h0: optional initial state (B, H, N, P)
+    Returns (y (B,S,H,P) f32, h_final (B,H,N,P) f32).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    nc = -(-S // L)
+    pad = nc * L - S
+
+    def padc(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+
+    # matmul operands stay in the input dtype (bf16 on the model path);
+    # decay/cumsum math and the carried state are f32.
+    xf = padc(x).reshape(Bsz, nc, L, H, P)
+    dtf = padc(dt).astype(jnp.float32).reshape(Bsz, nc, L, H)
+    Bf = padc(Bm).reshape(Bsz, nc, L, H, N)
+    Cf = padc(C).reshape(Bsz, nc, L, H, N)
+
+    a = dtf * A.astype(jnp.float32)[None, None, None, :]   # (B,nc,L,H) log-decay
+    a_t = a.transpose(0, 1, 3, 2)                          # (B,nc,H,L)
+    cum = jnp.cumsum(a_t, axis=-1)                         # inclusive
+    xdt = (xf.astype(jnp.float32) * dtf[..., None]).astype(x.dtype)
+
+    # -- intra-chunk (quadratic within L, matmul-friendly) ---------------------
+    Lmat = jnp.exp(_segsum(a_t))                            # (B,nc,H,L,L)
+    scores = mxu_einsum("bclhn,bcmhn->bchlm", Cf, Bf) * Lmat
+    y_intra = mxu_einsum("bchlm,bcmhp->bclhp", scores.astype(x.dtype), xdt)
+
+    # -- chunk states -----------------------------------------------------------
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)             # (B,nc,H,L)
+    states = jnp.einsum("bclhn,bchl,bclhp->bchnp",
+                        Bf.astype(jnp.float32), decay_to_end,
+                        xdt.astype(jnp.float32))
+
+    # -- inter-chunk recurrence over nc (tiny sequential scan) -------------------
+    chunk_decay = jnp.exp(cum[..., -1])                     # (B,nc,H)
+
+    def step(h, inp):
+        s_c, d_c = inp
+        h_out = h                                            # state entering chunk
+        h = h * d_c[..., None, None] + s_c
+        return h, h_out
+
+    h_init = (jnp.zeros((Bsz, H, N, P), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_last, h_in = jax.lax.scan(
+        step, h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                     # (B,nc,H,N,P)
+
+    # -- contribution of the incoming state -----------------------------------------
+    decay_from_start = jnp.exp(cum)                          # (B,nc,H,L)
+    y_inter = jnp.einsum("bclhn,bchl,bchnp->bclhp", Cf.astype(jnp.float32),
+                         decay_from_start, h_in)
+
+    y = (y_intra + y_inter).reshape(Bsz, nc * L, H, P)[:, :S]
+    return y, h_last
+
+
+def ssd_step(h, x_t, dt_t, A, B_t, C_t):
+    """Single decode step.  h: (B,H,N,P); x_t: (B,H,P); dt_t: (B,H);
+    B_t/C_t: (B,H,N).  Returns (y_t (B,H,P), h')."""
+    da = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32)[None, :])
+    h = h * da[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", B_t.astype(jnp.float32),
+        (x_t * dt_t[..., None]).astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", C_t.astype(jnp.float32), h)
+    return y, h
+
+
+def _split_zxbcdt(cfg, zxbcdt):
+    d_in, N, G, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in: 2 * d_in + 2 * G * N]
+    dt = zxbcdt[..., 2 * d_in + 2 * G * N:]
+    assert dt.shape[-1] == H
+    return z, xBC, dt
+
+
+def _split_xbc(cfg, xBC):
+    d_in, N, G = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    x = xBC[..., :d_in]
+    Bm = xBC[..., d_in: d_in + G * N]
+    C = xBC[..., d_in + G * N:]
+    return x, Bm, C
+
+
+def _broadcast_groups(cfg, t):
+    """(B,S,G*N) -> (B,S,H,N) by repeating each group over its heads."""
+    B, S, _ = t.shape
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    t = t.reshape(B, S, G, 1, N)
+    t = jnp.broadcast_to(t, (B, S, G, H // G, N))
+    return t.reshape(B, S, H, N)
+
+
+def mamba2_forward(cfg, p, x, *, h0=None, conv_state=None, return_state=False):
+    """Full-sequence Mamba-2 block.  x: (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split_zxbcdt(cfg, zxbcdt)
+    xBC, new_conv = causal_conv1d(xBC, p["conv_w"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, C = _split_xbc(cfg, xBC)
+    xs = xs.reshape(B, S, H, P)
+    xs = shard(xs, ("batch", "seq", "heads", None), "ssm.x")
+    Bm = _broadcast_groups(cfg, Bm)
+    C = _broadcast_groups(cfg, C)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_last = ssd_chunked(xs, dt, A, Bm, C, chunk=cfg.ssm_chunk, h0=h0)
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)  # gated norm
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, (h_last, new_conv)
+    return out
+
+
+def mamba2_decode_step(cfg, p, x, h, conv_state):
+    """One-token step.  x: (B,1,D); h: (B,H,N,P); conv_state: (B,K-1,convdim)."""
+    B = x.shape[0]
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split_zxbcdt(cfg, zxbcdt)
+    xBC, conv_state = causal_conv1d(xBC, p["conv_w"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs, Bm, C = _split_xbc(cfg, xBC)
+    xs = xs.reshape(B, H, P)
+    Bm = _broadcast_groups(cfg, Bm)[:, 0]
+    C = _broadcast_groups(cfg, C)[:, 0]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))[:, 0]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h = ssd_step(h, xs, dt, A, Bm, C)
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], h, conv_state

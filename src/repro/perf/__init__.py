@@ -1,0 +1,3 @@
+from .hlo_analysis import CostReport, analyze_hlo
+
+__all__ = ["CostReport", "analyze_hlo"]

@@ -1,0 +1,27 @@
+"""Distributed runtime: sharding rules, collectives, compression, fault tolerance."""
+
+from .sharding import (
+    LOGICAL_AXES,
+    ShardingRules,
+    current_mesh,
+    current_rules,
+    logical_to_spec,
+    serve_rules,
+    shard,
+    sharding_report,
+    train_rules,
+    use_rules,
+)
+
+__all__ = [
+    "LOGICAL_AXES",
+    "ShardingRules",
+    "current_mesh",
+    "current_rules",
+    "logical_to_spec",
+    "serve_rules",
+    "shard",
+    "sharding_report",
+    "train_rules",
+    "use_rules",
+]

@@ -1,0 +1,80 @@
+"""Explicit collective helpers (shard_map building blocks).
+
+The baseline distribution path is GSPMD (pjit + sharding constraints); these
+helpers exist for the places where explicit scheduling beats the
+auto-partitioner -- hierarchical gradient reductions, the shard_map MoE
+all-to-all, and distributed flash-decode (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["hierarchical_pmean", "all_to_all_experts", "flash_decode_psum",
+           "shard_map_moe_dispatch"]
+
+
+def hierarchical_pmean(x: jax.Array, inner_axis: str, outer_axis: str | None):
+    """Two-level DP mean: reduce-scatter+all-gather inside the pod (ICI),
+    then one all-reduce across pods (DCN).  For use inside shard_map."""
+    n_in = jax.lax.psum(1, inner_axis)
+    x = jax.lax.psum_scatter(x.reshape(n_in, -1), inner_axis,
+                             scatter_dimension=0, tiled=False)
+    if outer_axis is not None:
+        x = jax.lax.psum(x, outer_axis)
+        n_out = jax.lax.psum(1, outer_axis)
+    else:
+        n_out = 1
+    x = jax.lax.all_gather(x, inner_axis, axis=0, tiled=False)
+    return x.reshape(-1) / (n_in * n_out)
+
+
+def all_to_all_experts(buf: jax.Array, axis: str):
+    """(E, cap, D) expert buffer: exchange so each shard holds its experts'
+    tokens from every peer.  E must be divisible by the axis size."""
+    n = jax.lax.psum(1, axis)
+    E, cap, D = buf.shape
+    b = buf.reshape(n, E // n, cap, D)
+    b = jax.lax.all_to_all(b, axis, split_axis=0, concat_axis=1, tiled=False)
+    return b.reshape(E // n, n * cap, D)
+
+
+def all_to_all_combine(buf: jax.Array, axis: str, E: int):
+    """Inverse of all_to_all_experts: (E/n, n*cap, D) -> (E, cap, D)."""
+    n = jax.lax.psum(1, axis)
+    e_loc, ncap, D = buf.shape
+    cap = ncap // n
+    b = buf.reshape(e_loc, n, cap, D)
+    b = jax.lax.all_to_all(b, axis, split_axis=1, concat_axis=0, tiled=False)
+    return b.reshape(E, cap, D)
+
+
+def flash_decode_psum(num: jax.Array, den: jax.Array, m: jax.Array, axis: str):
+    """Combine per-shard online-softmax partials across a KV-sharded axis.
+
+    num: (..., d) unnormalized weighted values; den: (...,); m: (...,) local
+    max.  Returns the exact softmax-weighted value as if KV were unsharded.
+    """
+    g_m = jax.lax.pmax(m, axis)
+    corr = jnp.exp(m - g_m)
+    num = jax.lax.psum(num * corr[..., None], axis)
+    den = jax.lax.psum(den * corr, axis)
+    return num / jnp.maximum(den, 1e-30)[..., None]
+
+
+def shard_map_moe_dispatch(xf, e_flat, g_flat, keep, pos_in_e, cap, axis: str,
+                           n_experts: int):
+    """Explicit-EP dispatch skeleton for the shard_map MoE variant.
+
+    Each shard scatters its local tokens into a full (E, cap_local, D)
+    buffer, all_to_all's expert-major shards, and returns the local-expert
+    buffer (E/n, n*cap_local, D).  Combine is the transpose.
+    """
+    T, D = xf.shape
+    dest = jnp.where(keep, e_flat * cap + pos_in_e, n_experts * cap)
+    tok = jnp.arange(e_flat.shape[0]) // (e_flat.shape[0] // T)
+    buf = jnp.zeros((n_experts * cap + 1, D), xf.dtype).at[dest].set(xf[tok])
+    buf = buf[:-1].reshape(n_experts, cap, D)
+    return all_to_all_experts(buf, axis)

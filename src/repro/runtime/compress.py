@@ -1,0 +1,53 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Used for the *cross-pod* leg of the hierarchical DP reduction: inside a pod
+gradients reduce-scatter in bf16 over ICI; across pods (DCN, the scarce
+link) shards are exchanged int8.  Error feedback keeps the quantization
+residual locally and re-injects it next step, which preserves convergence
+(Karimireddy et al.); the unit tests verify the residual-norm bound.
+
+At jax level the quantize->exchange->dequantize pipeline is expressed as a
+value transformation on the (already reduced) gradient, which is
+numerically identical for SPMD-replicated DP and keeps the dry-run HLO
+honest about the extra convert/mul traffic.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "init_error_feedback",
+           "compress_with_feedback"]
+
+
+def quantize_int8(x: jax.Array, axis=None):
+    """Symmetric per-tensor (or per-axis) int8 quantization."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params: Mapping[str, Any]) -> dict[str, jax.Array]:
+    return {k: jnp.zeros(v.shape, jnp.float32) for k, v in params.items()}
+
+
+def compress_with_feedback(grads: Mapping[str, jax.Array],
+                           ef: Mapping[str, jax.Array]):
+    """g_hat = Q(g + e);  e' = g + e - g_hat.  Returns (g_hat, e')."""
+    new_g, new_e = {}, {}
+    for k, g in grads.items():
+        corrected = g.astype(jnp.float32) + ef[k]
+        q, s = quantize_int8(corrected)
+        g_hat = dequantize_int8(q, s)
+        new_g[k] = g_hat.astype(g.dtype)
+        new_e[k] = corrected - g_hat
+    return new_g, new_e

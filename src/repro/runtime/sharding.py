@@ -1,0 +1,269 @@
+"""Logical-axis sharding rules (DP / TP / EP / SP / FSDP).
+
+Every tensor in the model is annotated with *logical* axis names
+("batch", "heads", "ff", "experts", ...).  A :class:`ShardingRules` table
+maps logical names to mesh axes; ``shard(x, axes)`` applies the mapping as a
+``with_sharding_constraint`` when a mesh is active and is a no-op otherwise
+(so the exact same model code runs in single-device smoke tests, the 512-way
+dry-run, and a real pod).
+
+Divisibility fallback: a rule is applied per-tensor only when the dimension
+is divisible by the mesh axis size; otherwise the axis is dropped for that
+tensor and the event is recorded in :func:`sharding_report` (e.g. llama4's
+40 heads on a 16-way model axis -- GSPMD would pad; we prefer the explicit,
+inspectable fallback and treat head padding as a tuning knob, see
+EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "LOGICAL_AXES", "ShardingRules", "use_rules", "current_rules",
+    "current_mesh", "shard", "logical_to_spec", "train_rules", "serve_rules",
+    "sharding_report", "named_sharding",
+]
+
+# The logical axis vocabulary used across the model zoo.
+LOGICAL_AXES = (
+    "batch",        # global batch                         -> DP ("pod","data")
+    "seq",          # sequence (activations)               -> SP (optional)
+    "d_model",      # residual stream
+    "heads",        # attention query heads                -> TP
+    "kv_heads",     # attention kv heads                   -> TP
+    "head_dim",
+    "qkv",          # fused q/k/v projection output        -> TP
+    "ff",           # feed-forward hidden                  -> TP
+    "vocab",        # embedding/vocab                      -> TP
+    "experts",      # MoE experts                          -> EP
+    "expert_cap",   # per-expert capacity buffer
+    "kv_lora",      # MLA latent
+    "state",        # SSM / RG-LRU recurrent state width   -> TP
+    "cache_seq",    # KV-cache sequence dim (decode)       -> seq-sharded KV
+    "layers",       # stacked scan axis (never sharded)
+    "conv",         # conv kernel taps
+    "fsdp",         # the non-TP dim of a weight; shards over data in train
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mapping logical axis -> mesh axis (or tuple of mesh axes, or None)."""
+
+    rules: Mapping[str, tuple[str, ...] | str | None]
+    name: str = "custom"
+
+    def mesh_axes(self, logical: str | None):
+        if logical is None:
+            return None
+        if logical not in self.rules:
+            return None
+        return self.rules[logical]
+
+
+_tls = threading.local()
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_tls, "rules", None)
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_tls, "mesh", None)
+
+
+_REPORT: dict[str, list[str]] = {}
+
+
+def sharding_report() -> dict[str, list[str]]:
+    """Divisibility fallbacks recorded since process start."""
+    return _REPORT
+
+
+def _record_fallback(context: str, msg: str) -> None:
+    _REPORT.setdefault(context, [])
+    if msg not in _REPORT[context]:
+        _REPORT[context].append(msg)
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None, mesh: Mesh | None = None):
+    """Activate rules (+ mesh) for model code traced inside the context."""
+    prev_r = getattr(_tls, "rules", None)
+    prev_m = getattr(_tls, "mesh", None)
+    _tls.rules, _tls.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _tls.rules, _tls.mesh = prev_r, prev_m
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def logical_to_spec(axes: Sequence[str | None],
+                    shape: Sequence[int] | None = None,
+                    rules: ShardingRules | None = None,
+                    mesh: Mesh | None = None,
+                    context: str = "") -> P:
+    """Build a PartitionSpec from logical axes, with divisibility fallback."""
+    rules = rules if rules is not None else current_rules()
+    mesh = mesh if mesh is not None else current_mesh()
+    if rules is None:
+        return P()
+    used: set[str] = set()
+    out = []
+    for i, name in enumerate(axes):
+        m = rules.mesh_axes(name)
+        if m is None:
+            out.append(None)
+            continue
+        m_t = (m,) if isinstance(m, str) else tuple(m)
+        # one mesh axis may appear only once in a spec
+        m_t = tuple(a for a in m_t if a not in used)
+        if not m_t:
+            out.append(None)
+            continue
+        if shape is not None and mesh is not None:
+            size = _axis_size(mesh, m_t)
+            if shape[i] % size != 0:
+                _record_fallback(
+                    context or rules.name,
+                    f"axis {name!r} dim {shape[i]} not divisible by {m_t}={size}; replicated")
+                out.append(None)
+                continue
+        used.update(m_t)
+        out.append(m_t[0] if len(m_t) == 1 else m_t)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(axes: Sequence[str | None], shape: Sequence[int] | None = None,
+                   rules: ShardingRules | None = None, mesh: Mesh | None = None,
+                   context: str = "") -> NamedSharding | None:
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None:
+        return None
+    spec = logical_to_spec(axes, shape, rules, mesh, context)
+    return NamedSharding(mesh, spec)
+
+
+def shard(x: jax.Array, axes: Sequence[str | None], context: str = "") -> jax.Array:
+    """``with_sharding_constraint`` by logical names; no-op without a mesh."""
+    rules, mesh = current_rules(), current_mesh()
+    if rules is None or mesh is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"{len(axes)} logical axes for rank-{x.ndim} tensor ({context})")
+    spec = logical_to_spec(axes, x.shape, rules, mesh, context)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Canonical rule tables.
+#
+# Mesh axes: ("data", "model") single pod, ("pod", "data", "model") multi-pod.
+# "pod" extends the DP group hierarchically (gradient reduction crosses pods
+# once per step; everything else stays inside a pod).
+# ---------------------------------------------------------------------------
+
+def train_rules(multi_pod: bool = False, *, fsdp: bool = True,
+                seq_shard: bool = False, tp: bool = True) -> ShardingRules:
+    """DP over (pod, data); TP/EP over model; FSDP shards params over data.
+
+    ``seq_shard`` additionally maps activation "seq" onto the model axis
+    (sequence parallelism for long-context training; off by default).
+
+    ``tp=False`` turns off tensor parallelism: the batch shards over BOTH
+    axes (data and model become one big DP group) and weights are fully
+    FSDP-sharded across it.  For small-activation models the per-layer
+    weight all-gather (params bytes) is far cheaper than TP's per-layer
+    activation all-reduces (tokens x d_model bytes) -- see EXPERIMENTS.md
+    §Perf, internlm2-1.8b.
+    """
+    dp = ("pod", "data") if multi_pod else ("data",)
+    if not tp:
+        # single pod: batch shards over all 256 devices.  Multi-pod: the
+        # global batch (256) cannot split 512 ways, so batch shards over
+        # (pod, data) and the *sequence* shards over the former model axis
+        # -- 512-way token parallelism, weights ZeRO-3 over everything.
+        all_axes = dp + ("model",)
+        batch_axes = dp if multi_pod else all_axes
+        r: dict[str, tuple[str, ...] | str | None] = {
+            "batch": batch_axes,
+            "seq": "model" if multi_pod else None,
+            "d_model": None, "heads": None, "kv_heads": None,
+            "head_dim": None, "qkv": None, "ff": None, "vocab": None,
+            "experts": None, "expert_cap": None, "kv_lora": None,
+            "state": None, "cache_seq": None, "layers": None, "conv": None,
+            "fsdp": all_axes if fsdp else None,
+        }
+        return ShardingRules(r, name="train/no-tp")
+    r = {
+        "batch": dp,
+        "seq": "model" if seq_shard else None,
+        "d_model": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "qkv": "model",
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_cap": None,
+        "kv_lora": None,
+        "state": "model",
+        "cache_seq": None,
+        "layers": None,
+        "conv": None,
+        # FSDP: the non-TP dimension of 2D weights shards over data.
+        "fsdp": ("data",) if fsdp else None,
+    }
+    return ShardingRules(r, name="train")
+
+
+def serve_rules(multi_pod: bool = False, *, kv_shard: str = "heads") -> ShardingRules:
+    """Inference rules: no FSDP (weights TP only), KV cache layout selectable.
+
+    ``kv_shard``: "heads" shards the cache's kv-head axis over model;
+    "seq" shards the cache sequence axis instead (for small-kv-head models
+    the only even partition -- turns decode attention into a distributed
+    flash-decode, reduction handled by GSPMD).
+    """
+    dp = ("pod", "data") if multi_pod else ("data",)
+    r: dict[str, tuple[str, ...] | str | None] = {
+        "batch": dp,
+        "seq": None,
+        "d_model": None,
+        "heads": "model",
+        "kv_heads": "model" if kv_shard == "heads" else None,
+        "head_dim": None,
+        "qkv": "model",
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_cap": None,
+        "kv_lora": None,
+        "state": "model",
+        "cache_seq": "model" if kv_shard == "seq" else None,
+        "layers": None,
+        "conv": None,
+        "fsdp": None,
+    }
+    return ShardingRules(r, name=f"serve/{kv_shard}")

@@ -1,0 +1,3 @@
+from .engine import Engine, SessionStore
+
+__all__ = ["Engine", "SessionStore"]

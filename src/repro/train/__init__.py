@@ -1,0 +1,16 @@
+"""Training: AdamW (from scratch), windowed out-of-core optimizer, loop."""
+
+from .optimizer import (
+    AdamWConfig,
+    adamw_update,
+    cosine_schedule,
+    global_norm,
+    init_opt_state,
+)
+from .offload_opt import OutOfCoreAdamW
+from .loop import Trainer, TrainConfig
+
+__all__ = [
+    "AdamWConfig", "adamw_update", "cosine_schedule", "global_norm",
+    "init_opt_state", "OutOfCoreAdamW", "Trainer", "TrainConfig",
+]

@@ -1,0 +1,221 @@
+"""Training loop with windows-backed transparent checkpointing.
+
+The loop wires every substrate together:
+
+* pjit'd train step (grad accumulation over microbatches via lax.scan,
+  optional int8+EF compression stage, AdamW fused on device) -- or, in
+  *offload* mode, a grads-only device step plus the out-of-core AdamW
+  walking storage windows (the paper's technique as the optimizer).
+* transparent checkpointing: params (+ fused opt state) live in an A/B
+  double-buffered CheckpointManager; saves are selective (dirty blocks
+  only) and asynchronous (flush overlaps the next steps).
+* fault hooks: heartbeats + straggler detector feed ``plan_recovery``;
+  ``Trainer.run`` restores from the last valid manifest, so a kill at any
+  point resumes exactly (see tests/test_train_loop.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.core.comm import Communicator
+from repro.models import init_params, make_loss_fn, param_specs
+from repro.models.config import ModelConfig
+from repro.models.spec import param_specs_to_shapes
+from repro.runtime.compress import compress_with_feedback, init_error_feedback
+from repro.runtime.fault import HeartbeatMonitor, StragglerDetector
+from repro.train.offload_opt import OutOfCoreAdamW
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+__all__ = ["TrainConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    microbatches: int = 1
+    mode: str = "fused"            # fused | offload
+    ckpt_dir: str | None = None
+    ckpt_every: int = 0
+    ckpt_async: bool = True
+    compression: bool = False      # int8 + error feedback on grads
+    log_every: int = 10
+    seed: int = 0
+    offload_memory_budget: int | None = None
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, opt_cfg: AdamWConfig,
+                 tcfg: TrainConfig, *, comm: Communicator | None = None,
+                 mesh=None, rules=None):
+        self.model_cfg = model_cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.comm = comm or Communicator(1)
+        self.mesh = mesh
+        self.rules = rules
+        self.loss_fn = make_loss_fn(model_cfg)
+        self.specs = param_specs(model_cfg)
+        self.metrics_log: list[dict[str, float]] = []
+        self.hb = HeartbeatMonitor(self.comm.size)
+        self.straggler = StragglerDetector(self.comm.size)
+        self._build_steps()
+        self._ckpt: CheckpointManager | None = None
+        self._oo_opt: OutOfCoreAdamW | None = None
+
+    # -- step builders --------------------------------------------------------
+    def _grad_fn(self):
+        vg = jax.value_and_grad(self.loss_fn, has_aux=True)
+
+        def accum(params, batch):
+            """batch leaves have a leading microbatch axis."""
+            def micro(carry, mb):
+                (l_sum, g_sum) = carry
+                (loss, _), grads = vg(params, mb)
+                return (l_sum + loss,
+                        {k: g_sum[k] + grads[k] for k in g_sum}), None
+
+            zero = {k: jnp.zeros(v.shape, jnp.float32)
+                    for k, v in params.items()}
+            (l_sum, g_sum), _ = jax.lax.scan(micro, (jnp.zeros(()), zero), batch)
+            n = self.tcfg.microbatches
+            return l_sum / n, {k: v / n for k, v in g_sum.items()}
+
+        return accum
+
+    def _build_steps(self):
+        accum = self._grad_fn()
+        compression = self.tcfg.compression
+
+        def fused_step(params, opt_state, ef, batch):
+            loss, grads = accum(params, batch)
+            if compression:
+                grads, ef = compress_with_feedback(grads, ef)
+            params, opt_state, stats = adamw_update(params, grads, opt_state,
+                                                    self.opt_cfg)
+            return params, opt_state, ef, loss, stats
+
+        def grads_step(params, batch):
+            loss, grads = accum(params, batch)
+            return loss, {k: g.astype(jnp.bfloat16) for k, g in grads.items()}
+
+        self._fused_step = jax.jit(fused_step, donate_argnums=(0, 1, 2))
+        self._grads_step = jax.jit(grads_step)
+
+    # -- checkpoint plumbing -----------------------------------------------------
+    def _ckpt_specs(self, params) -> dict[str, tuple[tuple[int, ...], Any]]:
+        out = {k: (tuple(v.shape), np.dtype(jnp.dtype(v.dtype).name))
+               for k, v in params.items()}
+        if self.tcfg.mode == "fused":
+            for k, v in params.items():
+                out[f"opt_m/{k}"] = (tuple(v.shape), np.float32)
+                out[f"opt_v/{k}"] = (tuple(v.shape), np.float32)
+            out["opt_step"] = ((), np.int32)
+        return out
+
+    def _ckpt_tree(self, params, opt_state):
+        tree = {k: np.asarray(v) for k, v in params.items()}
+        if self.tcfg.mode == "fused":
+            tree.update({f"opt_m/{k}": np.asarray(v)
+                         for k, v in opt_state["m"].items()})
+            tree.update({f"opt_v/{k}": np.asarray(v)
+                         for k, v in opt_state["v"].items()})
+            tree["opt_step"] = np.asarray(opt_state["step"])
+        return tree
+
+    # -- main entry ---------------------------------------------------------------
+    def run(self, data_iter: Iterator[dict[str, np.ndarray]],
+            params: dict | None = None, *, restore: bool = True,
+            stop_after: int | None = None,
+            on_step: Callable[[int, dict], None] | None = None):
+        tcfg = self.tcfg
+        rng = jax.random.PRNGKey(tcfg.seed)
+        if params is None:
+            params = init_params(self.specs, rng)
+        if tcfg.mode == "fused":
+            opt_state = init_opt_state(params)
+        else:
+            shapes = {k: (tuple(v.shape), v.dtype) for k, v in params.items()}
+            self._oo_opt = OutOfCoreAdamW(
+                self.comm, shapes, tcfg.ckpt_dir or "/tmp/repro_opt",
+                self.opt_cfg, memory_budget=tcfg.offload_memory_budget)
+            self._oo_opt.initialize(params)
+            params = {k: jnp.asarray(v, jnp.bfloat16)
+                      for k, v in self._oo_opt.masters().items()}
+            opt_state = None
+        ef = init_error_feedback(params) if tcfg.compression else {
+            k: jnp.zeros((1,), jnp.float32) for k in list(params)[:1]}
+
+        start_step = 0
+        if tcfg.ckpt_dir and tcfg.ckpt_every:
+            self._ckpt = CheckpointManager(tcfg.ckpt_dir, self.comm,
+                                           self._ckpt_specs(params))
+            if restore:
+                res = self._ckpt.restore()
+                if res is not None:
+                    start_step = res.step
+                    params = {k: jnp.asarray(res.tree[k])
+                              for k in self.specs}
+                    if tcfg.mode == "fused":
+                        opt_state = {
+                            "m": {k: jnp.asarray(res.tree[f"opt_m/{k}"])
+                                  for k in self.specs},
+                            "v": {k: jnp.asarray(res.tree[f"opt_v/{k}"])
+                                  for k in self.specs},
+                            "step": jnp.asarray(res.tree["opt_step"]),
+                        }
+
+        end = tcfg.steps if stop_after is None else min(tcfg.steps,
+                                                        start_step + stop_after)
+        step = start_step
+        for step in range(start_step, end):
+            batch = next(data_iter)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            t0 = time.monotonic()
+            if tcfg.mode == "fused":
+                params, opt_state, ef, loss, stats = self._fused_step(
+                    params, opt_state, ef, batch)
+            else:
+                loss, grads = self._grads_step(params, batch)
+                new_p = self._oo_opt.update(
+                    {k: np.asarray(v, np.float32) for k, v in grads.items()})
+                params = {k: jnp.asarray(v, jnp.bfloat16)
+                          for k, v in new_p.items()}
+                stats = {"lr": 0.0, "gnorm": 0.0}
+            dt = time.monotonic() - t0
+            self.hb.beat(self.comm.rank, step)
+            self.straggler.record(self.comm.rank, dt)
+            rec = {"step": step, "loss": float(loss), "time": dt,
+                   "lr": float(stats["lr"])}
+            self.metrics_log.append(rec)
+            if on_step:
+                on_step(step, rec)
+            if tcfg.log_every and step % tcfg.log_every == 0:
+                print(f"step {step:5d} loss {rec['loss']:.4f} "
+                      f"({dt*1e3:.0f} ms)", flush=True)
+            if self._ckpt and tcfg.ckpt_every and (step + 1) % tcfg.ckpt_every == 0:
+                tree = self._ckpt_tree(params, opt_state)
+                if tcfg.ckpt_async:
+                    self._ckpt.save_async(step + 1, tree)
+                else:
+                    self._ckpt.save(step + 1, tree)
+            if tcfg.mode == "offload" and self._oo_opt is not None \
+                    and tcfg.ckpt_every and (step + 1) % tcfg.ckpt_every == 0:
+                self._oo_opt.sync()
+
+        if self._ckpt:
+            self._ckpt.wait()
+        return params, opt_state
+
+    def close(self):
+        if self._ckpt:
+            self._ckpt.close()
+        if self._oo_opt:
+            self._oo_opt.free()

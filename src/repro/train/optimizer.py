@@ -1,0 +1,76 @@
+"""AdamW with warmup-cosine schedule and global-norm clipping (from scratch)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "cosine_schedule", "init_opt_state", "adamw_update",
+           "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree: Mapping[str, jax.Array]):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in tree.values()))
+
+
+def init_opt_state(params: Mapping[str, jax.Array]):
+    return {
+        "m": {k: jnp.zeros(v.shape, jnp.float32) for k, v in params.items()},
+        "v": {k: jnp.zeros(v.shape, jnp.float32) for k, v in params.items()},
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _decayable(name: str) -> bool:
+    leaf = name.split("/")[-1]
+    return not ("norm" in leaf or leaf.startswith("b")
+                or leaf in ("A_log", "D", "dt_bias", "lam"))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step on flat dicts.  Returns (params', state', stats)."""
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, state["step"])
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-12)) \
+        if cfg.clip_norm else 1.0
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    new_p, new_m, new_v = {}, {}, {}
+    for k, p in params.items():
+        g = grads[k].astype(jnp.float32) * scale
+        m = cfg.b1 * state["m"][k] + (1 - cfg.b1) * g
+        v = cfg.b2 * state["v"][k] + (1 - cfg.b2) * jnp.square(g)
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if cfg.weight_decay and _decayable(k):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p[k] = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        new_m[k] = m
+        new_v[k] = v
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"lr": lr, "gnorm": gn}

@@ -1,0 +1,18 @@
+import os
+
+# tests run on the single default host device -- the dry-run (and only the
+# dry-run) forces 512 devices in its own subprocess.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def tmp_file(tmp_path):
+    return str(tmp_path / "backing.bin")

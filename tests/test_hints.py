@@ -1,0 +1,95 @@
+"""Hint parsing: paper §2.1 semantics, including hypothesis fuzzing."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.hints import HintError, WindowHints
+
+
+def test_defaults_are_memory():
+    h = WindowHints.from_info(None)
+    assert not h.is_storage and not h.is_combined
+    assert h.memory_bytes(1000) == 1000
+
+
+def test_storage_requires_filename():
+    with pytest.raises(HintError):
+        WindowHints.from_info({"alloc_type": "storage"})
+
+
+def test_paper_listing1():
+    h = WindowHints.from_info({
+        "alloc_type": "storage",
+        "storage_alloc_filename": "/path/tofile",
+        "storage_alloc_offset": "0",
+        "storage_alloc_unlink": "false",
+    })
+    assert h.is_storage and h.filename == "/path/tofile"
+    assert h.offset == 0 and h.unlink is False
+    assert h.memory_bytes(1 << 20) == 0  # pure storage window
+
+
+def test_combined_factor_semantics():
+    h = WindowHints.from_info({
+        "alloc_type": "storage", "storage_alloc_filename": "f",
+        "storage_alloc_factor": "0.5"})
+    assert h.is_combined
+    assert h.memory_bytes(1000) == 500
+
+
+def test_auto_factor():
+    h = WindowHints.from_info({
+        "alloc_type": "storage", "storage_alloc_filename": "f",
+        "storage_alloc_factor": "auto"})
+    assert h.memory_bytes(100, memory_budget=1000) == 100   # fits -> memory
+    assert h.memory_bytes(5000, memory_budget=1000) == 1000  # spill remainder
+    with pytest.raises(HintError):
+        h.memory_bytes(100)  # auto without budget
+
+
+def test_unknown_keys_ignored():
+    h = WindowHints.from_info({"definitely_not_a_hint": "x"})
+    assert h.alloc_type == "memory"
+
+
+@pytest.mark.parametrize("key,val", [
+    ("alloc_type", "disk"),
+    ("storage_alloc_factor", "1.5"),
+    ("storage_alloc_factor", "nan-ish"),
+    ("storage_alloc_order", "sideways"),
+    ("storage_alloc_unlink", "maybe"),
+    ("storage_alloc_offset", "-3"),
+    ("striping_factor", "0"),
+])
+def test_malformed_values_raise(key, val):
+    info = {"alloc_type": "storage", "storage_alloc_filename": "f", key: val}
+    with pytest.raises(HintError):
+        WindowHints.from_info(info)
+
+
+@given(factor=st.floats(min_value=0.0, max_value=1.0, allow_nan=False),
+       size=st.integers(min_value=0, max_value=1 << 30))
+def test_factor_partition_invariant(factor, size):
+    h = WindowHints.from_info({
+        "alloc_type": "storage", "storage_alloc_filename": "f",
+        "storage_alloc_factor": str(factor)})
+    mem = h.memory_bytes(size)
+    assert 0 <= mem <= size  # memory part never exceeds the allocation
+
+
+@given(info=st.dictionaries(
+    st.sampled_from(["alloc_type", "storage_alloc_filename",
+                     "storage_alloc_offset", "storage_alloc_factor",
+                     "storage_alloc_order", "storage_alloc_unlink",
+                     "storage_alloc_discard", "access_style", "junk_key"]),
+    st.sampled_from(["memory", "storage", "f", "0", "1", "0.25", "auto",
+                     "memory_first", "storage_first", "true", "false",
+                     "read_mostly", "junk"])))
+def test_parse_never_crashes_unexpectedly(info):
+    """from_info either returns valid hints or raises HintError -- never
+    anything else."""
+    try:
+        h = WindowHints.from_info(info)
+        assert h.alloc_type in ("memory", "storage")
+    except HintError:
+        pass

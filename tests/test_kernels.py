@@ -1,0 +1,104 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _mk(shape, key, dtype=jnp.float32, scale=0.4):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+@pytest.mark.parametrize("B,H,K,S,T,d", [
+    (1, 2, 2, 64, 64, 32),
+    (2, 4, 2, 96, 96, 16),     # GQA 2:1
+    (1, 4, 1, 40, 72, 32),     # MQA, ragged sizes (padding path)
+    (2, 2, 2, 33, 65, 64),
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 24)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, K, S, T, d, causal, window, dtype):
+    if causal and S != T:
+        pytest.skip("causal assumes aligned q/kv ends")
+    q = _mk((B, H, S, d), 0, dtype)
+    k = _mk((B, K, T, d), 1, dtype)
+    v = _mk((B, K, T, d), 2, dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              q_block=32, kv_block=32, impl="interpret")
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,H,S,P,N,chunk", [
+    (1, 2, 64, 16, 8, 32),
+    (2, 3, 50, 8, 16, 16),     # ragged (padding path)
+    (1, 1, 128, 32, 4, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(B, H, S, P, N, chunk, dtype):
+    x = _mk((B, H, S, P), 3, dtype)
+    dt = jax.nn.softplus(_mk((B, H, S), 4)).astype(jnp.float32)
+    A = -jnp.exp(_mk((H,), 5, scale=0.3))
+    Bm = _mk((B, H, S, N), 6, dtype)
+    C = _mk((B, H, S, N), 7, dtype)
+    out = ops.ssd_scan(x, dt, A, Bm, C, chunk=chunk, impl="interpret")
+    want = ref.ssd_scan_ref(x, dt, A, Bm, C)
+    denom = max(1e-3, float(jnp.abs(want).max()))
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    assert float(jnp.abs(out - want).max()) / denom < tol
+
+
+@pytest.mark.parametrize("B,S,W,block", [(1, 64, 16, 32), (2, 70, 32, 32),
+                                         (1, 256, 8, 64)])
+def test_rg_lru_sweep(B, S, W, block):
+    a = jax.nn.sigmoid(_mk((B, S, W), 8))
+    gx = _mk((B, S, W), 9)
+    out = ops.rg_lru_scan(a, gx, block=block, impl="interpret")
+    want = ref.rg_lru_ref(a, gx)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_dirty_diff_sweep(dtype):
+    rng = jax.random.PRNGKey(10)
+    cur = (jax.random.normal(rng, (7, 512)) * 10).astype(dtype)
+    snap = cur.at[2, 17].add(jnp.asarray(1, dtype)).at[5, 0].add(
+        jnp.asarray(1, dtype))
+    flags = ops.dirty_blocks(cur, snap, block_elems=512, impl="interpret")
+    want = ref.dirty_diff_ref(cur.reshape(7, -1), snap.reshape(7, -1))
+    assert (np.asarray(flags) == np.asarray(want)).all()
+    assert flags[2] == 1 and flags[5] == 1 and int(flags.sum()) == 2
+
+
+def test_dirty_diff_feeds_tracker():
+    """Device-side diff plugs into the host DirtyTracker bitmap."""
+    from repro.core.storage import DirtyTracker
+    cur = jnp.arange(4096, dtype=jnp.float32)
+    snap = cur.at[1030].add(1.0)
+    flags = ops.dirty_blocks(cur, snap, block_elems=1024, impl="ref")
+    t = DirtyTracker(4096 * 4, page_size=1024 * 4)
+    t.mark_blocks(np.asarray(flags, bool))
+    assert t.dirty_count == 1 and t.is_dirty(1)
+
+
+def test_flash_matches_model_attention():
+    """Kernel layout (B,H,S,d) == model layout (B,S,H,d) blockwise path."""
+    from repro.models.attention import blockwise_attention
+    B, H, K, S, d = 2, 4, 2, 64, 32
+    q = _mk((B, S, H, d), 11)
+    k = _mk((B, S, K, d), 12)
+    v = _mk((B, S, K, d), 13)
+    a = blockwise_attention(q, k, v, causal=True, q_block=32, kv_block=32)
+    b = ops.flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=True,
+                            q_block=32, kv_block=32, impl="interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b.transpose(0, 2, 1, 3)),
+                               atol=2e-5, rtol=2e-5)

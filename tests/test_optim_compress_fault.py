@@ -1,0 +1,142 @@
+"""Optimizer math, gradient compression, fault-tolerance planning."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.compress import (compress_with_feedback, dequantize_int8,
+                                    init_error_feedback, quantize_int8)
+from repro.runtime.fault import (HeartbeatMonitor, StragglerDetector,
+                                 plan_recovery)
+from repro.train import (AdamWConfig, adamw_update, cosine_schedule,
+                         global_norm, init_opt_state)
+
+
+# -- AdamW vs a literal numpy transcription -----------------------------------
+
+def test_adamw_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    p = {"w": rng.standard_normal((8, 4)).astype(np.float32)}
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=100,
+                      clip_norm=0.0, weight_decay=0.0)
+    jp = {k: jnp.asarray(v) for k, v in p.items()}
+    st_ = init_opt_state(jp)
+    m = np.zeros_like(p["w"]); v = np.zeros_like(p["w"])
+    w = p["w"].copy()
+    for t in range(1, 4):
+        g = rng.standard_normal(w.shape).astype(np.float32)
+        jp, st_, _ = adamw_update(jp, {"w": jnp.asarray(g)}, st_, cfg)
+        m = 0.9 * m + 0.1 * g
+        v = 0.95 * v + 0.05 * g * g
+        mh = m / (1 - 0.9 ** t)
+        vh = v / (1 - 0.95 ** t)
+        w = w - 1e-2 * mh / (np.sqrt(vh) + 1e-8)
+        np.testing.assert_allclose(np.asarray(jp["w"]), w, rtol=1e-4, atol=1e-5)
+
+
+def test_clip_norm_applied():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=0, clip_norm=1.0, weight_decay=0.0)
+    p = {"w": jnp.zeros(4)}
+    g = {"w": jnp.full(4, 100.0)}
+    _, _, stats = adamw_update(p, g, init_opt_state(p), cfg)
+    assert float(stats["gnorm"]) == pytest.approx(200.0)
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(cosine_schedule(cfg, s)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0          # warmup rises
+    assert abs(lrs[10] - 1.0) < 0.02       # peak after warmup
+    assert lrs[-1] == pytest.approx(0.1, abs=0.02)  # decays to floor
+    assert all(l > 0 for l in lrs)
+
+
+# -- compression ---------------------------------------------------------------
+
+@settings(deadline=None)
+@given(x=st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                  min_size=1, max_size=64))
+def test_quantize_error_bound(x):
+    arr = jnp.asarray(np.array(x, np.float32))
+    q, s = quantize_int8(arr)
+    back = dequantize_int8(q, s)
+    amax = float(jnp.abs(arr).max())
+    assert float(jnp.abs(back - arr).max()) <= amax / 127.0 + 1e-6
+
+
+def test_error_feedback_reinjects_residual():
+    g = {"w": jnp.asarray(np.linspace(-1, 1, 32, dtype=np.float32))}
+    ef = init_error_feedback(g)
+    g1, ef1 = compress_with_feedback(g, ef)
+    # residual equals the quantization error of this step
+    np.testing.assert_allclose(np.asarray(ef1["w"]),
+                               np.asarray(g["w"] - g1["w"]), atol=1e-6)
+    # over many steps the average transmitted gradient converges to the
+    # true gradient (EF property)
+    total = np.zeros(32, np.float32)
+    ef_s = ef
+    for _ in range(50):
+        gh, ef_s = compress_with_feedback(g, ef_s)
+        total += np.asarray(gh["w"])
+    np.testing.assert_allclose(total / 50, np.asarray(g["w"]), atol=1e-3)
+
+
+# -- fault tolerance --------------------------------------------------------------
+
+def test_heartbeats():
+    hb = HeartbeatMonitor(4, timeout=10, dead_timeout=50)
+    for r in range(4):
+        hb.beat(r, step=1, now=100.0)
+    hb.beat(0, step=2, now=130.0)
+    assert set(hb.suspects(now=131.0)) == {1, 2, 3}
+    assert hb.dead(now=131.0) == []
+    assert set(hb.dead(now=160.0)) == {1, 2, 3}
+    assert hb.alive(now=160.0) == [0]
+
+
+def test_straggler_detection():
+    sd = StragglerDetector(8, k=3.0, persist=2)
+    for step in range(4):
+        for r in range(8):
+            sd.record(r, 1.0 if r != 5 else 3.0)
+        out = sd.stragglers()
+    assert out == [5]
+
+
+def test_plan_recovery_simple():
+    plan = plan_recovery(512, range(512), model=16, pods=2)
+    assert plan.mesh_shape == (2, 16, 16)
+    assert plan.lost_throughput == 0.0
+
+
+def test_plan_recovery_loses_nodes():
+    alive = [r for r in range(512) if r not in range(16, 40)]  # 24 dead in pod0
+    plan = plan_recovery(512, alive, model=16, pods=2)
+    # pod0 fields 14 full TP rows, pod1 fields 16 -> data = 14
+    assert plan.mesh_shape == (2, 14, 16)
+    assert len(plan.active_ranks) == 2 * 14 * 16
+    assert set(plan.active_ranks).issubset(set(alive))
+
+
+def test_plan_recovery_drops_pod():
+    alive = list(range(256, 512)) + list(range(8))  # pod0 almost gone
+    plan = plan_recovery(512, alive, model=16, pods=2)
+    assert plan.mesh_shape[-1] == 16  # TP never shrinks
+
+
+@settings(deadline=None, max_examples=30)
+@given(dead=st.sets(st.integers(0, 511), max_size=200))
+def test_plan_recovery_properties(dead):
+    alive = [r for r in range(512) if r not in dead]
+    try:
+        plan = plan_recovery(512, alive, model=16, pods=2)
+    except RuntimeError:
+        assert len(alive) < 16  # only fails when no TP group survives
+        return
+    assert plan.mesh_shape[-1] == 16                    # TP intact
+    assert set(plan.active_ranks).issubset(set(alive))  # only survivors
+    assert len(plan.active_ranks) == int(np.prod(plan.mesh_shape))
+    assert 0.0 <= plan.lost_throughput < 1.0

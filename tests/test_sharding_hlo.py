@@ -1,0 +1,174 @@
+"""Sharding rules, HLO analyzer, and the mini dry-run (subprocess)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.perf import analyze_hlo
+from repro.runtime.sharding import (ShardingRules, logical_to_spec,
+                                    serve_rules, train_rules)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# -- rule tables ------------------------------------------------------------
+
+def test_train_rules_axes():
+    r = train_rules(multi_pod=True)
+    assert r.mesh_axes("batch") == ("pod", "data")
+    assert r.mesh_axes("ff") == "model"
+    assert r.mesh_axes("fsdp") == ("data",)
+    r2 = train_rules(multi_pod=False, fsdp=False)
+    assert r2.mesh_axes("fsdp") is None
+
+
+def test_serve_rules_kv_layouts():
+    rh = serve_rules(kv_shard="heads")
+    rs = serve_rules(kv_shard="seq")
+    assert rh.mesh_axes("kv_heads") == "model" and rh.mesh_axes("cache_seq") is None
+    assert rs.mesh_axes("kv_heads") is None and rs.mesh_axes("cache_seq") == "model"
+
+
+def test_logical_to_spec_divisibility_fallback():
+    """Non-divisible dims drop the mesh axis instead of erroring (llama4's
+    40 heads on a 16-way model axis)."""
+    mesh = jax.make_mesh((1,), ("model",))
+    # fake a 16-wide axis via rules math only: use a 1-dev mesh but check the
+    # arithmetic with an explicit shape check
+    rules = ShardingRules({"heads": "model"}, name="t")
+    spec = logical_to_spec(("heads",), (40,), rules, mesh)
+    assert spec == jax.sharding.PartitionSpec("model")  # 40 % 1 == 0
+    spec2 = logical_to_spec(("heads", None), (40, 7), rules, mesh)
+    assert len(spec2) <= 2
+
+
+def test_duplicate_mesh_axis_dropped():
+    mesh = jax.make_mesh((1,), ("model",))
+    rules = ShardingRules({"heads": "model", "ff": "model"})
+    spec = logical_to_spec(("heads", "ff"), (8, 8), rules, mesh)
+    # "model" may appear only once in a spec
+    axes = [a for a in spec if a is not None]
+    assert axes.count("model") <= 1
+
+
+# -- HLO analyzer ---------------------------------------------------------------
+
+def test_analyzer_matches_xla_on_unrolled():
+    def scan_f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=12)
+        return y.sum()
+
+    def unrolled_f(x, w):
+        for _ in range(12):
+            x = jnp.tanh(x @ w)
+        return x.sum()
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    cs = jax.jit(jax.grad(scan_f)).lower(x, w).compile()
+    cu = jax.jit(jax.grad(unrolled_f)).lower(x, w).compile()
+    got = analyze_hlo(cs.as_text()).flops
+    want = cu.cost_analysis()["flops"]
+    assert abs(got - want) / want < 0.05
+
+
+def test_analyzer_counts_nested_scans():
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    c = jax.jit(f).lower(x, w).compile()
+    got = analyze_hlo(c.as_text()).flops
+    want = 15 * 2 * 64**3  # 5*3 matmuls
+    assert abs(got - want) / want < 0.05
+
+
+def test_analyzer_collective_bytes_scale_with_mesh():
+    """all-reduce inside a scan is multiplied by the trip count."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+import sys
+sys.path.insert(0, %r)
+from repro.perf import analyze_hlo
+mesh = jax.make_mesh((4,), ("m",))
+def f(x, ws):
+    def body(c, w):  # per-layer weight: the collective cannot hoist
+        y = c @ w
+        return jax.lax.with_sharding_constraint(
+            y, NamedSharding(mesh, P(None, None))), None
+    y, _ = jax.lax.scan(body, x, ws)
+    return y
+xs = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+wss = jax.ShapeDtypeStruct((6, 64, 64), jnp.float32)
+with mesh:
+    c = jax.jit(f, in_shardings=(NamedSharding(mesh, P()),
+                                 NamedSharding(mesh, P(None, None, "m"))),
+                out_shardings=NamedSharding(mesh, P())).lower(xs, wss).compile()
+rep = analyze_hlo(c.as_text())
+total = sum(v["count"] for v in rep.collectives.values())
+print("COLLS", int(total))
+"""
+    out = subprocess.run([sys.executable, "-c", code % (REPO + "/src",)],
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    count = int(out.stdout.strip().split()[-1])
+    assert count >= 6  # one per scan iteration after trip scaling
+
+
+# -- mini dry-run: same code path as the 512-chip run, on 8 host devices ---------
+
+@pytest.mark.parametrize("arch,shape,mp", [
+    ("internlm2-1.8b", "train_4k", False),
+    ("internlm2-1.8b", "decode_32k", False),
+    ("mamba2-2.7b", "long_500k", False),
+    ("internlm2-1.8b", "train_4k", True),
+])
+def test_mini_dryrun_cell(tmp_path, arch, shape, mp):
+    env = dict(os.environ)
+    env["REPRO_DRYRUN_DEVICES"] = "8"
+    env["REPRO_MESH_OVERRIDE"] = "2x2x2" if mp else "2x4"
+    env["PYTHONPATH"] = REPO + "/src"
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", str(tmp_path)]
+    if mp:
+        cmd.append("--multi-pod")
+    out = subprocess.run(cmd, capture_output=True, text=True, timeout=560,
+                         env=env, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-3000:]
+    mesh = "pod2x16x16" if mp else "pod16x16"
+    rec = json.load(open(tmp_path / mesh / f"{arch}__{shape}.json"))
+    assert rec["status"] == "ok"
+    assert rec["flops_per_device"] > 0
+    assert rec["state_bytes_per_device"] > 0
+
+
+def test_dryrun_skip_rule(tmp_path):
+    env = dict(os.environ)
+    env["REPRO_DRYRUN_DEVICES"] = "8"
+    env["REPRO_MESH_OVERRIDE"] = "2x4"
+    env["PYTHONPATH"] = REPO + "/src"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2-72b",
+         "--shape", "long_500k", "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=300, env=env, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.load(open(tmp_path / "pod16x16" / "qwen2-72b__long_500k.json"))
+    assert rec["status"] == "skip"  # full-attention arch skips 500k decode

@@ -1,0 +1,215 @@
+"""Window semantics: one-sided ops, epochs, sync, persistence, combined."""
+
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Communicator, Window, alloc_mem
+
+
+def mk_storage_info(tmp_path, name="w.bin", **extra):
+    info = {"alloc_type": "storage",
+            "storage_alloc_filename": str(tmp_path / name)}
+    info.update({k: str(v) for k, v in extra.items()})
+    return info
+
+
+def test_put_get_roundtrip(tmp_path):
+    comm = Communicator(4)
+    win = Window.allocate(comm, 4096, info=mk_storage_info(tmp_path))
+    data = np.arange(50, dtype=np.int64)
+    win.put(data.view(np.uint8), 3, 128)
+    got = win.get(3, 128, 50, np.int64)
+    assert (got == data).all()
+    win.free()
+
+
+def test_memory_window_default():
+    comm = Communicator(2)
+    win = Window.allocate(comm, 1024)
+    assert win.flavor == "memory"
+    win.put(np.full(8, 9, np.uint8), 1, 0)
+    assert (win.get(1, 0, 8) == 9).all()
+    assert win.sync() == 0  # nothing to persist
+    win.free()
+
+
+@given(op=st.sampled_from(["sum", "prod", "min", "max", "replace"]),
+       vals=st.lists(st.integers(-100, 100), min_size=1, max_size=8))
+@settings(deadline=None, max_examples=30)
+def test_accumulate_matches_numpy(op, vals):
+    comm = Communicator(2)
+    win = Window.allocate(comm, 64)
+    init = np.array([3], np.int64)
+    win.put(init.view(np.uint8), 0, 0)
+    acc = init.copy()
+    npop = {"sum": np.add, "prod": np.multiply, "min": np.minimum,
+            "max": np.maximum}.get(op)
+    for v in vals:
+        arr = np.array([v], np.int64)
+        win.accumulate(arr, 0, 0, op=op)
+        acc = npop(acc, arr) if npop else arr.copy()
+    assert win.get(0, 0, 1, np.int64)[0] == acc[0]
+    win.free()
+
+
+def test_fetch_and_op_and_cas():
+    comm = Communicator(1)
+    win = Window.allocate(comm, 64)
+    win.put(np.array([10], np.int64).view(np.uint8), 0, 0)
+    old = win.fetch_and_op(5, 0, 0, "sum")
+    assert old == 10
+    assert win.get(0, 0, 1, np.int64)[0] == 15
+    old = win.compare_and_swap(99, 15, 0, 0)
+    assert old == 15 and win.get(0, 0, 1, np.int64)[0] == 99
+    old = win.compare_and_swap(1, 15, 0, 0)  # compare fails
+    assert old == 99 and win.get(0, 0, 1, np.int64)[0] == 99
+    win.free()
+
+
+def test_persistence_requires_sync(tmp_path):
+    """Paper §2.1.1: ops touch only the page-cache copy; storage is undefined
+    until MPI_Win_sync."""
+    comm = Communicator(1)
+    path = tmp_path / "p.bin"
+    # 16 pages: a 100-byte write stays under vm.dirty_ratio (no auto flush)
+    win = Window.allocate(comm, 16 * 4096, info={"alloc_type": "storage",
+                                                 "storage_alloc_filename": str(path)})
+    win.put(np.full(100, 7, np.uint8), 0, 0)
+    on_disk = np.fromfile(path, np.uint8, 100)
+    assert not (on_disk == 7).all()          # not yet persisted
+    win.sync(0)
+    on_disk = np.fromfile(path, np.uint8, 100)
+    assert (on_disk == 7).all()              # persisted after sync
+    win.free()
+
+
+def test_shared_file_offsets(tmp_path):
+    """Paper Fig. 4: several ranks map one file at per-rank offsets."""
+    comm = Communicator(3)
+    path = tmp_path / "shared.bin"
+    win = Window.allocate(comm, 1024, info={"alloc_type": "storage",
+                                            "storage_alloc_filename": str(path)},
+                          shared_file=True)
+    for r in range(3):
+        win.put(np.full(8, r + 1, np.uint8), r, 0)
+    win.sync()
+    win.free()
+    raw = np.fromfile(path, np.uint8)
+    assert raw[0] == 1 and raw[1024] == 2 and raw[2048] == 3
+
+
+def test_exclusive_lock_epoch(tmp_path):
+    comm = Communicator(2)
+    win = Window.allocate(comm, 128)
+    win.lock(0, exclusive=True)
+    win.put(np.full(4, 1, np.uint8), 0, 0)
+    win.unlock(0)
+    win.lock(0)          # shared epoch
+    _ = win.get(0, 0, 4)
+    win.unlock(0)
+    with pytest.raises(Exception):
+        win.unlock(0)    # unmatched unlock
+    win.free()
+
+
+def test_dynamic_window_attach_detach(tmp_path):
+    """Paper Listing 3: hints passed to MPI_Alloc_mem, then attach."""
+    comm = Communicator(1)
+    seg = alloc_mem(256, info=mk_storage_info(tmp_path, "dyn.bin"))
+    win = Window.create_dynamic(comm)
+    h = win.attach(0, seg)
+    win.put(np.full(16, 5, np.uint8), 0, 0, handle=h)
+    assert (win.get(0, 0, 16, handle=h) == 5).all()
+    assert win.sync(0) > 0
+    win.detach(0, h)
+    with pytest.raises(Exception):
+        win.get(0, 0, 16, handle=h)
+    win.free()
+
+
+def test_unlink_hint_removes_file(tmp_path):
+    comm = Communicator(1)
+    path = tmp_path / "tmpwin.bin"
+    win = Window.allocate(comm, 4096, info={
+        "alloc_type": "storage", "storage_alloc_filename": str(path),
+        "storage_alloc_unlink": "true"})
+    win.put(np.full(8, 1, np.uint8), 0, 0)
+    assert path.exists()
+    win.free()
+    assert not path.exists()
+
+
+def test_discard_hint_skips_final_sync(tmp_path):
+    comm = Communicator(1)
+    path = tmp_path / "d.bin"
+    win = Window.allocate(comm, 4096, info={
+        "alloc_type": "storage", "storage_alloc_filename": str(path),
+        "storage_alloc_discard": "true"})
+    win.put(np.full(64, 9, np.uint8), 0, 0)
+    win.free()  # discard: no flush on free
+    raw = np.fromfile(path, np.uint8, 64)
+    assert not (raw == 9).all()
+
+
+def test_combined_window_split(tmp_path):
+    comm = Communicator(1)
+    info = mk_storage_info(tmp_path, "c.bin",
+                           storage_alloc_factor="0.5")
+    win = Window.allocate(comm, 8192, info=info)
+    assert win.flavor == "combined"
+    data = np.arange(8192 % 251, dtype=np.uint8)
+    # write spanning the memory/storage boundary
+    span = np.arange(200, dtype=np.uint8)
+    win.put(span, 0, 4000)
+    assert (win.get(0, 4000, 200) == span).all()
+    # only the storage half persists
+    flushed = win.sync(0)
+    assert 0 < flushed <= 4200
+    win.free()
+
+
+def test_combined_auto_factor(tmp_path):
+    comm = Communicator(1)
+    info = mk_storage_info(tmp_path, "a.bin", storage_alloc_factor="auto")
+    win = Window.allocate(comm, 1 << 20, info=info, memory_budget=1 << 18)
+    seg = win.segments[0]
+    assert seg.mem_bytes == 1 << 18 and seg.sto_bytes == (1 << 20) - (1 << 18)
+    win.free()
+
+
+def test_storage_first_order(tmp_path):
+    comm = Communicator(1)
+    info = mk_storage_info(tmp_path, "o.bin", storage_alloc_factor="0.25",
+                           storage_alloc_order="storage_first")
+    win = Window.allocate(comm, 4096, info=info)
+    win.put(np.full(4096, 3, np.uint8), 0, 0)
+    assert win.sync(0) > 0  # storage part at the front
+    win.free()
+
+
+@settings(deadline=None, max_examples=15)
+@given(writes=st.lists(st.tuples(st.integers(0, 8000),
+                                 st.integers(1, 500),
+                                 st.integers(0, 255)),
+                       min_size=1, max_size=12),
+       factor=st.sampled_from(["0.0", "0.3", "0.5", "0.9", "1.0"]))
+def test_combined_window_equals_memory_model(tmp_path_factory, writes, factor):
+    """A combined window behaves exactly like one flat byte space."""
+    d = tmp_path_factory.mktemp("cmb")
+    comm = Communicator(1)
+    win = Window.allocate(comm, 8192, info={
+        "alloc_type": "storage", "storage_alloc_filename": str(d / "x.bin"),
+        "storage_alloc_factor": factor})
+    model = np.zeros(8192, np.uint8)
+    for off, n, val in writes:
+        n = min(n, 8192 - off)
+        if n <= 0:
+            continue
+        win.put(np.full(n, val, np.uint8), 0, off)
+        model[off:off + n] = val
+    got = win.get(0, 0, 8192)
+    assert (got == model).all()
+    win.free()
