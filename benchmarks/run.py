@@ -8,6 +8,7 @@ Suites:
   hacc_io          -- paper Fig. 11   (checkpoint/restart vs POSIX baseline)
   mapreduce        -- paper Fig. 12   (transparent-ckpt overhead vs rewrite)
   combined_win     -- paper Fig. 13   (combined-allocation throughput)
+  async_win        -- nonblocking rput+flush_async vs blocking put+sync
   roofline         -- this task's §Roofline (from dry-run artifacts)
 """
 
@@ -20,7 +21,7 @@ import traceback
 from benchmarks.common import Bench
 
 SUITES = ("imb_rma", "mstream", "dht", "hacc_io", "mapreduce",
-          "combined_win", "roofline")
+          "combined_win", "async_win", "roofline")
 
 
 def main() -> None:
@@ -45,6 +46,8 @@ def main() -> None:
                 from benchmarks import mapreduce_bench as m
             elif name == "combined_win":
                 from benchmarks import combined_win as m
+            elif name == "async_win":
+                from benchmarks import async_win as m
             else:
                 from benchmarks import roofline as m
             m.run(bench)

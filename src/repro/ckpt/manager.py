@@ -13,9 +13,12 @@ Implements the paper's fault-tolerance recipe end to end:
 * A manifest (JSON, written atomically via rename) records step, target
   window and per-slot CRC32; restore validates CRCs and falls back to the
   previous manifest if the newest one is torn or mismatched.
-* ``save_async`` overlaps the flush with compute (the background-writeback
-  analogue of ``vm.dirty_writeback_centisecs``) -- ``wait()`` joins before
-  the next checkpoint swaps buffers.
+* ``save_async`` overlaps the flush with compute: the puts land in the page
+  cache synchronously (cheap memcpy), then the expensive storage flush rides
+  the window's background :class:`~repro.core.storage.WritebackPool` as a
+  ``sync_async`` request whose completion hook commits the manifest.
+  ``wait()`` joins the request before the next checkpoint swaps buffers, so
+  the flush runs concurrently with the training step in between.
 """
 
 from __future__ import annotations
@@ -23,7 +26,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import threading
 import zlib
 from typing import Any, Mapping
 
@@ -31,6 +33,7 @@ import numpy as np
 
 from repro.core.comm import Communicator
 from repro.core.offload import WindowedPyTree
+from repro.core.window import Request
 
 __all__ = ["CheckpointManager", "RestoreResult"]
 
@@ -83,8 +86,7 @@ class CheckpointManager:
         self._turn = 0
         self.saves = 0
         self.bytes_flushed_total = 0
-        self._async_thread: threading.Thread | None = None
-        self._async_exc: BaseException | None = None
+        self._pending: Request | None = None
 
     @staticmethod
     def _segments(wt: WindowedPyTree):
@@ -136,11 +138,13 @@ class CheckpointManager:
         self.bytes_flushed_total += flushed
         return flushed
 
-    def save_async(self, step: int, tree: Mapping[str, Any]) -> None:
-        """Stage the state, then flush + commit on a background thread.
+    def save_async(self, step: int, tree: Mapping[str, Any]) -> Request:
+        """Stage the state, then flush + commit on the write-back pool.
 
         The puts land in the window's page cache synchronously (cheap memcpy);
-        the storage flush -- the expensive part -- overlaps with compute.
+        the storage flush -- the expensive part -- runs as a ``sync_async``
+        request (exclusive lock, paper Listing 4) whose completion hook
+        commits the manifest.  Errors surface at ``wait()``.
         """
         self.wait()
         target = self.names[self._turn % len(self.names)]
@@ -152,30 +156,20 @@ class CheckpointManager:
             crcs[k] = _crc(arr)
             wt.put(k, arr)
 
-        def _flush():
-            try:
-                wt.win.lock(self.rank, exclusive=True)
-                try:
-                    flushed = wt.sync()
-                finally:
-                    wt.win.unlock(self.rank)
-                self._write_manifest(step, target, crcs)
-                self.saves += 1
-                self.bytes_flushed_total += flushed
-            except BaseException as e:  # surfaced on wait()
-                self._async_exc = e
+        def _commit(flushed: int) -> None:
+            # Runs on the write-back thread after a successful flush; the
+            # manifest only ever names fully-persisted data.
+            self._write_manifest(step, target, crcs)
+            self.saves += 1
+            self.bytes_flushed_total += flushed
 
-        self._async_thread = threading.Thread(target=_flush, daemon=True,
-                                              name="repro-ckpt-flush")
-        self._async_thread.start()
+        self._pending = wt.sync_async(exclusive=True, on_complete=_commit)
+        return self._pending
 
     def wait(self) -> None:
-        if self._async_thread is not None:
-            self._async_thread.join()
-            self._async_thread = None
-        if self._async_exc is not None:
-            exc, self._async_exc = self._async_exc, None
-            raise exc
+        if self._pending is not None:
+            req, self._pending = self._pending, None
+            req.wait()
 
     # -- restore ----------------------------------------------------------------
     def _try_restore(self, manifest_path: str) -> RestoreResult | None:

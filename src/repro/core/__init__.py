@@ -4,6 +4,8 @@ Public API:
     Communicator                      rank bookkeeping + collective stubs
     Window / alloc_mem                MPI_Win_* analogues (allocate, put/get,
                                       accumulate, CAS, lock/unlock, sync, free)
+    Request / WritebackPool           nonblocking layer: rput/rget/raccumulate
+                                      handles + the background flush pipeline
     WindowHints / Info / HintError    the paper's MPI_Info performance hints
     CombinedSegment                   heterogeneous memory+storage allocation
     DirtyTracker / backings           user-level page cache + selective sync
@@ -20,10 +22,12 @@ from .storage import (
     DirtyTracker,
     MmapBacking,
     StripedFile,
+    WritebackPool,
     make_backing,
 )
 from .combined import CombinedSegment
-from .window import LOCK_EXCLUSIVE, LOCK_SHARED, Window, WindowError, alloc_mem
+from .window import (LOCK_EXCLUSIVE, LOCK_SHARED, Request, Window,
+                     WindowError, alloc_mem)
 from .offload import WindowedArray, WindowedPyTree, auto_factor
 from .dht import DistributedHashTable
 from .mapreduce import MapReduce1S, wordcount_map, wordcount_reduce
@@ -38,10 +42,12 @@ __all__ = [
     "DirtyTracker",
     "MmapBacking",
     "StripedFile",
+    "WritebackPool",
     "make_backing",
     "CombinedSegment",
     "LOCK_EXCLUSIVE",
     "LOCK_SHARED",
+    "Request",
     "Window",
     "WindowError",
     "alloc_mem",

@@ -106,6 +106,20 @@ class CombinedSegment:
         return self.backing.sync(full=full)
 
     @property
+    def has_storage(self) -> bool:
+        """True if any bytes spilled to storage (the ``auto`` factor may
+        keep the whole allocation pinned in memory)."""
+        return self.backing is not None
+
+    def dirty_bytes(self) -> int:
+        """Un-persisted bytes of the storage subrange (memory part never
+        counts: it has no durability to fall behind on).  Feeds the
+        nonblocking layer's ``Window.dirty_bytes`` observability."""
+        if self.backing is None:
+            return 0
+        return self.backing.dirty_bytes()
+
+    @property
     def tracker(self):
         return self.backing.tracker if self.backing is not None else None
 

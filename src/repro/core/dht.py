@@ -22,7 +22,7 @@ from __future__ import annotations
 import numpy as np
 
 from .comm import Communicator
-from .window import Window
+from .window import Request, Window
 
 __all__ = ["DistributedHashTable"]
 
@@ -62,7 +62,13 @@ class DistributedHashTable:
         self.insert_conflicts = 0
 
     def _init_segments(self) -> None:
-        """Set every key word to EMPTY and heap counters to 0."""
+        """Set every key word to EMPTY and heap counters to 0.
+
+        Batched nonblocking puts: all ranks' LV/counter/heap initializations
+        are issued as rput requests at once (per-rank FIFO keeps each
+        segment's three writes ordered) and completed with one waitall --
+        the initialization analogue of the paper's overlapped RMA.
+        """
         lv = np.empty((self.lv_entries, 3), dtype=np.int64)
         lv[:, 0] = _EMPTY
         lv[:, 1] = 0
@@ -71,10 +77,14 @@ class DistributedHashTable:
         heap[:, 0] = _EMPTY
         heap[:, 1] = 0
         heap[:, 2] = -1
+        reqs = []
         for r in range(self.comm.size):
-            self.win.put(lv.view(np.uint8).ravel(), r, 0)
-            self.win.put(np.zeros(1, np.int64).view(np.uint8), r, self.counter_off)
-            self.win.put(heap.view(np.uint8).ravel(), r, self.heap_off)
+            reqs.append(self.win.rput(lv.view(np.uint8).ravel(), r, 0))
+            reqs.append(self.win.rput(np.zeros(1, np.int64).view(np.uint8),
+                                      r, self.counter_off))
+            reqs.append(self.win.rput(heap.view(np.uint8).ravel(), r,
+                                      self.heap_off))
+        Request.waitall(reqs)
 
     # -- addressing -----------------------------------------------------------
     def _owner_slot(self, key: int) -> tuple[int, int]:
@@ -173,8 +183,18 @@ class DistributedHashTable:
     def heap_used(self, rank: int) -> int:
         return int(self.win.get(rank, self.counter_off, 1, np.int64)[0])
 
-    def sync(self) -> int:
-        """Checkpoint: exclusive lock + selective sync (paper Listing 4)."""
+    def sync(self, blocking: bool = True, *, on_complete=None):
+        """Checkpoint: exclusive lock + selective sync (paper Listing 4).
+
+        ``blocking=False`` queues the per-rank locked flushes on the
+        window's write-back pool and returns a :class:`Request` whose
+        ``wait()`` yields total bytes -- MapReduce overlaps this with the
+        next map task.  ``on_complete(total_bytes)`` runs on the write-back
+        thread after a successful flush (see :meth:`Window.flush_async`).
+        """
+        if not blocking:
+            return self.win.flush_async(exclusive=True,
+                                        on_complete=on_complete)
         total = 0
         for r in range(self.comm.size):
             self.win.lock(r, exclusive=True)

@@ -28,7 +28,7 @@ from typing import Any, Callable, Iterator, Mapping
 import numpy as np
 
 from .comm import Communicator
-from .window import Window
+from .window import Request, Window
 
 __all__ = ["auto_factor", "WindowedArray", "WindowedPyTree"]
 
@@ -103,12 +103,32 @@ class WindowedArray:
         raw = self.win.get(self.rank, self.offset + lo, hi - lo, np.uint8)
         return raw.view(self.dtype)
 
+    def read_block_async(self, i: int) -> Request:
+        """Nonblocking block fetch (rget): ``wait()`` returns the block.
+
+        The out-of-core optimizer prefetches block ``i+1`` with this while
+        the Adam math for block ``i`` runs on the caller's thread.  Ordered
+        after pending writes to the same rank (per-rank FIFO).
+        """
+        lo, hi = self._block_span(i)
+        req = self.win.rget(self.rank, self.offset + lo, hi - lo, np.uint8)
+        return req.map(lambda raw: raw.view(self.dtype))
+
     def write_block(self, i: int, flat) -> None:
         lo, hi = self._block_span(i)
         arr = np.ascontiguousarray(flat, dtype=self.dtype)
         if arr.nbytes != hi - lo:
             raise ValueError(f"block {i}: expected {hi - lo} bytes, got {arr.nbytes}")
         self.win.put(arr.view(np.uint8).ravel(), self.rank, self.offset + lo)
+
+    def write_block_async(self, i: int, flat) -> Request:
+        """Nonblocking block write-behind (rput); data snapshotted eagerly."""
+        lo, hi = self._block_span(i)
+        arr = np.ascontiguousarray(flat, dtype=self.dtype)
+        if arr.nbytes != hi - lo:
+            raise ValueError(f"block {i}: expected {hi - lo} bytes, got {arr.nbytes}")
+        return self.win.rput(arr.view(np.uint8).ravel(), self.rank,
+                             self.offset + lo)
 
     def blocks(self) -> Iterator[tuple[int, np.ndarray]]:
         for i in range(self.num_blocks):
@@ -207,6 +227,16 @@ class WindowedPyTree:
     def sync(self) -> int:
         """MPI_Win_sync over the rank's segment: selective dirty-block flush."""
         return self.win.sync(self.rank)
+
+    def sync_async(self, *, exclusive: bool = False, on_complete=None) -> Request:
+        """Queue the rank's selective flush on the window's write-back pool.
+
+        ``wait()`` returns bytes flushed; see :meth:`Window.flush_async` for
+        the ``exclusive`` / ``on_complete`` semantics.  The checkpoint
+        manager overlaps this with the next train step.
+        """
+        return self.win.flush_async(self.rank, exclusive=exclusive,
+                                    on_complete=on_complete)
 
     def manifest(self) -> dict[str, Any]:
         """Serializable layout description (used by the checkpoint manager)."""

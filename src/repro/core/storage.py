@@ -25,6 +25,7 @@ implementation maps a window onto Lustre OSTs.
 
 from __future__ import annotations
 
+import collections
 import os
 import threading
 import numpy as np
@@ -35,6 +36,7 @@ __all__ = [
     "StripedFile",
     "MmapBacking",
     "CachedBacking",
+    "WritebackPool",
     "make_backing",
 ]
 
@@ -226,6 +228,10 @@ class _BackingBase:
         if offset < 0 or offset + nbytes > self.size:
             raise IndexError(
                 f"access [{offset}, {offset + nbytes}) outside window of {self.size} bytes")
+
+    def dirty_bytes(self) -> int:
+        """Upper bound on bytes a sync() would flush right now (whole pages)."""
+        return self.tracker.dirty_count * self.page_size
 
 
 class MmapBacking(_BackingBase):
@@ -566,10 +572,12 @@ class _Flusher(threading.Thread):
         super().__init__(daemon=True, name="repro-writeback")
         self.backing = backing
         self.interval = interval
-        self._stop = threading.Event()
+        # NB: must not be named ``_stop`` -- that shadows a Thread internal
+        # that join() calls, breaking every join on this thread.
+        self._stop_evt = threading.Event()
 
     def run(self) -> None:
-        while not self._stop.wait(self.interval):
+        while not self._stop_evt.wait(self.interval):
             try:
                 with self.backing._io_lock:
                     if not self.backing.closed:
@@ -578,8 +586,119 @@ class _Flusher(threading.Thread):
                 pass
 
     def stop(self) -> None:
-        self._stop.set()
+        self._stop_evt.set()
         self.join(timeout=5.0)
+
+
+class _Ticket:
+    """Completion handle for one :class:`WritebackPool` task.
+
+    Low-level primitive: the window layer wraps tickets in MPI-style
+    ``Request`` objects.  ``result``/``exception`` are valid once ``done()``.
+    """
+
+    __slots__ = ("_event", "_fn", "key", "result", "exception", "_next")
+
+    def __init__(self, fn, key):
+        self._event = threading.Event()
+        self._fn = fn
+        self.key = key
+        self.result = None
+        self.exception: BaseException | None = None
+        self._next: "_Ticket | None" = None  # same-key successor (FIFO chain)
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: float | None = None) -> bool:
+        return self._event.wait(timeout)
+
+
+class WritebackPool:
+    """Per-window background write-back thread pool.
+
+    The engine behind the nonblocking one-sided layer: deferred RMA
+    operations (rput/rget/raccumulate) and asynchronous flushes run here, off
+    the caller's thread, so storage latency overlaps with compute -- the
+    paper's answer to the 55-90% storage penalty.  Flush tasks go through
+    ``CachedBacking.sync``/``_flush_locked``, which already coalesces dirty
+    pages into one batched sequential ``pwrite`` per contiguous run.
+
+    Ordering contract: tasks submitted with the same ``key`` (we key by
+    target rank) execute in submission order -- a flush queued after an rput
+    to the same rank persists that rput's bytes.  Tasks with different keys
+    may run concurrently across ``workers`` threads.  A pending same-key
+    predecessor defers the successor's enqueue to the predecessor's
+    completion, so a slow rank never occupies more than one worker.
+    """
+
+    def __init__(self, workers: int = 2, name: str = "repro-async-wb"):
+        self.workers = max(1, int(workers))
+        self._cond = threading.Condition()
+        self._runq: collections.deque[_Ticket] = collections.deque()
+        self._tails: dict = {}  # key -> newest pending ticket for that key
+        self._pending = 0
+        self._shutdown = False
+        self._threads = []
+        for i in range(self.workers):
+            t = threading.Thread(target=self._worker, daemon=True,
+                                 name=f"{name}-{i}")
+            t.start()
+            self._threads.append(t)
+
+    def submit(self, fn, key=None) -> _Ticket:
+        """Queue ``fn`` for background execution; returns its ticket."""
+        t = _Ticket(fn, key)
+        with self._cond:
+            if self._shutdown:
+                raise RuntimeError("writeback pool is shut down")
+            self._pending += 1
+            if key is not None:
+                prev = self._tails.get(key)
+                self._tails[key] = t
+                if prev is not None and not prev.done():
+                    prev._next = t  # runs when prev completes (FIFO per key)
+                    return t
+            self._runq.append(t)
+            self._cond.notify()
+        return t
+
+    def _worker(self) -> None:
+        while True:
+            with self._cond:
+                while not self._runq and not self._shutdown:
+                    self._cond.wait()
+                if not self._runq and self._shutdown:
+                    return
+                t = self._runq.popleft()
+            try:
+                t.result = t._fn()
+            except BaseException as e:  # surfaced at Request.wait()
+                t.exception = e
+            with self._cond:
+                t._event.set()
+                self._pending -= 1
+                if t.key is not None:
+                    if t._next is not None:
+                        self._runq.append(t._next)
+                    if self._tails.get(t.key) is t:
+                        del self._tails[t.key]
+                self._cond.notify_all()
+
+    def drain(self) -> None:
+        """Block until every submitted task (including chained ones) is done."""
+        with self._cond:
+            while self._pending:
+                self._cond.wait()
+
+    def shutdown(self) -> None:
+        """Drain, then stop the workers.  The pool cannot be reused."""
+        self.drain()
+        with self._cond:
+            self._shutdown = True
+            self._cond.notify_all()
+        for th in self._threads:
+            th.join(timeout=5.0)
 
 
 def make_backing(path: str, size: int, *, mechanism: str = "cached", **kw):

@@ -21,20 +21,59 @@ Crucial paper nuance kept intact: put/get only touch the *memory copy*
 (page cache) of a storage window -- persistence requires an explicit
 ``win.sync()``; data not yet synced is lost on failure.  The checkpoint
 manager and the fault-injection tests rely on this.
+
+Nonblocking I/O (request-based RMA + async flush pipeline)
+----------------------------------------------------------
+
+    MPI_Rput / MPI_Rget / MPI_Raccumulate
+        -> win.rput / win.rget / win.raccumulate, each returning a
+           :class:`Request` with ``test()`` / ``wait()`` /
+           ``Request.waitall()`` semantics.
+    MPI_Win_flush(rank) / MPI_Win_flush_all
+        -> win.flush(rank) / win.flush_all(): block until every pending
+           request targeting the rank(s) has completed at the target.
+    asynchronous MPI_Win_sync
+        -> win.flush_async(rank) or win.sync(rank, blocking=False): queue a
+           selective dirty-page flush on the window's background
+           :class:`~repro.core.storage.WritebackPool` and return a Request
+           whose ``wait()`` yields the bytes flushed.
+
+Completion/durability semantics:
+
+* ``rput``/``raccumulate`` snapshot the origin buffer eagerly, so the caller
+  may reuse it immediately; the *target memory copy* is updated only once
+  the request completes.  ``rget`` materializes its value at completion
+  (``wait()`` returns the array).
+* Requests aimed at the same target rank complete in issue order (FIFO per
+  rank); requests to different ranks may complete in any order.  Blocking
+  ``put``/``get`` bypass the request queue -- mixing them with in-flight
+  requests to the same rank requires an intervening ``flush(rank)``.
+* Request completion is *not* durability: like blocking put, a completed
+  rput lives in the page cache only.  Persistence still requires
+  ``sync``/``flush_async`` -- un-flushed data is lost on failure, exactly
+  as in the blocking path (paper §2.1.1).
+* ``free()`` drains every pending request and queued flush before closing
+  the segments, so a fire-and-forget ``flush_async`` is durable once
+  ``free()`` returns (unless the window carries the ``discard`` hint).
+* Each background task acquires the target rank's ``_RWLock`` (shared for
+  rput/rget, exclusive for raccumulate/locked flushes), so an exclusive
+  ``win.lock(rank)`` epoch holds off concurrent request traffic.
 """
 
 from __future__ import annotations
 
 import threading
+import time
 from typing import Any
 
 import numpy as np
 
 from .combined import CombinedSegment
 from .hints import Info, WindowHints
-from .storage import DEFAULT_PAGE_SIZE, make_backing
+from .storage import DEFAULT_PAGE_SIZE, WritebackPool, make_backing
 
-__all__ = ["Window", "WindowError", "LOCK_SHARED", "LOCK_EXCLUSIVE", "alloc_mem"]
+__all__ = ["Window", "WindowError", "Request", "LOCK_SHARED",
+           "LOCK_EXCLUSIVE", "alloc_mem"]
 
 LOCK_SHARED = "shared"
 LOCK_EXCLUSIVE = "exclusive"
@@ -124,6 +163,9 @@ class _StorageSegment:
     def sync(self, full: bool = False) -> int:
         return self.backing.sync(full=full)
 
+    def dirty_bytes(self) -> int:
+        return self.backing.dirty_bytes()
+
     @property
     def tracker(self):
         return self.backing.tracker
@@ -159,11 +201,86 @@ def _make_segment(size: int, hints: WindowHints, rank: int, nranks: int, *,
                            compare_on_write=compare_on_write)
 
 
+class Request:
+    """MPI_Request analogue for request-based RMA and asynchronous flushes.
+
+    Wraps one or more :class:`~repro.core.storage.WritebackPool` tickets.
+    ``wait()`` returns the operation's value: the fetched array for
+    ``rget``, bytes flushed for ``flush_async``, ``None`` for ``rput``.
+    Exceptions raised by the background task re-raise at ``wait()``.
+    """
+
+    def __init__(self, tickets, combine=None, _obs=None):
+        self._tickets = list(tickets) if isinstance(tickets, (list, tuple)) \
+            else [tickets]
+        self._combine = combine
+        # Shared mutable cell: a wait() reached completion (ok or error).
+        # Shared (not copied) by map(), so observing a derived request also
+        # marks the original one the window registered.
+        self._obs = [False] if _obs is None else _obs
+
+    @property
+    def _observed(self) -> bool:
+        return self._obs[0]
+
+    def _failed(self) -> bool:
+        """True iff the (completed) operation raised on the pool thread."""
+        return any(t.exception is not None for t in self._tickets)
+
+    def test(self) -> bool:
+        """MPI_Test: True iff the operation has completed (never blocks)."""
+        return all(t.done() for t in self._tickets)
+
+    def wait(self, timeout: float | None = None):
+        """MPI_Wait: block for completion, re-raise task errors, return the
+        operation's value.  ``timeout`` (seconds) raises TimeoutError."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        for t in self._tickets:
+            left = None if deadline is None else \
+                max(0.0, deadline - time.monotonic())
+            if not t.wait(left):
+                raise TimeoutError("request did not complete within timeout")
+        self._obs[0] = True
+        for t in self._tickets:
+            if t.exception is not None:
+                raise t.exception
+        results = [t.result for t in self._tickets]
+        if self._combine is not None:
+            return self._combine(results)
+        return results[0] if len(results) == 1 else results
+
+    def map(self, fn) -> "Request":
+        """Derived request: same completion event, result passed through
+        ``fn`` (used by the offload layer to reinterpret fetched bytes)."""
+        inner = self._combine
+        if inner is None:
+            combine = lambda rs: fn(rs[0] if len(rs) == 1 else rs)  # noqa: E731
+        else:
+            combine = lambda rs: fn(inner(rs))  # noqa: E731
+        return Request(self._tickets, combine=combine, _obs=self._obs)
+
+    @staticmethod
+    def waitall(requests, timeout: float | None = None) -> list:
+        """MPI_Waitall: complete every request; returns their values."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        out = []
+        for r in requests:
+            left = None if deadline is None else \
+                max(0.0, deadline - time.monotonic())
+            out.append(r.wait(left if timeout is not None else None))
+        return out
+
+    @staticmethod
+    def testall(requests) -> bool:
+        """MPI_Testall: True iff every request has completed."""
+        return all(r.test() for r in requests)
+
+
 class Window:
     """An MPI-style window: per-rank segments + one-sided access."""
 
     def __init__(self, comm, segments, hints: WindowHints, *, disp_unit: int = 1,
-                 flavor: str, dynamic: bool = False):
+                 flavor: str, dynamic: bool = False, async_workers: int = 2):
         self.comm = comm
         self.segments = segments  # list, one per rank (dynamic: list of lists)
         self.hints = hints
@@ -173,6 +290,13 @@ class Window:
         self.freed = False
         self._locks = [_RWLock() for _ in range(comm.size)]
         self._epoch_depth = [0] * comm.size
+        # nonblocking layer: lazily-started per-window write-back pool plus
+        # per-target-rank pending request lists (epoch completion bookkeeping)
+        self._async_workers = async_workers
+        self._pool: WritebackPool | None = None
+        self._pool_lock = threading.Lock()
+        self._req_lock = threading.Lock()
+        self._pending_reqs: dict[int, list[Request]] = {}
         # MPI attribute caching (paper: metadata on the window object)
         self.attrs: dict[str, Any] = {
             "alloc_type": hints.alloc_type,
@@ -189,11 +313,15 @@ class Window:
                  memory_budget: int | None = None, mechanism: str = "cached",
                  page_size: int = DEFAULT_PAGE_SIZE, cache_bytes: int | None = None,
                  writeback_interval: float | None = None,
-                 compare_on_write: bool = False) -> "Window":
+                 compare_on_write: bool = False,
+                 async_workers: int = 2) -> "Window":
         """Collective MPI_Win_allocate over all ranks of ``comm``.
 
         ``size`` is the per-rank window size in bytes (like MPI, each rank
         passes its own size; we use a uniform size for the common case).
+        ``async_workers`` sizes the background write-back pool used by the
+        request-based (rput/rget/flush_async) layer; the pool's threads only
+        start on first nonblocking use.
         """
         hints = WindowHints.from_info(info)
         comm.barrier()  # collective
@@ -207,7 +335,8 @@ class Window:
         ]
         flavor = ("combined" if hints.is_combined else
                   "storage" if hints.is_storage else "memory")
-        return cls(comm, segments, hints, disp_unit=disp_unit, flavor=flavor)
+        return cls(comm, segments, hints, disp_unit=disp_unit, flavor=flavor,
+                   async_workers=async_workers)
 
     @classmethod
     def allocate_shared(cls, comm, size: int, **kw) -> "Window":
@@ -351,6 +480,142 @@ class Window:
         finally:
             lock.release()
 
+    # -- nonblocking one-sided operations --------------------------------------
+    def _get_pool(self) -> WritebackPool:
+        if self._pool is None:
+            with self._pool_lock:
+                if self._pool is None:
+                    self._pool = WritebackPool(self._async_workers)
+        return self._pool
+
+    def _register(self, req: Request, ranks) -> Request:
+        with self._req_lock:
+            for r in ranks:
+                pend = self._pending_reqs.setdefault(r, [])
+                # prune completed requests -- but keep ones that failed
+                # without anyone waiting, so flush()/free() still surface
+                # fire-and-forget errors instead of silently dropping them
+                pend[:] = [p for p in pend
+                           if not p.test() or (p._failed() and not p._observed)]
+                pend.append(req)
+        return req
+
+    def _submit(self, fn, rank: int) -> Request:
+        return self._register(Request(self._get_pool().submit(fn, key=rank)),
+                              [rank])
+
+    def rput(self, data: np.ndarray, target_rank: int, target_disp: int = 0,
+             *, handle: int | None = None) -> Request:
+        """MPI_Rput: nonblocking put; completion = target memory copy updated.
+
+        The origin buffer is snapshotted eagerly, so the caller may reuse it
+        immediately.  Storage persistence still requires sync/flush_async.
+        """
+        buf = np.ascontiguousarray(data).view(np.uint8).ravel().copy()
+        self._seg(target_rank, handle)  # eager rank/handle validation
+        off = target_disp * self.disp_unit
+
+        def task():
+            lock = self._locks[target_rank]
+            lock.acquire(exclusive=False)
+            try:
+                self._seg(target_rank, handle).write(off, buf)
+            finally:
+                lock.release()
+
+        return self._submit(task, target_rank)
+
+    def rget(self, target_rank: int, target_disp: int, count: int,
+             dtype=np.uint8, *, handle: int | None = None) -> Request:
+        """MPI_Rget: nonblocking get; ``wait()`` returns the fetched array."""
+        self._seg(target_rank, handle)
+
+        def task():
+            lock = self._locks[target_rank]
+            lock.acquire(exclusive=False)
+            try:
+                return self.get(target_rank, target_disp, count, dtype,
+                                handle=handle)
+            finally:
+                lock.release()
+
+        return self._submit(task, target_rank)
+
+    def raccumulate(self, data: np.ndarray, target_rank: int,
+                    target_disp: int = 0, op: str = "sum",
+                    *, handle: int | None = None) -> Request:
+        """MPI_Raccumulate: nonblocking accumulate (atomic at the target)."""
+        if op not in self._ACC_OPS:
+            raise WindowError(f"unknown accumulate op {op!r}")
+        buf = np.ascontiguousarray(data).copy()
+        self._seg(target_rank, handle)
+
+        def task():
+            self.accumulate(buf, target_rank, target_disp, op, handle=handle)
+
+        return self._submit(task, target_rank)
+
+    def flush_async(self, rank: int | None = None, *, full: bool = False,
+                    exclusive: bool = False, on_complete=None) -> Request:
+        """Asynchronous MPI_Win_sync: queue a selective dirty-page flush.
+
+        Ordered after every pending request to the same rank(s), so an
+        ``rput -> flush_async`` pipeline persists the rput's bytes.  The
+        returned Request's ``wait()`` yields total bytes flushed.
+
+        ``exclusive`` wraps each rank's flush in its exclusive lock (paper
+        Listing 4's consistent checkpoint).  ``on_complete(total_bytes)``
+        runs on the write-back thread once every rank has flushed -- only on
+        success -- and its errors surface at ``wait()``.
+        """
+        if self.freed:
+            raise WindowError("window has been freed")
+        ranks = list(range(self.comm.size)) if rank is None else [rank]
+        for r in ranks:
+            if r < 0 or r >= self.comm.size:
+                raise WindowError(
+                    f"rank {r} outside communicator of size {self.comm.size}")
+        state = {"remaining": len(ranks), "total": 0}
+        state_lock = threading.Lock()
+        pool = self._get_pool()
+
+        def make_task(r: int):
+            def task():
+                if exclusive:
+                    self._locks[r].acquire(exclusive=True)
+                try:
+                    segs = self.segments[r] if self.dynamic \
+                        else [self.segments[r]]
+                    n = 0
+                    for seg in segs:
+                        if seg is not None and hasattr(seg, "sync"):
+                            n += seg.sync(full=full)
+                finally:
+                    if exclusive:
+                        self._locks[r].release()
+                with state_lock:
+                    state["total"] += n
+                    state["remaining"] -= 1
+                    last = state["remaining"] == 0
+                if last and on_complete is not None:
+                    on_complete(state["total"])
+                return n
+            return task
+
+        tickets = [pool.submit(make_task(r), key=r) for r in ranks]
+        return self._register(Request(tickets, combine=sum), ranks)
+
+    def dirty_bytes(self, rank: int | None = None) -> int:
+        """Upper bound on un-persisted (dirty page-cache) bytes."""
+        ranks = range(self.comm.size) if rank is None else [rank]
+        total = 0
+        for r in ranks:
+            segs = self.segments[r] if self.dynamic else [self.segments[r]]
+            for seg in segs:
+                if seg is not None and hasattr(seg, "dirty_bytes"):
+                    total += seg.dirty_bytes()
+        return total
+
     # -- load/store access ----------------------------------------------------
     def baseptr(self, rank: int):
         """Local load/store pointer (memory windows / mmap storage windows
@@ -383,16 +648,47 @@ class Window:
         self._locks[rank].release()
 
     def flush(self, rank: int) -> None:
-        """MPI_Win_flush: complete pending RMA at target (no-op: synchronous)."""
-        self._seg(rank) if not self.dynamic else None
+        """MPI_Win_flush: complete every pending request-based RMA operation
+        and queued flush targeting ``rank`` (epoch-style completion)."""
+        if self.freed:
+            raise WindowError("window has been freed")
+        if rank < 0 or rank >= self.comm.size:
+            raise WindowError(f"rank {rank} outside communicator of size {self.comm.size}")
+        with self._req_lock:
+            reqs = list(self._pending_reqs.get(rank, ()))
+            self._pending_reqs[rank] = []
+        first: BaseException | None = None
+        for r in reqs:
+            seen = r._observed
+            try:
+                r.wait()
+            except BaseException as e:
+                # complete *every* request before raising; errors already
+                # observed via wait() don't re-raise
+                if not seen and first is None:
+                    first = e
+        if first is not None:
+            raise first
 
-    def sync(self, rank: int | None = None, full: bool = False) -> int:
+    def flush_all(self) -> None:
+        """MPI_Win_flush_all: complete pending requests at every rank."""
+        for rank in range(self.comm.size):
+            self.flush(rank)
+
+    def sync(self, rank: int | None = None, full: bool = False,
+             *, blocking: bool = True):
         """MPI_Win_sync: flush dirty pages of the rank's storage segment(s).
 
         Returns bytes flushed (0 for memory windows / already-clean storage:
         'this routine may return immediately if the pages are already
         synchronized' -- the selective synchronization of the paper).
+
+        ``blocking=False`` queues the flush on the background write-back
+        pool and returns a :class:`Request` whose ``wait()`` yields the
+        bytes flushed (equivalent to ``flush_async``).
         """
+        if not blocking:
+            return self.flush_async(rank, full=full)
         if self.freed:
             raise WindowError("window has been freed")
         ranks = range(self.comm.size) if rank is None else [rank]
@@ -406,10 +702,30 @@ class Window:
 
     # -- teardown -----------------------------------------------------------
     def free(self) -> None:
-        """Collective MPI_Win_free; honors unlink/discard hints."""
+        """Collective MPI_Win_free; honors unlink/discard hints.
+
+        Drains the nonblocking layer first: every pending request and queued
+        ``flush_async`` completes before segments close, so fire-and-forget
+        flushes are durable once free() returns.  Errors raised by pending
+        background operations re-raise here after teardown finishes.
+        """
         if self.freed:
             return
         self.comm.barrier()
+        errors: list[BaseException] = []
+        if self._pool is not None:
+            with self._req_lock:
+                pending = [r for rs in self._pending_reqs.values() for r in rs]
+                self._pending_reqs.clear()
+            for req in pending:
+                seen = req._observed
+                try:
+                    req.wait()
+                except BaseException as e:
+                    if not seen:
+                        errors.append(e)
+            self._pool.shutdown()
+            self._pool = None
         for rank_seg in self.segments:
             segs = rank_seg if self.dynamic else [rank_seg]
             for seg in segs:
@@ -417,6 +733,8 @@ class Window:
                     seg.close(unlink=self.hints.unlink, discard=self.hints.discard)
         self.freed = True
         self.comm._unregister(self)
+        if errors:
+            raise errors[0]
 
     def __enter__(self):
         return self

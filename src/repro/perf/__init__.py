@@ -1,3 +1,3 @@
-from .hlo_analysis import CostReport, analyze_hlo
+from .hlo_analysis import CostReport, analyze_hlo, xla_cost_analysis
 
-__all__ = ["CostReport", "analyze_hlo"]
+__all__ = ["CostReport", "analyze_hlo", "xla_cost_analysis"]

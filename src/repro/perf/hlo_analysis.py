@@ -24,7 +24,20 @@ import math
 import re
 from functools import lru_cache
 
-__all__ = ["CostReport", "analyze_hlo"]
+__all__ = ["CostReport", "analyze_hlo", "xla_cost_analysis"]
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns a flat dict of counters; newer releases return a
+    one-element list (one dict per program).  Returns a plain dict either
+    way, empty if XLA reports nothing.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
 
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
@@ -63,6 +76,35 @@ _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
 _TYPE_RE = re.compile(r"[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?")
 _HEADER_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+|[\w\.\-]+)\s*\(.*\{\s*$")
 _TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"')
+_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _operand_names(rest: str) -> list[str]:
+    """Operand names from the '(...)' group that follows an opcode.
+
+    Recent XLA prints typed operands -- ``dot(f32[64,64]{1,0} %a, ...)`` --
+    which the old ``split(',')`` + ``lstrip('%')`` parsing returned with the
+    type prefix attached, so symbol-table lookups silently missed and every
+    contraction dim fell back to 1 (under-counting loop-nest FLOPs ~64x in
+    the nested-scan test).  Scanning the balanced paren group for ``%names``
+    handles both the typed and the bare (``dot(%a, %b)``) forms, as well as
+    tuple-typed operands with nested parens.
+    """
+    s = rest.strip()
+    if not s.startswith("("):
+        return []
+    depth, end = 0, -1
+    for i, ch in enumerate(s):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    if end < 0:
+        return []
+    return _NAME_RE.findall(s[: end + 1])
 
 
 def _parse_op_line(line: str):
@@ -179,8 +221,7 @@ def _parse_computations(text: str) -> dict[str, list[_Op]]:
 
 def _dot_flops(op: _Op, symtab: dict[str, str]) -> float:
     _, out_elems, _ = _type_info(op.type_str)
-    am = re.match(r"\(([^)]*)\)", op.rest.strip())
-    operands = [o.strip().lstrip("%") for o in am.group(1).split(",")] if am else []
+    operands = _operand_names(op.rest)
     cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
     k = 1
     if cm and operands:
@@ -198,8 +239,7 @@ def _cc_flops(op: _Op, symtab: dict[str, str]) -> float:
                      op.rest, re.I):
         return 0.0
     _, out_elems, _ = _type_info(op.type_str)
-    am = re.match(r"\(([^)]*)\)", op.rest.strip())
-    operands = [o.strip().lstrip("%") for o in am.group(1).split(",")] if am else []
+    operands = _operand_names(op.rest)
     if operands:
         _, _, lhs_dims = _type_info(symtab.get(operands[0], ""))
         if lhs_dims:
@@ -211,11 +251,7 @@ _TRANSPARENT = {"convert", "copy", "bitcast", "reshape", "transpose"}
 
 
 def _first_operands(op: "_Op") -> list[str]:
-    am = re.match(r"\(([^)]*)\)", op.rest.strip())
-    if not am:
-        return []
-    return [x.strip().lstrip("%") for x in am.group(1).split(",") if
-            x.strip().startswith("%")]
+    return _operand_names(op.rest)
 
 
 def _build_alias_ctx(comps):
@@ -404,17 +440,13 @@ def analyze_hlo(text: str) -> CostReport:
                 rep.flops += res_elems
             elif oc in ("reduce", "reduce-window", "scatter"):
                 # approx: one op per input element of the reduced operand
-                am = re.match(r"\(([^)]*)\)", op.rest.strip())
-                ops_ = [o.strip().lstrip("%") for o in am.group(1).split(",")] \
-                    if am else []
+                ops_ = _operand_names(op.rest)
                 in_elems = sum(_type_info(symtab.get(o, ""))[1] for o in ops_[:1])
                 rep.flops += max(in_elems, res_elems)
             # ---- collectives ---------------------------------------------------
             for cop in _COLLECTIVES:
                 if oc == cop or oc == cop + "-start":
-                    am = re.match(r"\(([^)]*)\)", op.rest.strip())
-                    operands = [o.strip().lstrip("%") for o in
-                                am.group(1).split(",")] if am else []
+                    operands = _operand_names(op.rest)
                     ob = sum(_type_info(symtab.get(o, ""))[0] for o in operands)
                     slot = rep.collectives.setdefault(
                         cop, {"count": 0, "operand_bytes": 0, "result_bytes": 0})
@@ -423,9 +455,7 @@ def analyze_hlo(text: str) -> CostReport:
                     slot["result_bytes"] += res_bytes
             # ---- bytes (traffic at fusion boundaries) ---------------------------
             if not in_fusion and oc in _TRAFFIC_OPS:
-                am = re.match(r"\(([^)]*)\)", op.rest.strip())
-                operands = [o.strip().lstrip("%") for o in am.group(1).split(",")] \
-                    if am else []
+                operands = _operand_names(op.rest)
                 if oc == "dynamic-update-slice" and len(operands) >= 2:
                     # in-place: read + write only the updated slice
                     upd = _charge(comp, operands[1], by_name, convert_only)

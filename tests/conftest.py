@@ -4,8 +4,76 @@ import os
 # dry-run) forces 512 devices in its own subprocess.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+import sys
+import types
+
 import numpy as np
 import pytest
+
+
+def _install_hypothesis_stub() -> None:
+    """Let the suite collect and run without hypothesis installed.
+
+    Six test modules import ``hypothesis`` at module scope, which used to
+    abort collection of the whole module (taking every plain test in it
+    down too).  This shim registers a stub ``hypothesis`` package whose
+    ``@given`` replaces the test with a graceful skip -- the importorskip
+    analogue, but per-test instead of per-module, so non-property tests in
+    those modules still run.  Install the real thing via
+    ``requirements-dev.txt`` (or ``scripts/tier1.sh``) to run the property
+    tests.
+    """
+
+    class _Strategy:
+        def __init__(self, name: str = "strategy"):
+            self._name = name
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):  # .map/.filter/.flatmap chains
+            return _Strategy(f"{self._name}.{name}")
+
+        def __repr__(self):
+            return f"<hypothesis-stub strategy {self._name}>"
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.__getattr__ = lambda name: _Strategy(name)  # PEP 562
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def skipper(request):
+                pytest.skip("hypothesis is not installed "
+                            "(pip install -r requirements-dev.txt)")
+            skipper.__name__ = getattr(fn, "__name__", "test")
+            skipper.__doc__ = getattr(fn, "__doc__", None)
+            return skipper
+        return deco
+
+    class settings:  # used both as @settings(...) and settings(...) object
+        def __init__(self, *_args, **_kwargs):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = lambda _cond=True: True
+    hyp.note = lambda _msg: None
+    hyp.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, filter_too_much=None)
+    hyp.strategies = st_mod
+    hyp.__stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - exercised when dev deps missing
+    _install_hypothesis_stub()
 
 
 @pytest.fixture

@@ -1,0 +1,277 @@
+"""Nonblocking one-sided layer: rput/rget/raccumulate Requests, the async
+flush pipeline, epoch completion, and the paper's durability semantics."""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+from repro.core import Communicator, Request, Window
+from repro.train.offload_opt import OutOfCoreAdamW
+from repro.train.optimizer import AdamWConfig
+
+PAGES = 16  # windows sized so small writes stay under vm.dirty_ratio
+
+
+def storage_info(tmp_path, name="w.bin"):
+    return {"alloc_type": "storage",
+            "storage_alloc_filename": str(tmp_path / name)}
+
+
+def backing_file(tmp_path, name, rank, nranks):
+    base = str(tmp_path / name)
+    return base if nranks == 1 else f"{base}.{rank}"
+
+
+def test_rput_rget_waitall_end_to_end(tmp_path):
+    """Acceptance: request-based RMA across all ranks of a storage window,
+    completed with waitall, then persisted and verified on disk."""
+    comm = Communicator(4)
+    win = Window.allocate(comm, PAGES * 4096, info=storage_info(tmp_path))
+    puts = [win.rput(np.full(256, r + 1, np.uint8), r, 128) for r in range(4)]
+    assert Request.waitall(puts) == [None] * 4
+    gets = [win.rget(r, 128, 256) for r in range(4)]
+    vals = Request.waitall(gets)
+    for r in range(4):
+        assert (vals[r] == r + 1).all()
+    assert win.sync() > 0
+    for r in range(4):
+        raw = np.fromfile(backing_file(tmp_path, "w.bin", r, 4), np.uint8)
+        assert (raw[128:384] == r + 1).all()
+    win.free()
+
+
+def test_request_test_wait_semantics():
+    comm = Communicator(1)
+    win = Window.allocate(comm, 4096)
+    req = win.rget(0, 0, 16)
+    val = req.wait(timeout=10.0)
+    assert req.test()  # completed requests stay completed
+    assert (val == 0).all()
+    assert (req.wait() == 0).all()  # wait() is idempotent
+    win.free()
+
+
+def test_per_rank_completion_ordering():
+    """Requests to the same target rank complete in issue order: the last
+    rput wins, and an rget issued after an rput observes its data."""
+    comm = Communicator(2)
+    win = Window.allocate(comm, 4096)
+    for j in range(100):
+        win.rput(np.full(8, j % 251, np.uint8), 1, 64)
+    probe = win.rget(1, 64, 8)  # ordered after all 100 rputs
+    assert (probe.wait(timeout=10.0) == 99 % 251).all()
+    win.flush(1)
+    assert (win.get(1, 64, 8) == 99 % 251).all()
+    win.free()
+
+
+def test_flush_completes_only_target_rank_then_flush_all():
+    comm = Communicator(3)
+    win = Window.allocate(comm, 4096)
+    reqs = {r: win.rput(np.full(4, r + 7, np.uint8), r, 0) for r in range(3)}
+    win.flush(1)
+    assert reqs[1].test()
+    assert (win.get(1, 0, 4) == 8).all()
+    win.flush_all()
+    assert Request.testall(list(reqs.values()))
+    for r in range(3):
+        assert (win.get(r, 0, 4) == r + 7).all()
+    win.free()
+
+
+def test_raccumulate_request():
+    comm = Communicator(1)
+    win = Window.allocate(comm, 64)
+    win.put(np.array([5], np.int64).view(np.uint8), 0, 0)
+    reqs = [win.raccumulate(np.array([v], np.int64), 0, 0, "sum")
+            for v in (1, 2, 3)]
+    Request.waitall(reqs)
+    assert win.get(0, 0, 1, np.int64)[0] == 11
+    win.free()
+
+
+def test_crash_before_flush_loses_unsynced_data(tmp_path):
+    """Paper §2.1.1 preserved by the nonblocking layer: a *completed* rput
+    lives only in the page cache; disk has it only after the flush."""
+    comm = Communicator(1)
+    win = Window.allocate(comm, PAGES * 4096, info=storage_info(tmp_path))
+    win.rput(np.full(100, 7, np.uint8), 0, 0).wait()
+    on_disk = np.fromfile(tmp_path / "w.bin", np.uint8, 100)
+    assert not (on_disk == 7).all()  # "crash" now would lose the rput
+    win.flush_async(0).wait()
+    on_disk = np.fromfile(tmp_path / "w.bin", np.uint8, 100)
+    assert (on_disk == 7).all()
+    win.free()
+
+
+def test_flush_async_durable_on_free(tmp_path):
+    """free() drains the pipeline: a fire-and-forget flush_async (and the
+    rput before it) is on disk once free() returns."""
+    comm = Communicator(1)
+    win = Window.allocate(comm, PAGES * 4096, info=storage_info(tmp_path))
+    win.rput(np.full(64, 42, np.uint8), 0, 2048)
+    win.flush_async(0)  # never waited
+    win.free()
+    raw = np.fromfile(tmp_path / "w.bin", np.uint8, 4096)
+    assert (raw[2048:2112] == 42).all()
+
+
+def test_sync_nonblocking_returns_request(tmp_path):
+    comm = Communicator(1)
+    win = Window.allocate(comm, PAGES * 4096, info=storage_info(tmp_path))
+    win.put(np.full(10, 9, np.uint8), 0, 500)
+    assert win.dirty_bytes(0) > 0
+    req = win.sync(0, blocking=False)
+    assert isinstance(req, Request)
+    assert req.wait(timeout=10.0) == 4096  # one dirty page, selectively
+    assert win.dirty_bytes(0) == 0
+    # clean window: async sync completes with 0 bytes
+    assert win.sync(0, blocking=False).wait(timeout=10.0) == 0
+    win.free()
+
+
+def test_concurrent_rput_blocked_by_exclusive_lock():
+    """An exclusive lock epoch holds off background rput traffic; the
+    request completes only after unlock."""
+    comm = Communicator(1)
+    win = Window.allocate(comm, 4096)
+    win.put(np.full(8, 1, np.uint8), 0, 0)
+    win.lock(0, exclusive=True)
+    try:
+        req = win.rput(np.full(8, 2, np.uint8), 0, 0)
+        time.sleep(0.2)  # give the pool time to pick the task up
+        assert not req.test()  # blocked on the rank lock
+    finally:
+        win.unlock(0)
+    req.wait(timeout=10.0)
+    assert (win.get(0, 0, 8) == 2).all()
+    win.free()
+
+
+def test_request_error_surfaces_at_wait():
+    comm = Communicator(1)
+    win = Window.allocate(comm, 4096)
+    bad = win.rput(np.zeros(16, np.uint8), 0, 4096)  # out of range
+    with pytest.raises(IndexError):
+        bad.wait(timeout=10.0)
+    # the window stays usable, and free() does not re-raise observed errors
+    win.rput(np.full(4, 3, np.uint8), 0, 0).wait()
+    assert (win.get(0, 0, 4) == 3).all()
+    win.free()
+
+
+def test_fire_and_forget_error_surfaces_at_flush_and_free():
+    """A background failure nobody waited on must not vanish: later
+    submissions' pruning keeps it tracked, and flush()/free() raise it.
+    flush() still completes every other pending request first."""
+    comm = Communicator(1)
+    win = Window.allocate(comm, 4096)
+    win.rput(np.zeros(16, np.uint8), 0, 4096)  # fails on the pool thread
+    good = win.rput(np.full(8, 7, np.uint8), 0, 0)  # triggers pruning
+    with pytest.raises(IndexError):
+        win.flush(0)
+    assert good.test()  # the good request completed before the raise
+    assert (win.get(0, 0, 8) == 7).all()
+    win.free()  # error was observed by flush(): free() is clean
+    win2 = Window.allocate(comm, 4096)
+    win2.rput(np.zeros(16, np.uint8), 0, 4096)
+    with pytest.raises(IndexError):
+        win2.free()
+    assert win2.freed  # teardown completed despite the surfaced error
+
+
+def test_mapped_request_shares_observation():
+    """Observing an error through a map()-derived request marks the
+    registered original too -- free() must not re-raise it."""
+    comm = Communicator(1)
+    win = Window.allocate(comm, 4096)
+    mapped = win.rget(0, 4000, 1000).map(lambda a: a)  # out of range
+    with pytest.raises(IndexError):
+        mapped.wait(timeout=10.0)
+    win.free()  # clean: the underlying request counts as observed
+
+
+def test_many_threads_issue_requests_concurrently():
+    """rput is thread-safe at the issue side too (the train loop and the
+    checkpoint manager share windows)."""
+    comm = Communicator(2)
+    win = Window.allocate(comm, 4096)
+    errs = []
+
+    def worker(seed):
+        try:
+            reqs = [win.rput(np.full(4, (seed + i) % 251, np.uint8),
+                             (seed + i) % 2, 4 * seed)
+                    for i in range(20)]
+            Request.waitall(reqs)
+        except BaseException as e:  # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    win.flush_all()
+    win.free()
+
+
+def test_ckpt_save_async_pipeline(tmp_path):
+    """Back-to-back save_async: the second save waits the first's request,
+    manifests commit in order, and wait() surfaces the final state."""
+    comm = Communicator(1)
+    specs = {"w": ((64, 64), np.float32)}
+    cm = CheckpointManager(str(tmp_path), comm, specs)
+    req = cm.save_async(1, {"w": np.ones((64, 64), np.float32)})
+    assert isinstance(req, Request)
+    cm.save_async(2, {"w": np.full((64, 64), 2.0, np.float32)})
+    cm.wait()
+    assert cm.saves == 2
+    r = cm.restore()
+    assert r.step == 2 and (r.tree["w"] == 2).all()
+    cm.close()
+
+
+def test_offload_opt_prefetch_matches_blocking(tmp_path):
+    """The rget-prefetch / rput-write-behind walk is bit-identical to the
+    synchronous walk."""
+    rng = np.random.default_rng(1)
+    params = {"w": rng.standard_normal((64, 16)).astype(np.float32)}
+    shapes = {k: (v.shape, v.dtype) for k, v in params.items()}
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=50,
+                      clip_norm=0.0, weight_decay=0.01)
+    oo_a = OutOfCoreAdamW(Communicator(1), shapes, str(tmp_path / "a"), cfg,
+                          block_bytes=256)
+    oo_b = OutOfCoreAdamW(Communicator(1), shapes, str(tmp_path / "b"), cfg,
+                          block_bytes=256)
+    oo_a.initialize(params)
+    oo_b.initialize(params)
+    for _ in range(3):
+        grads = {k: rng.standard_normal(v.shape).astype(np.float32)
+                 for k, v in params.items()}
+        out_a = oo_a.update(grads, prefetch=True)
+        out_b = oo_b.update(grads, prefetch=False)
+        for k in params:
+            np.testing.assert_array_equal(out_a[k], out_b[k])
+    for k in params:
+        np.testing.assert_array_equal(oo_a.masters()[k], oo_b.masters()[k])
+    oo_a.free()
+    oo_b.free()
+
+
+def test_dynamic_window_requests(tmp_path):
+    from repro.core import alloc_mem
+    comm = Communicator(1)
+    seg = alloc_mem(1 << 16, info=storage_info(tmp_path, "dyn.bin"))
+    win = Window.create_dynamic(comm)
+    h = win.attach(0, seg)
+    win.rput(np.full(32, 5, np.uint8), 0, 0, handle=h)
+    got = win.rget(0, 0, 32, handle=h).wait(timeout=10.0)
+    assert (got == 5).all()
+    assert win.flush_async(0).wait(timeout=10.0) > 0
+    win.free()
