@@ -8,6 +8,14 @@ gradients; the update streams window blocks: fetch -> Adam math in numpy ->
 put back.  Every ``sync()`` is a selective flush, so the same windows double
 as the checkpoint (restart = reopen the files).
 
+The streaming walk is pipelined through the window's nonblocking layer:
+while the Adam math for block ``i`` runs, ``rget`` requests prefetch block
+``i+1`` of all three state arrays and ``rput`` requests write block ``i-1``
+behind -- per-rank FIFO ordering makes the write-behind safe, and the
+storage latency hides under the compute (the paper's overlap argument
+applied to the optimizer walk).  Pass ``prefetch=False`` to fall back to
+the fully synchronous walk.
+
 For the 236B/400B MoE configs this is the difference between fitting and
 not fitting: 12 bytes/param of optimizer state move off-HBM, leaving 2
 (bf16 weights) + 2 (grads) on device.
@@ -19,6 +27,7 @@ import numpy as np
 
 from repro.core.comm import Communicator
 from repro.core.offload import WindowedPyTree
+from repro.core.window import Request
 from repro.train.optimizer import AdamWConfig, cosine_schedule
 
 __all__ = ["OutOfCoreAdamW"]
@@ -56,9 +65,17 @@ class OutOfCoreAdamW:
             self.state.put(f"v/{k}", np.zeros_like(p))
         self._initialized = True
 
-    def update(self, grads: dict, *, grad_scale: float = 1.0) -> dict:
+    def update(self, grads: dict, *, grad_scale: float = 1.0,
+               prefetch: bool = True) -> dict:
         """Streamed blockwise AdamW.  grads: host-fetchable arrays (bf16 ok).
-        Returns new bf16 params dict (numpy) to push to device."""
+        Returns new bf16 params dict (numpy) to push to device.
+
+        With ``prefetch`` (default), block ``i+1`` of all three state arrays
+        is fetched with ``rget`` while block ``i``'s math runs, and block
+        writes go out as ``rput`` write-behind; the walk waits for the
+        write-behind before returning, so callers observe fully-applied
+        state.  Results are bit-identical to the synchronous walk.
+        """
         cfg = self.cfg
         lr = float(cosine_schedule(cfg, self.step))
         self.step += 1
@@ -74,20 +91,39 @@ class OutOfCoreAdamW:
             new_p = np.empty_like(g_full)
             off = 0
             decay = cfg.weight_decay if _decayable(k) else 0.0
-            for i in range(wa_p.num_blocks):
-                m = wa_m.read_block(i)
-                v = wa_v.read_block(i)
-                p = wa_p.read_block(i)
+            nblocks = wa_p.num_blocks
+
+            def fetch(i):
+                return (wa_m.read_block_async(i), wa_v.read_block_async(i),
+                        wa_p.read_block_async(i))
+
+            pending_writes: list[Request] = []
+            nxt = fetch(0) if prefetch and nblocks else None
+            for i in range(nblocks):
+                if prefetch:
+                    rm, rv, rp = nxt
+                    nxt = fetch(i + 1) if i + 1 < nblocks else None
+                    m, v, p = rm.wait(), rv.wait(), rp.wait()
+                else:
+                    m = wa_m.read_block(i)
+                    v = wa_v.read_block(i)
+                    p = wa_p.read_block(i)
                 g = g_full[off: off + p.size]
                 m = cfg.b1 * m + (1 - cfg.b1) * g
                 v = cfg.b2 * v + (1 - cfg.b2) * g * g
                 upd = (m / b1c) / (np.sqrt(v / b2c) + cfg.eps) + decay * p
                 p = p - lr * upd
-                wa_m.write_block(i, m)
-                wa_v.write_block(i, v)
-                wa_p.write_block(i, p)
+                if prefetch:
+                    pending_writes += [wa_m.write_block_async(i, m),
+                                       wa_v.write_block_async(i, v),
+                                       wa_p.write_block_async(i, p)]
+                else:
+                    wa_m.write_block(i, m)
+                    wa_v.write_block(i, v)
+                    wa_p.write_block(i, p)
                 new_p[off: off + p.size] = p
                 off += p.size
+            Request.waitall(pending_writes)
             shape = self.state.slots[f"master/{k}"].shape
             out[k] = new_p.reshape(shape)
         return out
