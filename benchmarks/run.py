@@ -21,7 +21,7 @@ import traceback
 from benchmarks.common import Bench
 
 SUITES = ("imb_rma", "mstream", "dht", "hacc_io", "mapreduce",
-          "combined_win", "async_win", "roofline")
+          "combined_win", "async_win", "selective_sync", "roofline")
 
 
 def main() -> None:
@@ -48,6 +48,8 @@ def main() -> None:
                 from benchmarks import combined_win as m
             elif name == "async_win":
                 from benchmarks import async_win as m
+            elif name == "selective_sync":
+                from benchmarks import selective_sync as m
             else:
                 from benchmarks import roofline as m
             m.run(bench)

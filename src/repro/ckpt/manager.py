@@ -19,6 +19,15 @@ Implements the paper's fault-tolerance recipe end to end:
   ``sync_async`` request whose completion hook commits the manifest.
   ``wait()`` joins the request before the next checkpoint swaps buffers, so
   the flush runs concurrently with the training step in between.
+* **Snapshot-diff staging** (``snapshot_diff=True``, the default): the
+  manager keeps a host copy of each window's last-checkpointed bytes and
+  page-diffs the new state against it, so only *changed* blocks are put into
+  the page cache and the flush is narrowed with ``mask=changed`` -- the
+  host-side twin of ``Window.sync_from_device``.  If a flush fails, the
+  snapshot for that window is invalidated and the backing re-marks the taken
+  blocks, so the retry replays a full put + unmasked flush (replay, never
+  skip); the manifest hook only ever runs after a *successful* flush, so a
+  crash mid-save can never commit a manifest ahead of its data.
 """
 
 from __future__ import annotations
@@ -33,6 +42,7 @@ import numpy as np
 
 from repro.core.comm import Communicator
 from repro.core.offload import WindowedPyTree
+from repro.core.storage import dirty_runs, mark_span
 from repro.core.window import Request
 
 __all__ = ["CheckpointManager", "RestoreResult"]
@@ -61,7 +71,7 @@ class CheckpointManager:
                  rank: int = 0, double_buffer: bool = True,
                  mechanism: str = "cached", writeback_interval: float | None = None,
                  striping_factor: int = 1, striping_unit: int = 1 << 20,
-                 page_size_hint: int | None = None):
+                 page_size_hint: int | None = None, snapshot_diff: bool = True):
         self.directory = directory
         self.comm = comm
         self.rank = rank
@@ -69,6 +79,12 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
         self.names = ["a", "b"] if double_buffer else ["a"]
         self.windows: dict[str, WindowedPyTree] = {}
+        # snapshot_diff: page-diff each save against the window's last
+        # checkpoint (host snapshot) and put/flush only changed blocks --
+        # replaces the page cache's compare-on-write (which would compare
+        # the same bytes a second time).
+        self.snapshot_diff = snapshot_diff
+        self._snapshots: dict[str, dict[str, np.ndarray]] = {}
         for name in self.names:
             info = {
                 "alloc_type": "storage",
@@ -79,14 +95,17 @@ class CheckpointManager:
             self.windows[name] = WindowedPyTree.allocate(
                 comm, self.specs, info, rank=rank, mechanism=mechanism,
                 writeback_interval=writeback_interval)
-            # selective sync even under whole-tree puts:
-            for seg in self._segments(self.windows[name]):
-                if hasattr(seg, "backing") and hasattr(seg.backing, "compare_on_write"):
-                    seg.backing.compare_on_write = True
+            if not snapshot_diff:
+                # selective sync even under whole-tree puts:
+                for seg in self._segments(self.windows[name]):
+                    if hasattr(seg, "backing") and hasattr(seg.backing,
+                                                           "compare_on_write"):
+                        seg.backing.compare_on_write = True
         self._turn = 0
         self.saves = 0
         self.bytes_flushed_total = 0
         self._pending: Request | None = None
+        self._pending_target: str | None = None
 
     @staticmethod
     def _segments(wt: WindowedPyTree):
@@ -116,21 +135,89 @@ class CheckpointManager:
         os.replace(tmp, path)  # atomic commit
 
     # -- save -----------------------------------------------------------------
+    def _page_size(self, wt: WindowedPyTree) -> int:
+        seg = wt.win.segments[self.rank]
+        tracker = getattr(seg, "tracker", None)
+        return tracker.page_size if tracker is not None else WindowedPyTree.PAGE
+
+    @staticmethod
+    def _page_diff(new: np.ndarray, old: np.ndarray, ps: int) -> np.ndarray:
+        """Per-page changed flags between two equal-length uint8 buffers."""
+        nb = -(-new.nbytes // ps) if new.nbytes else 0
+        changed = np.zeros(nb, dtype=bool)
+        whole = (new.nbytes // ps) * ps
+        if whole:
+            changed[: whole // ps] = np.any(
+                new[:whole].reshape(-1, ps) != old[:whole].reshape(-1, ps),
+                axis=1)
+        if new.nbytes > whole:  # last partial page
+            changed[-1] = not np.array_equal(new[whole:], old[whole:])
+        return changed
+
+    def _stage(self, target: str, wt: WindowedPyTree,
+               tree: Mapping[str, Any]) -> tuple[dict[str, int],
+                                                 np.ndarray | None]:
+        """Write ``tree`` into the window; returns (crcs, flush mask).
+
+        With a snapshot of the window's last checkpoint available, only
+        pages whose bytes changed are put (coalesced runs) and the returned
+        mask names exactly those window blocks; otherwise every slot is put
+        in full and the mask is None (flush everything dirty).
+        """
+        snap = self._snapshots.get(target) if self.snapshot_diff else None
+        ps = self._page_size(wt)
+        seg = wt.win.segments[self.rank]
+        mask = (np.zeros(-(-seg.size // ps), dtype=bool)
+                if snap is not None else None)
+        crcs: dict[str, int] = {}
+        new_snap: dict[str, np.ndarray] = {}
+        for k in sorted(self.specs):
+            arr = np.ascontiguousarray(tree[k], dtype=self.specs[k][1])
+            crcs[k] = _crc(arr)
+            raw = arr.view(np.uint8).ravel()
+            if snap is not None:
+                slot = wt.slots[k]
+                for b0, b1 in dirty_runs(self._page_diff(raw, snap[k], ps)):
+                    lo, hi = b0 * ps, min(b1 * ps, raw.nbytes)
+                    wt.win.put(raw[lo:hi], self.rank, slot.offset + lo)
+                    mark_span(mask, slot.offset + lo, slot.offset + hi, ps)
+            else:
+                wt.put(k, arr)
+            if self.snapshot_diff:
+                new_snap[k] = raw.copy()
+        if self.snapshot_diff:
+            self._snapshots[target] = new_snap
+        return crcs, mask
+
+    def _checked_stage(self, target: str, wt: WindowedPyTree,
+                       tree: Mapping[str, Any]):
+        """_stage, but a failure mid-staging (e.g. ENOSPC on a cache-eviction
+        write) invalidates the window's snapshot: the page cache now holds a
+        mix of old and new pages, so the next save must replay a full put +
+        unmasked flush rather than diff against a snapshot that no longer
+        describes the cache."""
+        try:
+            return self._stage(target, wt, tree)
+        except BaseException:
+            self._snapshots.pop(target, None)
+            raise
+
     def save(self, step: int, tree: Mapping[str, Any]) -> int:
         """Synchronous checkpoint.  Returns bytes flushed (selective)."""
         self.wait()
         target = self.names[self._turn % len(self.names)]
         self._turn += 1
         wt = self.windows[target]
-        crcs: dict[str, int] = {}
-        for k in sorted(self.specs):
-            arr = np.ascontiguousarray(tree[k], dtype=self.specs[k][1])
-            crcs[k] = _crc(arr)
-            wt.put(k, arr)
+        crcs, mask = self._checked_stage(target, wt, tree)
         # Paper Listing 4: exclusive lock prevents remote access during sync.
         wt.win.lock(self.rank, exclusive=True)
         try:
-            flushed = wt.sync()
+            flushed = wt.sync(mask=mask)
+        except BaseException:
+            # The snapshot now disagrees with disk: drop it so the retry
+            # replays a full put + unmasked flush (never skips).
+            self._snapshots.pop(target, None)
+            raise
         finally:
             wt.win.unlock(self.rank)
         self._write_manifest(step, target, crcs)
@@ -141,20 +228,19 @@ class CheckpointManager:
     def save_async(self, step: int, tree: Mapping[str, Any]) -> Request:
         """Stage the state, then flush + commit on the write-back pool.
 
-        The puts land in the window's page cache synchronously (cheap memcpy);
-        the storage flush -- the expensive part -- runs as a ``sync_async``
-        request (exclusive lock, paper Listing 4) whose completion hook
-        commits the manifest.  Errors surface at ``wait()``.
+        The puts land in the window's page cache synchronously (cheap
+        memcpy) -- only pages the snapshot diff marks as changed; the
+        storage flush -- the expensive part -- runs as a ``sync_async``
+        request (exclusive lock, paper Listing 4) narrowed to the changed
+        blocks, whose completion hook commits the manifest.  The hook runs
+        only after a successful flush, so the manifest can never get ahead
+        of its data.  Errors surface at ``wait()``.
         """
         self.wait()
         target = self.names[self._turn % len(self.names)]
         self._turn += 1
         wt = self.windows[target]
-        crcs: dict[str, int] = {}
-        for k in sorted(self.specs):
-            arr = np.ascontiguousarray(tree[k], dtype=self.specs[k][1])
-            crcs[k] = _crc(arr)
-            wt.put(k, arr)
+        crcs, mask = self._checked_stage(target, wt, tree)
 
         def _commit(flushed: int) -> None:
             # Runs on the write-back thread after a successful flush; the
@@ -163,13 +249,22 @@ class CheckpointManager:
             self.saves += 1
             self.bytes_flushed_total += flushed
 
-        self._pending = wt.sync_async(exclusive=True, on_complete=_commit)
+        self._pending = wt.sync_async(exclusive=True, on_complete=_commit,
+                                      mask=mask)
+        self._pending_target = target
         return self._pending
 
     def wait(self) -> None:
         if self._pending is not None:
             req, self._pending = self._pending, None
-            req.wait()
+            target, self._pending_target = self._pending_target, None
+            try:
+                req.wait()
+            except BaseException:
+                # Failed flush: the window's snapshot no longer reflects
+                # disk; invalidate so the next save to it replays in full.
+                self._snapshots.pop(target, None)
+                raise
 
     # -- restore ----------------------------------------------------------------
     def _try_restore(self, manifest_path: str) -> RestoreResult | None:

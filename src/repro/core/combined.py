@@ -17,7 +17,7 @@ from __future__ import annotations
 import numpy as np
 
 from .hints import WindowHints
-from .storage import make_backing
+from .storage import dirty_runs, make_backing, mark_span
 
 __all__ = ["CombinedSegment"]
 
@@ -97,13 +97,36 @@ class CombinedSegment:
         for po, ln, bo in sto_rs:
             self.backing.write(po, data[bo:bo + ln])
 
-    def sync(self, full: bool = False) -> int:
+    def _storage_mask(self, mask) -> np.ndarray:
+        """Translate a window-block mask into storage-tracker coordinates.
+
+        ``mask`` indexes ``page_size`` blocks of the *combined* [0, size)
+        byte space; the storage tracker indexes blocks of the storage
+        subrange only.  With ``memory_first`` the storage part starts at
+        ``mem_bytes``, so window block ``b`` lands ``mem_bytes`` lower; when
+        the split is not page-aligned a window block straddles two storage
+        blocks and both are selected (conservative, never skips).  Window
+        blocks entirely inside the memory part select nothing -- the memory
+        part has no durability to sync.
+        """
+        ps = self.backing.page_size
+        sto_lo = self.mem_bytes if self.order == "memory_first" else 0
+        out = np.zeros(self.backing.tracker.num_blocks, dtype=bool)
+        for b0, b1 in dirty_runs(np.asarray(mask, dtype=bool).ravel()):
+            mark_span(out, b0 * ps - sto_lo,
+                      min(b1 * ps - sto_lo, self.sto_bytes), ps)
+        return out
+
+    def sync(self, full: bool = False, mask: np.ndarray | None = None) -> int:
         """Flush the storage part's dirty blocks.  The memory part is pinned
         (volatile) by design -- the paper's combined windows only persist the
-        storage subrange."""
+        storage subrange.  ``mask`` is given in window-block coordinates and
+        is shifted onto the storage subrange (see :meth:`_storage_mask`)."""
         if self.backing is None:
             return 0
-        return self.backing.sync(full=full)
+        if mask is None:
+            return self.backing.sync(full=full)
+        return self.backing.sync(full=full, mask=self._storage_mask(mask))
 
     @property
     def has_storage(self) -> bool:
@@ -111,13 +134,17 @@ class CombinedSegment:
         keep the whole allocation pinned in memory)."""
         return self.backing is not None
 
-    def dirty_bytes(self) -> int:
+    def dirty_bytes(self, mask: np.ndarray | None = None) -> int:
         """Un-persisted bytes of the storage subrange (memory part never
         counts: it has no durability to fall behind on).  Feeds the
-        nonblocking layer's ``Window.dirty_bytes`` observability."""
+        nonblocking layer's ``Window.dirty_bytes`` observability and the
+        backpressure charge estimate; ``mask`` is in window-block
+        coordinates."""
         if self.backing is None:
             return 0
-        return self.backing.dirty_bytes()
+        if mask is None:
+            return self.backing.dirty_bytes()
+        return self.backing.dirty_bytes(mask=self._storage_mask(mask))
 
     @property
     def tracker(self):

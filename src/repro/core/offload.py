@@ -98,6 +98,12 @@ class WindowedArray:
             raise IndexError(f"block {i} out of {self.num_blocks}")
         return lo, hi
 
+    def block_byte_span(self, i: int) -> tuple[int, int]:
+        """Absolute [lo, hi) byte range of block ``i`` within the segment
+        (used to build window-block flush masks for write-behind walks)."""
+        lo, hi = self._block_span(i)
+        return self.offset + lo, self.offset + hi
+
     def read_block(self, i: int) -> np.ndarray:
         lo, hi = self._block_span(i)
         raw = self.win.get(self.rank, self.offset + lo, hi - lo, np.uint8)
@@ -224,19 +230,22 @@ class WindowedPyTree:
         for k, v in tree.items():
             self.put(k, np.asarray(v))
 
-    def sync(self) -> int:
-        """MPI_Win_sync over the rank's segment: selective dirty-block flush."""
-        return self.win.sync(self.rank)
+    def sync(self, *, mask: np.ndarray | None = None) -> int:
+        """MPI_Win_sync over the rank's segment: selective dirty-block flush.
+        ``mask`` restricts it to ``host_dirty AND mask`` window blocks."""
+        return self.win.sync(self.rank, mask=mask)
 
-    def sync_async(self, *, exclusive: bool = False, on_complete=None) -> Request:
+    def sync_async(self, *, exclusive: bool = False, on_complete=None,
+                   mask: np.ndarray | None = None) -> Request:
         """Queue the rank's selective flush on the window's write-back pool.
 
         ``wait()`` returns bytes flushed; see :meth:`Window.flush_async` for
-        the ``exclusive`` / ``on_complete`` semantics.  The checkpoint
-        manager overlaps this with the next train step.
+        the ``exclusive`` / ``on_complete`` / ``mask`` semantics.  The
+        checkpoint manager overlaps this with the next train step and
+        narrows it with the snapshot-diff mask.
         """
         return self.win.flush_async(self.rank, exclusive=exclusive,
-                                    on_complete=on_complete)
+                                    on_complete=on_complete, mask=mask)
 
     def manifest(self) -> dict[str, Any]:
         """Serializable layout description (used by the checkpoint manager)."""

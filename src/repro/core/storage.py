@@ -28,6 +28,8 @@ from __future__ import annotations
 import collections
 import os
 import threading
+import time
+
 import numpy as np
 
 __all__ = [
@@ -37,10 +39,37 @@ __all__ = [
     "MmapBacking",
     "CachedBacking",
     "WritebackPool",
+    "dirty_runs",
+    "mark_span",
     "make_backing",
 ]
 
 DEFAULT_PAGE_SIZE = 4096
+
+
+def dirty_runs(bits: np.ndarray) -> list[tuple[int, int]]:
+    """Contiguous [start, end) runs of set bits in a boolean mask."""
+    bits = np.asarray(bits, dtype=bool)
+    if not bits.any():
+        return []
+    idx = np.flatnonzero(bits)
+    splits = np.flatnonzero(np.diff(idx) > 1)
+    starts = np.concatenate(([idx[0]], idx[splits + 1]))
+    ends = np.concatenate((idx[splits] + 1, [idx[-1] + 1]))
+    return list(zip(starts.tolist(), ends.tolist()))
+
+
+def mark_span(mask: np.ndarray, lo: int, hi: int, page_size: int) -> None:
+    """Set the block-mask bits covering byte range [lo, hi).
+
+    Floor/ceil to ``page_size`` blocks; a negative ``lo`` is clamped to 0
+    and the slice end clamps to the mask length, so callers can pass spans
+    that overhang either edge (combined-window translation, device diffs
+    padded past the last block).
+    """
+    if hi <= max(lo, 0):
+        return
+    mask[max(lo, 0) // page_size: -(-hi // page_size)] = True
 
 
 class DirtyTracker:
@@ -82,20 +111,50 @@ class DirtyTracker:
         with self._lock:
             self._bits[b0:b1] = True
 
+    def _normalize(self, mask: np.ndarray) -> np.ndarray:
+        """Clip/pad an external block mask to ``num_blocks`` booleans.
+
+        Extra trailing bits (a device diff padded past the last block) are
+        ignored; a short mask leaves the uncovered tail unselected.
+        """
+        mask = np.asarray(mask, dtype=bool).ravel()
+        out = np.zeros(self.num_blocks, dtype=bool)
+        n = min(len(mask), self.num_blocks)
+        out[:n] = mask[:n]
+        return out
+
     def mark_blocks(self, mask: np.ndarray) -> None:
         """OR a boolean block mask into the bitmap (device-diff path)."""
+        m = self._normalize(mask)
         with self._lock:
-            self._bits[: len(mask)] |= mask.astype(bool)
+            self._bits |= m
 
     def is_dirty(self, block: int) -> bool:
         return bool(self._bits[block])
 
-    def snapshot_and_clear(self) -> np.ndarray:
-        """Atomically take the dirty set and reset it (start of a sync epoch)."""
+    def snapshot_and_clear(self, mask: np.ndarray | None = None) -> np.ndarray:
+        """Atomically take the dirty set and reset it (start of a sync epoch).
+
+        With ``mask``, only ``dirty AND mask`` blocks are taken (and only
+        those are cleared): blocks dirty outside the mask stay dirty for a
+        later sync, and clean blocks inside the mask are never selected --
+        the intersection rule behind ``flush_async(mask=...)``.
+        """
         with self._lock:
-            out = self._bits.copy()
-            self._bits[:] = False
+            if mask is None:
+                out = self._bits.copy()
+                self._bits[:] = False
+            else:
+                m = self._normalize(mask)
+                out = self._bits & m
+                self._bits &= ~m
         return out
+
+    def masked_dirty_count(self, mask: np.ndarray) -> int:
+        """Number of blocks both dirty and selected by ``mask``."""
+        m = self._normalize(mask)
+        with self._lock:
+            return int((self._bits & m).sum())
 
     def restore(self, mask: np.ndarray) -> None:
         """Re-mark blocks (used if a flush fails mid-way)."""
@@ -103,14 +162,7 @@ class DirtyTracker:
 
     def dirty_runs(self, mask: np.ndarray | None = None) -> list[tuple[int, int]]:
         """Contiguous [start_block, end_block) runs of dirty blocks."""
-        bits = self._bits if mask is None else mask
-        if not bits.any():
-            return []
-        idx = np.flatnonzero(bits)
-        splits = np.flatnonzero(np.diff(idx) > 1)
-        starts = np.concatenate(([idx[0]], idx[splits + 1]))
-        ends = np.concatenate((idx[splits] + 1, [idx[-1] + 1]))
-        return list(zip(starts.tolist(), ends.tolist()))
+        return dirty_runs(self._bits if mask is None else mask)
 
 
 class StripedFile:
@@ -229,9 +281,15 @@ class _BackingBase:
             raise IndexError(
                 f"access [{offset}, {offset + nbytes}) outside window of {self.size} bytes")
 
-    def dirty_bytes(self) -> int:
-        """Upper bound on bytes a sync() would flush right now (whole pages)."""
-        return self.tracker.dirty_count * self.page_size
+    def dirty_bytes(self, mask: np.ndarray | None = None) -> int:
+        """Upper bound on bytes a sync() would flush right now (whole pages).
+
+        With ``mask``, counts only blocks that are both dirty and selected
+        (the bytes ``sync(mask=...)`` would flush).
+        """
+        if mask is None:
+            return self.tracker.dirty_count * self.page_size
+        return self.tracker.masked_dirty_count(mask) * self.page_size
 
 
 class MmapBacking(_BackingBase):
@@ -279,8 +337,14 @@ class MmapBacking(_BackingBase):
     def mark_dirty(self, offset: int, nbytes: int) -> None:
         self.tracker.mark(offset, nbytes)
 
-    def sync(self, full: bool = False) -> int:
-        """msync; returns bytes flushed.  Selective unless ``full``."""
+    def sync(self, full: bool = False, mask: np.ndarray | None = None) -> int:
+        """msync; returns bytes flushed.  Selective unless ``full``.
+
+        ``mask`` restricts the flush to ``dirty AND mask`` blocks (the
+        device-diff intersection rule); blocks dirty outside the mask stay
+        dirty.  If the msync fails, the taken blocks are re-marked so a
+        retry replays them (never skips).
+        """
         if self.closed:
             raise RuntimeError("backing is closed")
         self.sync_count += 1
@@ -289,16 +353,20 @@ class MmapBacking(_BackingBase):
             self.tracker.snapshot_and_clear()
             self.bytes_flushed += self.size
             return self.size
-        mask = self.tracker.snapshot_and_clear()
+        take = self.tracker.snapshot_and_clear(mask=mask)
         flushed = 0
-        for b0, b1 in self.tracker.dirty_runs(mask):
+        for b0, b1 in dirty_runs(take):
             lo = b0 * self.page_size
             hi = min(b1 * self.page_size, self.size)
             # np.memmap.flush() flushes the whole map; emulate ranged msync
             # by flushing once at the end -- but count selective bytes.
             flushed += hi - lo
         if flushed:
-            self._mm.flush()
+            try:
+                self._mm.flush()
+            except BaseException:
+                self.tracker.restore(take)  # replay, never skip
+                raise
         self.bytes_flushed += flushed
         return flushed
 
@@ -505,42 +573,63 @@ class CachedBacking(_BackingBase):
             if self.tracker.dirty_fraction > self.dirty_ratio:
                 self._flush_locked()
 
-    def sync(self, full: bool = False) -> int:
+    def sync(self, full: bool = False, mask: np.ndarray | None = None) -> int:
         """Selective flush of dirty blocks (MPI_Win_sync).  Returns bytes.
 
         "May return immediately if the pages are already synchronized": a
         clean window skips both the write-back and the fsync.
+
+        ``mask`` (boolean, tracker-block coordinates) intersects with the
+        dirty bitmap: only ``dirty AND mask`` blocks flush, dirty blocks
+        outside the mask *stay dirty* for a later sync, and clean blocks in
+        the mask cost nothing.  This is the device-diff path: a Pallas
+        ``dirty_diff`` bitmap restricts write-back without host compares.
         """
         if self.closed:
             raise RuntimeError("backing is closed")
         with self._io_lock:
             self.sync_count += 1
-            n = self._flush_locked(full=full)
+            n = self._flush_locked(full=full, mask=mask)
             if n:
-                self.file.fsync()
+                try:
+                    self.file.fsync()
+                except BaseException:
+                    # fsync failure: durability of the just-written blocks is
+                    # unknown -- conservatively re-dirty the whole window so a
+                    # retry replays everything (never skips).
+                    self.tracker.mark(0, self.size)
+                    raise
             return n
 
-    def _flush_locked(self, full: bool = False) -> int:
-        mask = self.tracker.snapshot_and_clear()
+    def _flush_locked(self, full: bool = False,
+                      mask: np.ndarray | None = None) -> int:
+        take = self.tracker.snapshot_and_clear(mask=mask)
         if full:
-            mask[:] = True
+            take[:] = True
         flushed = 0
-        for b0, b1 in self.tracker.dirty_runs(mask):
-            # coalesce the run: gather resident slots, one pwrite per span
-            slots = self._slot_of[b0:b1]
-            resident = slots >= 0
-            if resident.all() and b1 * self.page_size <= self.size:
-                buf = self._slots[slots].reshape(-1)
-                self.file.pwrite(b0 * self.page_size, buf.tobytes())
-                flushed += buf.nbytes
-                continue
-            for blk in range(b0, b1):
-                s = int(self._slot_of[blk])
-                lo = blk * self.page_size
-                hi = min(lo + self.page_size, self.size)
-                if s >= 0:
-                    self.file.pwrite(lo, self._slots[s, : hi - lo].tobytes())
-                    flushed += hi - lo
+        try:
+            for b0, b1 in dirty_runs(take):
+                # coalesce the run: gather resident slots, one pwrite per span
+                slots = self._slot_of[b0:b1]
+                resident = slots >= 0
+                if resident.all() and b1 * self.page_size <= self.size:
+                    buf = self._slots[slots].reshape(-1)
+                    self.file.pwrite(b0 * self.page_size, buf.tobytes())
+                    flushed += buf.nbytes
+                    continue
+                for blk in range(b0, b1):
+                    s = int(self._slot_of[blk])
+                    lo = blk * self.page_size
+                    hi = min(lo + self.page_size, self.size)
+                    if s >= 0:
+                        self.file.pwrite(lo, self._slots[s, : hi - lo].tobytes())
+                        flushed += hi - lo
+        except BaseException:
+            # A mid-flush failure must not lose the taken blocks: re-mark
+            # everything we took (re-flushing the already-written prefix on
+            # retry is harmless) so the next sync replays, never skips.
+            self.tracker.restore(take)
+            raise
         self.bytes_flushed += flushed
         return flushed
 
@@ -597,12 +686,14 @@ class _Ticket:
     ``Request`` objects.  ``result``/``exception`` are valid once ``done()``.
     """
 
-    __slots__ = ("_event", "_fn", "key", "result", "exception", "_next")
+    __slots__ = ("_event", "_fn", "key", "nbytes", "result", "exception",
+                 "_next")
 
-    def __init__(self, fn, key):
+    def __init__(self, fn, key, nbytes: int = 0):
         self._event = threading.Event()
         self._fn = fn
         self.key = key
+        self.nbytes = int(nbytes)  # in-flight byte charge (backpressure)
         self.result = None
         self.exception: BaseException | None = None
         self._next: "_Ticket | None" = None  # same-key successor (FIFO chain)
@@ -630,10 +721,43 @@ class WritebackPool:
     may run concurrently across ``workers`` threads.  A pending same-key
     predecessor defers the successor's enqueue to the predecessor's
     completion, so a slow rank never occupies more than one worker.
+
+    Backpressure (bounded in-flight bytes): with ``max_inflight_bytes`` set
+    (the *high watermark*), ``submit`` of a task carrying ``nbytes`` blocks
+    the calling thread whenever admitting it would push the queued in-flight
+    total past the high mark, and resumes only once completions drain the
+    total to the *low watermark* (default ``high // 2``, hysteresis against
+    thrashing).  This is how a slow disk throttles ``rput``/``flush_async``
+    producers instead of growing the request queue without limit (the
+    engineering answer to the paper's >90% Lustre write degradation: bounded
+    memory, bounded tail latency).  One submission larger than the high mark
+    is admitted only alone (in-flight total == its own size), so a single
+    oversized flush cannot deadlock.  Stats (``stats()``): submitted/
+    completed task and byte counters, ``stalls``/``stall_seconds``, and the
+    ``max_inflight_bytes`` high-water mark actually observed.
     """
 
-    def __init__(self, workers: int = 2, name: str = "repro-async-wb"):
+    def __init__(self, workers: int = 2, name: str = "repro-async-wb", *,
+                 max_inflight_bytes: int | None = None,
+                 low_watermark: int | None = None):
         self.workers = max(1, int(workers))
+        if max_inflight_bytes is not None and max_inflight_bytes <= 0:
+            raise ValueError("max_inflight_bytes must be > 0 (or None)")
+        self.max_inflight_bytes = max_inflight_bytes
+        if low_watermark is None:
+            low_watermark = (max_inflight_bytes // 2
+                             if max_inflight_bytes is not None else 0)
+        if max_inflight_bytes is not None and not (
+                0 <= low_watermark <= max_inflight_bytes):
+            raise ValueError("low_watermark must be in [0, max_inflight_bytes]")
+        self.low_watermark = low_watermark
+        self._inflight_bytes = 0
+        self._counters = {
+            "submitted": 0, "completed": 0,
+            "submitted_bytes": 0, "completed_bytes": 0,
+            "stalls": 0, "stall_seconds": 0.0,
+            "max_inflight_bytes": 0,
+        }
         self._cond = threading.Condition()
         self._runq: collections.deque[_Ticket] = collections.deque()
         self._tails: dict = {}  # key -> newest pending ticket for that key
@@ -646,12 +770,46 @@ class WritebackPool:
             t.start()
             self._threads.append(t)
 
-    def submit(self, fn, key=None) -> _Ticket:
-        """Queue ``fn`` for background execution; returns its ticket."""
-        t = _Ticket(fn, key)
+    def submit(self, fn, key=None, nbytes: int = 0,
+               force: bool = False) -> _Ticket:
+        """Queue ``fn`` for background execution; returns its ticket.
+
+        ``nbytes`` is the task's in-flight byte charge (an rput's payload, a
+        flush's estimated dirty bytes).  With backpressure configured, a
+        submission that would exceed the high watermark blocks here until
+        completions drain in-flight bytes to the low watermark.
+
+        ``force`` skips the stall (the bytes are still charged): used by
+        callers that must not block -- e.g. a thread submitting from inside
+        its own window-lock epoch, where draining may require tasks blocked
+        on (or queued behind a writer blocked on) that very lock (stalling
+        would deadlock).
+        """
+        t = _Ticket(fn, key, nbytes)
         with self._cond:
             if self._shutdown:
                 raise RuntimeError("writeback pool is shut down")
+            if (not force
+                    and self.max_inflight_bytes is not None and t.nbytes > 0
+                    and self._inflight_bytes > 0
+                    and self._inflight_bytes + t.nbytes
+                    > self.max_inflight_bytes):
+                # Past the high mark: stall until drained to the low mark
+                # (or far enough for an oversized task to fit alone).
+                target = max(0, min(self.max_inflight_bytes - t.nbytes,
+                                    self.low_watermark))
+                self._counters["stalls"] += 1
+                t0 = time.monotonic()
+                while self._inflight_bytes > target:
+                    self._cond.wait()
+                    if self._shutdown:
+                        raise RuntimeError("writeback pool is shut down")
+                self._counters["stall_seconds"] += time.monotonic() - t0
+            self._inflight_bytes += t.nbytes
+            self._counters["submitted"] += 1
+            self._counters["submitted_bytes"] += t.nbytes
+            if self._inflight_bytes > self._counters["max_inflight_bytes"]:
+                self._counters["max_inflight_bytes"] = self._inflight_bytes
             self._pending += 1
             if key is not None:
                 prev = self._tails.get(key)
@@ -678,12 +836,23 @@ class WritebackPool:
             with self._cond:
                 t._event.set()
                 self._pending -= 1
+                self._inflight_bytes -= t.nbytes
+                self._counters["completed"] += 1
+                self._counters["completed_bytes"] += t.nbytes
                 if t.key is not None:
                     if t._next is not None:
                         self._runq.append(t._next)
                     if self._tails.get(t.key) is t:
                         del self._tails[t.key]
                 self._cond.notify_all()
+
+    def stats(self) -> dict:
+        """Snapshot of the backpressure/throughput counters."""
+        with self._cond:
+            out = dict(self._counters)
+            out["inflight_bytes"] = self._inflight_bytes
+            out["pending"] = self._pending
+            return out
 
     def drain(self) -> None:
         """Block until every submitted task (including chained ones) is done."""

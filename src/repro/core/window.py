@@ -58,6 +58,43 @@ Completion/durability semantics:
 * Each background task acquires the target rank's ``_RWLock`` (shared for
   rput/rget, exclusive for raccumulate/locked flushes), so an exclusive
   ``win.lock(rank)`` epoch holds off concurrent request traffic.
+
+Device-side selective sync (mask path)
+--------------------------------------
+
+``flush_async(rank, mask=...)`` / ``sync(rank, mask=...)`` take a boolean
+*block mask* (``page_size`` blocks over the rank's [0, size) byte space) and
+flush the **intersection** ``host_dirty AND mask``:
+
+* dirty blocks outside the mask stay dirty (a later unmasked sync persists
+  them -- masked flushes narrow, they never skip);
+* clean blocks inside the mask cost nothing ("may return immediately if the
+  pages are already synchronized");
+* on combined windows the mask is given in window coordinates and is shifted
+  onto the storage subrange (memory blocks select nothing).
+
+``sync_from_device(rank, cur, snap)`` builds that mask with the Pallas
+``dirty_diff`` kernel: the (device-resident) current/snapshot states reduce
+to a per-page changed bitmap on-device, only the changed spans cross to the
+host page cache, and the flush is queued with the resulting mask -- clean
+pages never cross the memory/storage boundary, without any host compares.
+
+Write-back backpressure (bounded in-flight bytes)
+-------------------------------------------------
+
+``Window.allocate(..., max_inflight_bytes=..., low_watermark=...)`` bounds
+the bytes queued on the window's WritebackPool: ``rput``/``raccumulate``
+charge their payload and ``flush_async`` its estimated dirty bytes; a
+submission past the high watermark blocks the caller until completions
+drain in-flight bytes to the low watermark (default ``high // 2``).  A slow
+disk therefore throttles producers instead of growing the queue without
+limit.  Defaults: unbounded (``max_inflight_bytes=None``), preserving the
+fire-and-forget behavior.  ``win.pool_stats()`` exposes the counters.
+Deadlock avoidance: a thread submitting from inside its own lock epoch
+(shared or exclusive) bypasses the stall -- draining could require tasks
+blocked on, or queued behind a writer blocked on, that very lock; the bytes
+are still charged, so the high mark can transiently be exceeded by such an
+epoch.
 """
 
 from __future__ import annotations
@@ -70,7 +107,8 @@ import numpy as np
 
 from .combined import CombinedSegment
 from .hints import Info, WindowHints
-from .storage import DEFAULT_PAGE_SIZE, WritebackPool, make_backing
+from .storage import (DEFAULT_PAGE_SIZE, WritebackPool, dirty_runs,
+                      make_backing, mark_span)
 
 __all__ = ["Window", "WindowError", "Request", "LOCK_SHARED",
            "LOCK_EXCLUSIVE", "alloc_mem"]
@@ -131,7 +169,7 @@ class _MemorySegment:
             raise IndexError(f"access [{offset},{offset + data.nbytes}) outside {self.size}B window")
         self.buf[offset:offset + data.nbytes] = data
 
-    def sync(self, full: bool = False) -> int:
+    def sync(self, full: bool = False, mask: np.ndarray | None = None) -> int:
         return 0  # nothing to persist
 
     def close(self, unlink: bool = False, discard: bool = False) -> None:
@@ -160,11 +198,11 @@ class _StorageSegment:
     def write(self, offset: int, data) -> None:
         self.backing.write(offset, data)
 
-    def sync(self, full: bool = False) -> int:
-        return self.backing.sync(full=full)
+    def sync(self, full: bool = False, mask: np.ndarray | None = None) -> int:
+        return self.backing.sync(full=full, mask=mask)
 
-    def dirty_bytes(self) -> int:
-        return self.backing.dirty_bytes()
+    def dirty_bytes(self, mask: np.ndarray | None = None) -> int:
+        return self.backing.dirty_bytes(mask=mask)
 
     @property
     def tracker(self):
@@ -280,7 +318,9 @@ class Window:
     """An MPI-style window: per-rank segments + one-sided access."""
 
     def __init__(self, comm, segments, hints: WindowHints, *, disp_unit: int = 1,
-                 flavor: str, dynamic: bool = False, async_workers: int = 2):
+                 flavor: str, dynamic: bool = False, async_workers: int = 2,
+                 max_inflight_bytes: int | None = None,
+                 low_watermark: int | None = None):
         self.comm = comm
         self.segments = segments  # list, one per rank (dynamic: list of lists)
         self.hints = hints
@@ -290,9 +330,15 @@ class Window:
         self.freed = False
         self._locks = [_RWLock() for _ in range(comm.size)]
         self._epoch_depth = [0] * comm.size
+        # thread ident -> number of lock epochs it holds on this window
+        # (shared or exclusive); see _caller_in_lock_epoch
+        self._epoch_threads: dict[int, int] = {}
+        self._epoch_lock = threading.Lock()
         # nonblocking layer: lazily-started per-window write-back pool plus
         # per-target-rank pending request lists (epoch completion bookkeeping)
         self._async_workers = async_workers
+        self._max_inflight_bytes = max_inflight_bytes
+        self._low_watermark = low_watermark
         self._pool: WritebackPool | None = None
         self._pool_lock = threading.Lock()
         self._req_lock = threading.Lock()
@@ -314,14 +360,18 @@ class Window:
                  page_size: int = DEFAULT_PAGE_SIZE, cache_bytes: int | None = None,
                  writeback_interval: float | None = None,
                  compare_on_write: bool = False,
-                 async_workers: int = 2) -> "Window":
+                 async_workers: int = 2,
+                 max_inflight_bytes: int | None = None,
+                 low_watermark: int | None = None) -> "Window":
         """Collective MPI_Win_allocate over all ranks of ``comm``.
 
         ``size`` is the per-rank window size in bytes (like MPI, each rank
         passes its own size; we use a uniform size for the common case).
         ``async_workers`` sizes the background write-back pool used by the
         request-based (rput/rget/flush_async) layer; the pool's threads only
-        start on first nonblocking use.
+        start on first nonblocking use.  ``max_inflight_bytes`` /
+        ``low_watermark`` bound the pool's queued write-back bytes
+        (backpressure; see the module docstring) -- default unbounded.
         """
         hints = WindowHints.from_info(info)
         comm.barrier()  # collective
@@ -336,7 +386,9 @@ class Window:
         flavor = ("combined" if hints.is_combined else
                   "storage" if hints.is_storage else "memory")
         return cls(comm, segments, hints, disp_unit=disp_unit, flavor=flavor,
-                   async_workers=async_workers)
+                   async_workers=async_workers,
+                   max_inflight_bytes=max_inflight_bytes,
+                   low_watermark=low_watermark)
 
     @classmethod
     def allocate_shared(cls, comm, size: int, **kw) -> "Window":
@@ -485,8 +537,15 @@ class Window:
         if self._pool is None:
             with self._pool_lock:
                 if self._pool is None:
-                    self._pool = WritebackPool(self._async_workers)
+                    self._pool = WritebackPool(
+                        self._async_workers,
+                        max_inflight_bytes=self._max_inflight_bytes,
+                        low_watermark=self._low_watermark)
         return self._pool
+
+    def pool_stats(self) -> dict | None:
+        """Write-back pool counters (None until first nonblocking use)."""
+        return self._pool.stats() if self._pool is not None else None
 
     def _register(self, req: Request, ranks) -> Request:
         with self._req_lock:
@@ -500,9 +559,27 @@ class Window:
                 pend.append(req)
         return req
 
-    def _submit(self, fn, rank: int) -> Request:
-        return self._register(Request(self._get_pool().submit(fn, key=rank)),
-                              [rank])
+    def _caller_in_lock_epoch(self) -> bool:
+        """True if the calling thread holds any lock epoch on this window
+        (shared OR exclusive).
+
+        Such a caller must never stall in a backpressure submit: queued
+        tasks it would wait on may be blocked on its exclusive lock, or --
+        for a shared epoch -- behind an exclusive-acquiring task (a
+        raccumulate, a locked flush) that its own reader hold is blocking;
+        the caller cannot unlock while stuck inside submit(), so stalling
+        would deadlock.  Its submissions bypass the watermark stall instead
+        (and may transiently exceed the high mark; lock epochs are expected
+        to be short, per the paper's Listing 4 checkpoint pattern).
+        """
+        return threading.get_ident() in self._epoch_threads
+
+    def _submit(self, fn, rank: int, nbytes: int = 0) -> Request:
+        pool = self._get_pool()
+        return self._register(
+            Request(pool.submit(fn, key=rank, nbytes=nbytes,
+                                force=self._caller_in_lock_epoch())),
+            [rank])
 
     def rput(self, data: np.ndarray, target_rank: int, target_disp: int = 0,
              *, handle: int | None = None) -> Request:
@@ -523,7 +600,7 @@ class Window:
             finally:
                 lock.release()
 
-        return self._submit(task, target_rank)
+        return self._submit(task, target_rank, nbytes=buf.nbytes)
 
     def rget(self, target_rank: int, target_disp: int, count: int,
              dtype=np.uint8, *, handle: int | None = None) -> Request:
@@ -553,9 +630,10 @@ class Window:
         def task():
             self.accumulate(buf, target_rank, target_disp, op, handle=handle)
 
-        return self._submit(task, target_rank)
+        return self._submit(task, target_rank, nbytes=buf.nbytes)
 
     def flush_async(self, rank: int | None = None, *, full: bool = False,
+                    mask: np.ndarray | None = None,
                     exclusive: bool = False, on_complete=None) -> Request:
         """Asynchronous MPI_Win_sync: queue a selective dirty-page flush.
 
@@ -563,13 +641,24 @@ class Window:
         ``rput -> flush_async`` pipeline persists the rput's bytes.  The
         returned Request's ``wait()`` yields total bytes flushed.
 
+        ``mask`` (boolean block mask, ``page_size`` blocks of the rank's
+        byte space -- typically a Pallas ``dirty_diff`` bitmap) restricts
+        the flush to the intersection ``host_dirty AND mask``: clean pages
+        are skipped without host compares, and dirty pages outside the mask
+        stay dirty for a later sync (narrowing, never skipping).  Requires a
+        specific ``rank`` on a non-dynamic window.
+
         ``exclusive`` wraps each rank's flush in its exclusive lock (paper
         Listing 4's consistent checkpoint).  ``on_complete(total_bytes)``
         runs on the write-back thread once every rank has flushed -- only on
         success -- and its errors surface at ``wait()``.
+
+        With backpressure configured the submission charges the rank's
+        (masked) dirty-byte estimate and may block past the high watermark.
         """
         if self.freed:
             raise WindowError("window has been freed")
+        mask = self._validate_mask(rank, mask)
         ranks = list(range(self.comm.size)) if rank is None else [rank]
         for r in ranks:
             if r < 0 or r >= self.comm.size:
@@ -584,12 +673,7 @@ class Window:
                 if exclusive:
                     self._locks[r].acquire(exclusive=True)
                 try:
-                    segs = self.segments[r] if self.dynamic \
-                        else [self.segments[r]]
-                    n = 0
-                    for seg in segs:
-                        if seg is not None and hasattr(seg, "sync"):
-                            n += seg.sync(full=full)
+                    n = self._sync_rank_segs(r, full, mask)
                 finally:
                     if exclusive:
                         self._locks[r].release()
@@ -602,8 +686,32 @@ class Window:
                 return n
             return task
 
-        tickets = [pool.submit(make_task(r), key=r) for r in ranks]
+        force = self._caller_in_lock_epoch()
+        tickets = [pool.submit(make_task(r), key=r,
+                               nbytes=self._flush_charge(r, full, mask),
+                               force=force)
+                   for r in ranks]
         return self._register(Request(tickets, combine=sum), ranks)
+
+    def _flush_charge(self, rank: int, full: bool,
+                      mask: np.ndarray | None) -> int:
+        """Backpressure byte charge for one rank's queued flush: the (masked)
+        dirty bytes at submit time.  An estimate -- writes landing between
+        submit and execution flush too but are charged to *their* tickets.
+        Only bytes a flush can actually write count: memory segments (and
+        the pinned memory part of combined windows) charge nothing."""
+        segs = self.segments[rank] if self.dynamic else [self.segments[rank]]
+        total = 0
+        for seg in segs:
+            if seg is None or not hasattr(seg, "dirty_bytes"):
+                continue
+            if full:
+                total += (seg.sto_bytes if hasattr(seg, "sto_bytes")
+                          else getattr(seg, "size", 0))
+            else:
+                total += (seg.dirty_bytes() if mask is None
+                          else seg.dirty_bytes(mask=mask))
+        return total
 
     def dirty_bytes(self, rank: int | None = None) -> int:
         """Upper bound on un-persisted (dirty page-cache) bytes."""
@@ -640,11 +748,21 @@ class Window:
         """MPI_Win_lock (passive target epoch start)."""
         self._locks[rank].acquire(exclusive=exclusive)
         self._epoch_depth[rank] += 1
+        ident = threading.get_ident()
+        with self._epoch_lock:
+            self._epoch_threads[ident] = self._epoch_threads.get(ident, 0) + 1
 
     def unlock(self, rank: int) -> None:
         """MPI_Win_unlock: completes all RMA ops at the target (ops here are
         synchronous, so completion is immediate; storage is NOT yet synced)."""
         self._epoch_depth[rank] -= 1
+        ident = threading.get_ident()
+        with self._epoch_lock:
+            depth = self._epoch_threads.get(ident, 0) - 1
+            if depth <= 0:
+                self._epoch_threads.pop(ident, None)
+            else:
+                self._epoch_threads[ident] = depth
         self._locks[rank].release()
 
     def flush(self, rank: int) -> None:
@@ -676,29 +794,151 @@ class Window:
             self.flush(rank)
 
     def sync(self, rank: int | None = None, full: bool = False,
-             *, blocking: bool = True):
+             *, blocking: bool = True, mask: np.ndarray | None = None):
         """MPI_Win_sync: flush dirty pages of the rank's storage segment(s).
 
         Returns bytes flushed (0 for memory windows / already-clean storage:
         'this routine may return immediately if the pages are already
         synchronized' -- the selective synchronization of the paper).
 
+        ``mask`` restricts the flush to ``host_dirty AND mask`` blocks (see
+        :meth:`flush_async` for the intersection rules).
+
         ``blocking=False`` queues the flush on the background write-back
         pool and returns a :class:`Request` whose ``wait()`` yields the
         bytes flushed (equivalent to ``flush_async``).
         """
         if not blocking:
-            return self.flush_async(rank, full=full)
+            return self.flush_async(rank, full=full, mask=mask)
         if self.freed:
             raise WindowError("window has been freed")
+        mask = self._validate_mask(rank, mask)
         ranks = range(self.comm.size) if rank is None else [rank]
+        return sum(self._sync_rank_segs(r, full, mask) for r in ranks)
+
+    def _validate_mask(self, rank: int | None, mask):
+        """Shared mask preconditions for sync/flush_async; returns the
+        normalized boolean mask (masks are per-segment block coordinates)."""
+        if mask is None:
+            return None
+        if rank is None:
+            raise WindowError("mask requires a specific rank (masks are "
+                              "per-segment block coordinates)")
+        if self.dynamic:
+            raise WindowError("mask is not supported on dynamic windows")
+        return np.asarray(mask, dtype=bool).ravel()
+
+    def _sync_rank_segs(self, rank: int, full: bool, mask) -> int:
+        """Sync every segment of one rank.  The mask kw is only forwarded
+        when set: dynamically attached segments may be third-party objects
+        whose sync() predates the mask parameter (mask is already rejected
+        for dynamic windows)."""
+        segs = self.segments[rank] if self.dynamic else [self.segments[rank]]
         total = 0
-        for r in ranks:
-            segs = self.segments[r] if self.dynamic else [self.segments[r]]
-            for seg in segs:
-                if seg is not None and hasattr(seg, "sync"):
-                    total += seg.sync(full=full)
+        for seg in segs:
+            if seg is not None and hasattr(seg, "sync"):
+                total += (seg.sync(full=full) if mask is None
+                          else seg.sync(full=full, mask=mask))
         return total
+
+    # -- device-side selective sync -----------------------------------------
+    def _device_page_geometry(self, rank: int, dtype) -> tuple[int, int, int]:
+        """(page_size, block_elems, window_blocks) for the rank's segment."""
+        seg = self._seg(rank)
+        tracker = getattr(seg, "tracker", None)
+        if tracker is None:
+            raise WindowError(
+                "device-mask sync requires a storage-backed segment")
+        ps = tracker.page_size
+        itemsize = np.dtype(dtype).itemsize
+        if ps % itemsize:
+            raise WindowError(
+                f"page size {ps} is not a multiple of itemsize {itemsize}")
+        return ps, ps // itemsize, -(-seg.size // ps)
+
+    def _device_flags(self, rank: int, cur, snap, *,
+                      impl: str | None, tile_elems: int | None) -> np.ndarray:
+        """Per-page-span changed flags from the Pallas dirty_diff kernel."""
+        from repro.kernels.ops import dirty_blocks  # lazy: jax-free core
+        if np.shape(cur) != np.shape(snap):
+            raise WindowError("cur/snap shape mismatch")
+        _, block_elems, _ = self._device_page_geometry(rank, cur.dtype)
+        return np.asarray(dirty_blocks(cur, snap, block_elems=block_elems,
+                                       tile_elems=tile_elems, impl=impl),
+                          dtype=bool)
+
+    def _flags_to_window_mask(self, rank: int, flags: np.ndarray, dtype,
+                              nelems: int, target_disp: int) -> np.ndarray:
+        """Element-block flags (relative to target_disp) -> window-block mask.
+
+        A non-page-aligned ``target_disp`` makes element blocks straddle two
+        window pages; both are selected (conservative, never skips).
+        """
+        ps, block_elems, nwin = self._device_page_geometry(rank, dtype)
+        itemsize = np.dtype(dtype).itemsize
+        byte_off = target_disp * self.disp_unit
+        mask = np.zeros(nwin, dtype=bool)
+        for b0, b1 in dirty_runs(flags):
+            mark_span(mask, byte_off + b0 * block_elems * itemsize,
+                      byte_off + min(b1 * block_elems, nelems) * itemsize, ps)
+        return mask
+
+    def device_dirty_mask(self, rank: int, cur, snap, *, target_disp: int = 0,
+                          impl: str | None = None,
+                          tile_elems: int | None = None) -> np.ndarray:
+        """Window-block mask of pages where ``cur`` differs from ``snap``.
+
+        Runs the Pallas ``dirty_diff`` kernel (one flag per ``page_size``
+        span of elements) on-device; only the bitmap crosses to the host.
+        ``target_disp`` positions element 0 at that displacement in the
+        rank's segment.  The mask feeds ``flush_async(mask=...)`` or
+        ``DirtyTracker.mark_blocks``.
+        """
+        flags = self._device_flags(rank, cur, snap, impl=impl,
+                                   tile_elems=tile_elems)
+        nelems = int(np.prod(np.shape(cur), dtype=np.int64))
+        return self._flags_to_window_mask(rank, flags, cur.dtype, nelems,
+                                          target_disp)
+
+    def sync_from_device(self, rank: int, cur, snap, *, target_disp: int = 0,
+                         blocking: bool = False, impl: str | None = None,
+                         tile_elems: int | None = None):
+        """Selective device-state sync: diff on-device, ship + flush only
+        changed pages.
+
+        ``cur``/``snap`` are same-shape, same-dtype arrays (jax or numpy) of
+        the window region starting at ``target_disp``: ``snap`` is the state
+        the window already holds (last synced), ``cur`` the new state.  The
+        Pallas ``dirty_diff`` kernel reduces them to a per-page bitmap
+        on-device; only the changed spans are copied device->host into the
+        page cache, and the write-back is queued with ``mask`` set to those
+        pages -- so both PCIe traffic and storage writes scale with the
+        *changed* bytes, not the window size.
+
+        Returns the flush's :class:`Request` (``wait()`` -> bytes flushed),
+        or the bytes directly with ``blocking=True``.
+        """
+        flags = self._device_flags(rank, cur, snap, impl=impl,
+                                   tile_elems=tile_elems)
+        _, block_elems, _ = self._device_page_geometry(rank, cur.dtype)
+        itemsize = np.dtype(cur.dtype).itemsize
+        byte_off = target_disp * self.disp_unit
+        nelems = int(np.prod(np.shape(cur), dtype=np.int64))
+        mask = self._flags_to_window_mask(rank, flags, cur.dtype, nelems,
+                                          target_disp)
+        # ship only the changed element spans device->host into the page
+        # cache (a jax slice transfers just that span)
+        seg = self._seg(rank)
+        cur_flat = cur.reshape(-1)
+        for b0, b1 in dirty_runs(flags):
+            lo_e = b0 * block_elems
+            hi_e = min(b1 * block_elems, nelems)
+            chunk = np.ascontiguousarray(np.asarray(cur_flat[lo_e:hi_e]))
+            seg.write(byte_off + lo_e * itemsize,
+                      chunk.view(np.uint8).ravel())
+        if blocking:
+            return self.sync(rank, mask=mask)
+        return self.flush_async(rank, mask=mask)
 
     # -- teardown -----------------------------------------------------------
     def free(self) -> None:

@@ -6,10 +6,19 @@ checkpoint blocks actually changed would otherwise cost a device->host copy
 of everything.  This kernel reduces (current, snapshot) block pairs to a
 per-block changed flag entirely on-device in one streaming pass; only the
 tiny bitmap plus the dirty blocks then cross PCIe, feeding the same
-``DirtyTracker`` bitmap as the host-side compare-on-write path.
+``DirtyTracker`` bitmap as the host-side compare-on-write path
+(``Window.sync_from_device`` / ``flush_async(mask=...)``).
 
-Layout: tensors flattened to (nblocks, block_elems); grid (nblocks,);
-out: (nblocks,) int32 (1 = changed).
+Layout: tensors flattened to (nblocks, block_elems); grid (nblocks, ntiles)
+with the tile dimension innermost, so one storage block is scanned
+``tile_elems`` at a time (blocks far larger than VMEM stream through the
+same resident (1,) output flag, OR-accumulating per tile); out: (nblocks,)
+int32 (1 = changed).
+
+Dtype generality: inexact dtypes are bitcast to same-width unsigned ints
+before the compare, so the kernel tests *bit-pattern* equality -- an
+unchanged block full of NaNs stays clean (IEEE ``NaN != NaN`` would dirty
+it), matching the host page cache's byte-level compare exactly.
 """
 
 from __future__ import annotations
@@ -18,27 +27,60 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["dirty_diff_tpu"]
+__all__ = ["dirty_diff_tpu", "DEFAULT_TILE_ELEMS"]
+
+# Default tile: multiple of every dtype's minimum lane tiling (8*128 f32,
+# 16*128 bf16, 32*128 int8) and small enough that two resident input tiles
+# stay well under VMEM at any supported itemsize.
+DEFAULT_TILE_ELEMS = 4096
 
 
 def _kernel(cur_ref, snap_ref, flag_ref):
-    diff = (cur_ref[0] != snap_ref[0])
-    flag_ref[0] = jnp.any(diff).astype(jnp.int32)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():  # first tile of each block resets the revisited flag
+        flag_ref[0] = 0
+
+    flag_ref[0] |= jnp.any(cur_ref[0] != snap_ref[0]).astype(jnp.int32)
+
+
+def _bit_view(x: jax.Array) -> jax.Array:
+    """Same-width unsigned-int view for exact bit-pattern comparison."""
+    if jnp.issubdtype(x.dtype, jnp.inexact):
+        return jax.lax.bitcast_convert_type(
+            x, jnp.dtype(f"uint{x.dtype.itemsize * 8}"))
+    return x
 
 
 def dirty_diff_tpu(cur: jax.Array, snap: jax.Array, *,
+                   tile_elems: int | None = None,
                    interpret: bool = False) -> jax.Array:
-    """cur, snap: (nblocks, block_elems) same dtype -> (nblocks,) int32."""
+    """cur, snap: (nblocks, block_elems) same dtype -> (nblocks,) int32.
+
+    ``tile_elems`` bounds per-step VMEM residency; ``block_elems`` that are
+    not a tile multiple are zero-padded on both inputs (equal padding never
+    marks a block dirty).
+    """
     assert cur.shape == snap.shape and cur.dtype == snap.dtype
+    cur, snap = _bit_view(cur), _bit_view(snap)
     nb, be = cur.shape
+    if tile_elems is None:
+        tile_elems = DEFAULT_TILE_ELEMS
+    tile_elems = max(1, min(int(tile_elems), be))
+    pad = (-be) % tile_elems
+    if pad:
+        cur = jnp.pad(cur, ((0, 0), (0, pad)))
+        snap = jnp.pad(snap, ((0, 0), (0, pad)))
+    ntiles = (be + pad) // tile_elems
     return pl.pallas_call(
         _kernel,
-        grid=(nb,),
+        grid=(nb, ntiles),
         in_specs=[
-            pl.BlockSpec((1, be), lambda i: (i, 0)),
-            pl.BlockSpec((1, be), lambda i: (i, 0)),
+            pl.BlockSpec((1, tile_elems), lambda i, j: (i, j)),
+            pl.BlockSpec((1, tile_elems), lambda i, j: (i, j)),
         ],
-        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_specs=pl.BlockSpec((1,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((nb,), jnp.int32),
         interpret=interpret,
     )(cur, snap)

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.dirty_diff import dirty_diff_tpu
+from repro.kernels.dirty_diff import _bit_view, dirty_diff_tpu
 from repro.kernels.flash_attention import flash_attention_tpu
 from repro.kernels.rg_lru import rg_lru_tpu
 from repro.kernels.ssd_scan import ssd_scan_tpu
@@ -82,14 +82,20 @@ def rg_lru_scan(a, gx, *, block=256, impl: str | None = None):
     return y[:, :S]
 
 
-def dirty_blocks(cur, snap, *, block_elems=1024, impl: str | None = None):
+def dirty_blocks(cur, snap, *, block_elems=1024, tile_elems=None,
+                 impl: str | None = None):
     """Flatten two same-shape tensors into blocks; return int32 changed flags.
 
-    Feeds DirtyTracker.mark_blocks for device-state incremental checkpoints.
+    Feeds DirtyTracker.mark_blocks for device-state incremental checkpoints
+    (``Window.sync_from_device`` sizes ``block_elems`` so one flag covers one
+    tracker page).  ``tile_elems`` bounds the kernel's per-step VMEM
+    residency for blocks larger than a VMEM tile.
     """
     impl = impl or ("pallas" if use_pallas() else "ref")
-    c = cur.reshape(-1)
-    s = snap.reshape(-1)
+    # bit-pattern view before dispatch so ref and pallas agree: an unchanged
+    # NaN block stays clean under either impl (value compare would dirty it)
+    c = _bit_view(jnp.asarray(cur)).reshape(-1)
+    s = _bit_view(jnp.asarray(snap)).reshape(-1)
     pad = (-c.shape[0]) % block_elems
     if pad:
         c = jnp.pad(c, (0, pad))
@@ -98,4 +104,5 @@ def dirty_blocks(cur, snap, *, block_elems=1024, impl: str | None = None):
     s = s.reshape(-1, block_elems)
     if impl == "ref":
         return ref.dirty_diff_ref(c, s)
-    return dirty_diff_tpu(c, s, interpret=(impl == "interpret"))
+    return dirty_diff_tpu(c, s, tile_elems=tile_elems,
+                          interpret=(impl == "interpret"))

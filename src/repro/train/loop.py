@@ -186,8 +186,11 @@ class Trainer:
                 loss, grads = self._grads_step(params, batch)
                 new_p = self._oo_opt.update(
                     {k: np.asarray(v, np.float32) for k, v in grads.items()})
-                params = {k: jnp.asarray(v, jnp.bfloat16)
-                          for k, v in new_p.items()}
+                # update() returns only the keys present in grads (sparse/MoE
+                # updates skip the rest) -- merge, never replace wholesale
+                params = {**params,
+                          **{k: jnp.asarray(v, jnp.bfloat16)
+                             for k, v in new_p.items()}}
                 stats = {"lr": 0.0, "gnorm": 0.0}
             dt = time.monotonic() - t0
             self.hb.beat(self.comm.rank, step)

@@ -16,6 +16,15 @@ storage latency hides under the compute (the paper's overlap argument
 applied to the optimizer walk).  Pass ``prefetch=False`` to fall back to
 the fully synchronous walk.
 
+Selective write-behind: parameters missing from ``grads`` (MoE experts not
+routed to this step) are skipped outright, and a block whose gradient and
+both moments are all-zero with no weight decay is a provable no-op -- its
+write-behind is skipped too, so the window's pages stay clean.  The walk
+accumulates a window-block *touched mask*; ``sync(touched_only=True)``
+narrows the flush to exactly the blocks some update wrote since the last
+sync (``flush_async(mask=...)`` intersection), so checkpoint write traffic
+scales with update sparsity, not state size.
+
 For the 236B/400B MoE configs this is the difference between fitting and
 not fitting: 12 bytes/param of optimizer state move off-HBM, leaving 2
 (bf16 weights) + 2 (grads) on device.
@@ -27,6 +36,7 @@ import numpy as np
 
 from repro.core.comm import Communicator
 from repro.core.offload import WindowedPyTree
+from repro.core.storage import mark_span
 from repro.core.window import Request
 from repro.train.optimizer import AdamWConfig, cosine_schedule
 
@@ -55,6 +65,19 @@ class OutOfCoreAdamW:
             block_bytes=block_bytes, writeback_interval=writeback_interval)
         self.param_keys = sorted(param_shapes)
         self._initialized = False
+        # window-block mask of pages some update wrote since the last sync
+        seg = self.state.win.segments[self.state.rank]
+        tracker = getattr(seg, "tracker", None)
+        self._page_size = tracker.page_size if tracker is not None else 4096
+        self._touched: np.ndarray | None = None
+        self.blocks_skipped = 0  # provable no-op blocks (stats)
+
+    def _mark_touched(self, lo: int, hi: int) -> None:
+        if self._touched is None:
+            seg = self.state.win.segments[self.state.rank]
+            self._touched = np.zeros(-(-seg.size // self._page_size),
+                                     dtype=bool)
+        mark_span(self._touched, lo, hi, self._page_size)
 
     def initialize(self, params: dict) -> None:
         """Seed master weights from the (bf16) device params; zero moments."""
@@ -66,15 +89,20 @@ class OutOfCoreAdamW:
         self._initialized = True
 
     def update(self, grads: dict, *, grad_scale: float = 1.0,
-               prefetch: bool = True) -> dict:
+               prefetch: bool = True, skip_clean: bool = True) -> dict:
         """Streamed blockwise AdamW.  grads: host-fetchable arrays (bf16 ok).
-        Returns new bf16 params dict (numpy) to push to device.
+        Returns new bf16 params dict (numpy) to push to device -- only for
+        the keys present in ``grads`` (sparse/MoE updates skip the rest).
 
         With ``prefetch`` (default), block ``i+1`` of all three state arrays
         is fetched with ``rget`` while block ``i``'s math runs, and block
         writes go out as ``rput`` write-behind; the walk waits for the
         write-behind before returning, so callers observe fully-applied
         state.  Results are bit-identical to the synchronous walk.
+
+        ``skip_clean`` elides the write-behind of provable no-op blocks
+        (zero gradient, zero moments, no decay on the tensor), keeping
+        their window pages clean for the selective sync.
         """
         cfg = self.cfg
         lr = float(cosine_schedule(cfg, self.step))
@@ -84,6 +112,8 @@ class OutOfCoreAdamW:
         b2c = 1 - cfg.b2 ** t
         out = {}
         for k in self.param_keys:
+            if k not in grads:  # sparse update: untouched expert/tensor
+                continue
             g_full = np.asarray(grads[k], np.float32).ravel() * grad_scale
             wa_m = self.state.array(f"m/{k}")
             wa_v = self.state.array(f"v/{k}")
@@ -109,6 +139,14 @@ class OutOfCoreAdamW:
                     v = wa_v.read_block(i)
                     p = wa_p.read_block(i)
                 g = g_full[off: off + p.size]
+                if (skip_clean and decay == 0.0 and not g.any()
+                        and not m.any() and not v.any()):
+                    # provable no-op: m,v stay zero and p is unchanged --
+                    # skip the write-behind, leave the pages clean
+                    self.blocks_skipped += 1
+                    new_p[off: off + p.size] = p
+                    off += p.size
+                    continue
                 m = cfg.b1 * m + (1 - cfg.b1) * g
                 v = cfg.b2 * v + (1 - cfg.b2) * g * g
                 upd = (m / b1c) / (np.sqrt(v / b2c) + cfg.eps) + decay * p
@@ -121,6 +159,8 @@ class OutOfCoreAdamW:
                     wa_m.write_block(i, m)
                     wa_v.write_block(i, v)
                     wa_p.write_block(i, p)
+                for wa in (wa_m, wa_v, wa_p):
+                    self._mark_touched(*wa.block_byte_span(i))
                 new_p[off: off + p.size] = p
                 off += p.size
             Request.waitall(pending_writes)
@@ -128,9 +168,31 @@ class OutOfCoreAdamW:
             out[k] = new_p.reshape(shape)
         return out
 
-    def sync(self) -> int:
-        """Selective flush of the optimizer window (checkpoint)."""
-        return self.state.sync()
+    def sync(self, *, touched_only: bool = False) -> int:
+        """Selective flush of the optimizer window (checkpoint).
+
+        ``touched_only`` narrows the flush to the window blocks updates have
+        written since the last sync (the write-behind mask intersected with
+        the host dirty bitmap); blocks dirtied by other writers stay dirty
+        for a later full sync.
+        """
+        if touched_only:
+            mask, self._touched = self._touched, None
+            if mask is None:
+                return 0  # nothing touched since the last sync
+            try:
+                return self.state.sync(mask=mask)
+            except BaseException:
+                # the backing re-marked the taken blocks; restore the mask
+                # too so a touched_only retry replays them (never skips)
+                if self._touched is None:
+                    self._touched = mask
+                else:
+                    self._touched |= mask
+                raise
+        n = self.state.sync()
+        self._touched = None  # only after a successful full flush
+        return n
 
     def masters(self) -> dict:
         return {k: self.state.get(f"master/{k}") for k in self.param_keys}

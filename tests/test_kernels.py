@@ -78,6 +78,72 @@ def test_dirty_diff_sweep(dtype):
     assert flags[2] == 1 and flags[5] == 1 and int(flags.sum()) == 2
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+@pytest.mark.parametrize("block_elems,n", [
+    (128, 1024),    # aligned
+    (96, 960),      # odd block size
+    (100, 930),     # odd block size + ragged tail (last partial block)
+])
+@pytest.mark.parametrize("pattern", ["sparse", "all_clean", "all_dirty"])
+def test_dirty_diff_matrix_matches_host_compare_on_write(
+        tmp_path, dtype, block_elems, n, pattern):
+    """The device kernel (interpret mode) and the host compare-on-write
+    tracker must produce the identical bitmap for the same state change."""
+    from repro.core.storage import CachedBacking
+
+    key = jax.random.PRNGKey(n + block_elems)
+    if dtype == jnp.int8:
+        snap = jax.random.randint(key, (n,), -100, 100, jnp.int32).astype(dtype)
+    else:
+        snap = (jax.random.normal(key, (n,), jnp.float32) * 4).astype(dtype)
+    nblocks = -(-n // block_elems)
+    if pattern == "sparse":
+        dirty = sorted({0, nblocks // 2, nblocks - 1})
+    elif pattern == "all_dirty":
+        dirty = list(range(nblocks))
+    else:
+        dirty = []
+    cur = snap
+    for b in dirty:
+        idx = min(b * block_elems + (b % block_elems), n - 1)
+        cur = cur.at[idx].add(jnp.asarray(1, dtype))
+    flags = ops.dirty_blocks(cur, snap, block_elems=block_elems,
+                             tile_elems=64, impl="interpret")
+    want = np.zeros(nblocks, dtype=bool)
+    want[dirty] = True
+    assert (np.asarray(flags, dtype=bool) == want).all()
+
+    # host path: page cache with compare-on-write, page == element block
+    itemsize = np.dtype(dtype).itemsize
+    page = block_elems * itemsize
+    # cache must hold every block: a ragged tail rounds size//page down,
+    # and an evicted dirty block is written back (bit cleared) early
+    backing = CachedBacking(str(tmp_path / "b.bin"), n * itemsize,
+                            page_size=page, cache_bytes=nblocks * page,
+                            compare_on_write=True)
+    snap_b = np.frombuffer(np.asarray(snap).tobytes(), np.uint8)
+    cur_b = np.frombuffer(np.asarray(cur).tobytes(), np.uint8)
+    backing.write(0, snap_b)
+    backing.sync()  # baseline persisted, tracker clean
+    backing.write(0, cur_b)
+    host_bits = backing.tracker._bits.copy()
+    backing.close(unlink=True)
+    assert (host_bits == np.asarray(flags, dtype=bool)).all(), \
+        "device bitmap != host compare-on-write bitmap"
+
+
+@pytest.mark.parametrize("impl", ["interpret", "ref"])
+def test_dirty_diff_tiled_bit_exact_nan(impl):
+    """Tiling sweeps tiles of one block into one flag, and the bit-pattern
+    compare keeps an unchanged NaN block clean (value compare would not) --
+    under BOTH impls, so ref and pallas stay interchangeable."""
+    cur = jnp.zeros((3, 500), jnp.float32).at[1, 499].set(jnp.nan)
+    snap = cur.at[2, 0].add(1.0)
+    flags = ops.dirty_blocks(cur.reshape(-1), snap.reshape(-1),
+                             block_elems=500, tile_elems=128, impl=impl)
+    assert flags.tolist() == [0, 0, 1]
+
+
 def test_dirty_diff_feeds_tracker():
     """Device-side diff plugs into the host DirtyTracker bitmap."""
     from repro.core.storage import DirtyTracker

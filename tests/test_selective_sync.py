@@ -1,0 +1,478 @@
+"""Device-mask selective sync + backpressure semantics end to end.
+
+Covers the intersection rules of ``flush_async(mask=...)`` /
+``sync(mask=...)``, the ``sync_from_device`` pipeline (Pallas dirty_diff ->
+window mask -> masked write-back), combined-window mask offset translation,
+the checkpoint manager's snapshot-diff staging, and the crash-replay
+invariant: a killed write-back pipeline never commits a manifest ahead of
+its data, and the retry replays everything (never skips).
+"""
+
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+from repro.core import Communicator, Request, Window
+
+PAGE = 4096
+PAGES = 16
+
+
+def storage_info(tmp_path, name="w.bin"):
+    return {"alloc_type": "storage",
+            "storage_alloc_filename": str(tmp_path / name)}
+
+
+def _mask(*blocks, n=PAGES):
+    m = np.zeros(n, dtype=bool)
+    for b in blocks:
+        m[b] = True
+    return m
+
+
+# -- mask intersection rules --------------------------------------------------
+
+def test_masked_sync_flushes_only_intersection(tmp_path):
+    comm = Communicator(1)
+    win = Window.allocate(comm, PAGES * PAGE, info=storage_info(tmp_path))
+    for pg in (1, 3, 5):
+        win.put(np.full(16, pg + 1, np.uint8), 0, pg * PAGE)
+    # mask selects a dirty page (3) and a clean one (7): only 3 flushes
+    assert win.sync(0, mask=_mask(3, 7)) == PAGE
+    disk = np.fromfile(tmp_path / "w.bin", np.uint8)
+    assert (disk[3 * PAGE: 3 * PAGE + 16] == 4).all()
+    assert not (disk[1 * PAGE: 1 * PAGE + 16] == 2).any()  # outside mask
+    # dirty-outside-mask stays dirty: the later unmasked sync persists it
+    assert win.dirty_bytes(0) == 2 * PAGE
+    assert win.sync(0) == 2 * PAGE
+    disk = np.fromfile(tmp_path / "w.bin", np.uint8)
+    assert (disk[1 * PAGE: 1 * PAGE + 16] == 2).all()
+    assert (disk[5 * PAGE: 5 * PAGE + 16] == 6).all()
+    win.free()
+
+
+def test_masked_flush_async_ordered_after_rput(tmp_path):
+    comm = Communicator(1)
+    win = Window.allocate(comm, PAGES * PAGE, info=storage_info(tmp_path))
+    win.rput(np.full(PAGE, 9, np.uint8), 0, 2 * PAGE)
+    req = win.flush_async(0, mask=_mask(2))
+    assert isinstance(req, Request)
+    assert req.wait(timeout=10.0) == PAGE
+    assert (np.fromfile(tmp_path / "w.bin", np.uint8)[2 * PAGE: 3 * PAGE]
+            == 9).all()
+    win.free()
+
+
+def test_mask_requires_rank_and_non_dynamic(tmp_path):
+    from repro.core import WindowError, alloc_mem
+    comm = Communicator(2)
+    win = Window.allocate(comm, PAGES * PAGE, info=storage_info(tmp_path))
+    with pytest.raises(WindowError):
+        win.sync(None, mask=_mask(0))
+    with pytest.raises(WindowError):
+        win.flush_async(mask=_mask(0))
+    win.free()
+    dyn = Window.create_dynamic(Communicator(1))
+    dyn.attach(0, alloc_mem(PAGE, info=storage_info(tmp_path, "d.bin")))
+    with pytest.raises(WindowError):
+        dyn.flush_async(0, mask=_mask(0, n=1))
+    dyn.free()
+
+
+def test_mask_on_memory_window_is_noop():
+    comm = Communicator(1)
+    win = Window.allocate(comm, PAGES * PAGE)
+    win.put(np.full(8, 3, np.uint8), 0, 0)
+    assert win.sync(0, mask=_mask(0)) == 0  # nothing to persist
+    win.free()
+
+
+# -- sync_from_device ---------------------------------------------------------
+
+def test_sync_from_device_ships_and_flushes_only_changed_pages(tmp_path):
+    jnp = pytest.importorskip("jax.numpy")
+    comm = Communicator(1)
+    win = Window.allocate(comm, PAGES * PAGE, info=storage_info(tmp_path))
+    elems = PAGES * PAGE // 4
+    snap = np.arange(elems, dtype=np.float32)
+    win.put(snap, 0, 0)
+    win.sync(0)
+    backing = win.segments[0].backing
+    base_flushed = backing.bytes_flushed
+    cur = snap.copy()
+    cur[(PAGE // 4) * 4 + 1] += 1.0   # page 4
+    cur[(PAGE // 4) * 11] += 2.0      # page 11
+    req = win.sync_from_device(0, jnp.asarray(cur), jnp.asarray(snap))
+    assert req.wait(timeout=10.0) == 2 * PAGE
+    assert backing.bytes_flushed - base_flushed == 2 * PAGE
+    assert (np.fromfile(tmp_path / "w.bin", np.float32) == cur).all()
+    assert win.dirty_bytes(0) == 0
+    win.free()
+
+
+def test_sync_from_device_all_clean_is_free(tmp_path):
+    comm = Communicator(1)
+    win = Window.allocate(comm, PAGES * PAGE, info=storage_info(tmp_path))
+    snap = np.arange(PAGES * PAGE // 4, dtype=np.float32)
+    win.put(snap, 0, 0)
+    win.sync(0)
+    assert win.sync_from_device(0, snap, snap, blocking=True) == 0
+    win.free()
+
+
+def test_sync_from_device_unaligned_disp_conservative(tmp_path):
+    """A non-page-aligned target_disp straddles window pages; the masked
+    flush must still persist every changed byte."""
+    comm = Communicator(1)
+    win = Window.allocate(comm, PAGES * PAGE, info=storage_info(tmp_path))
+    disp = PAGE + 100  # element 0 sits 100 bytes into page 1
+    n = 4 * PAGE // 4
+    snap = np.arange(n, dtype=np.float32)
+    win.put(snap, 0, disp)
+    win.sync(0)
+    cur = snap.copy()
+    cur[0] += 1.0
+    cur[-1] += 1.0
+    flushed = win.sync_from_device(0, cur, snap, target_disp=disp,
+                                   blocking=True)
+    assert flushed >= 2 * PAGE  # straddling may flush the extra page
+    raw = np.fromfile(tmp_path / "w.bin", np.uint8)
+    got = raw[disp: disp + n * 4].view(np.float32)
+    assert (got == cur).all()
+    win.free()
+
+
+def test_device_dirty_mask_feeds_flush(tmp_path):
+    comm = Communicator(1)
+    win = Window.allocate(comm, PAGES * PAGE, info=storage_info(tmp_path))
+    snap = np.zeros(PAGES * PAGE // 4, np.float32)
+    cur = snap.copy()
+    cur[(PAGE // 4) * 6 + 7] = 5.0
+    mask = win.device_dirty_mask(0, cur, snap)
+    assert mask.tolist() == _mask(6).tolist()
+    # the mask composes with host-side writes: put everything, flush masked
+    win.put(cur, 0, 0)
+    assert win.sync(0, mask=mask) == PAGE
+    assert win.dirty_bytes(0) == (PAGES - 1) * PAGE
+    win.free()
+
+
+# -- combined windows: mask offsets respect the memory/storage split ----------
+
+def test_combined_mask_offset_translation(tmp_path):
+    comm = Communicator(1)
+    info = {**storage_info(tmp_path, "c.bin"), "alloc_type": "storage",
+            "storage_alloc_factor": "0.5"}
+    win = Window.allocate(comm, PAGES * PAGE, info=info)
+    assert win.flavor == "combined"
+    seg = win.segments[0]
+    assert seg.mem_bytes == 8 * PAGE and seg.sto_bytes == 8 * PAGE
+    # window page 10 = storage page 2 (memory_first: storage starts at 8)
+    win.put(np.full(32, 7, np.uint8), 0, 10 * PAGE)
+    win.put(np.full(32, 8, np.uint8), 0, 12 * PAGE)
+    assert win.sync(0, mask=_mask(10)) == PAGE
+    disk = np.fromfile(tmp_path / "c.bin", np.uint8)
+    assert (disk[2 * PAGE: 2 * PAGE + 32] == 7).all()
+    assert win.dirty_bytes(0) == PAGE  # page 12 still dirty
+    # a mask naming only memory pages selects nothing storage-side
+    assert win.sync(0, mask=_mask(0, 3, 7)) == 0
+    assert win.sync(0) == PAGE
+    win.free()
+
+
+# -- checkpoint manager: snapshot-diff staging --------------------------------
+
+def test_ckpt_snapshot_diff_puts_and_flushes_only_changed(tmp_path):
+    comm = Communicator(1)
+    specs = {"big": ((1 << 16,), np.float32), "tiny": ((4,), np.float32)}
+    cm = CheckpointManager(str(tmp_path), comm, specs, double_buffer=False)
+    big = np.random.default_rng(0).standard_normal(1 << 16).astype(np.float32)
+    f1 = cm.save(1, {"big": big, "tiny": np.zeros(4, np.float32)})
+    backing = cm.windows["a"].win.segments[0].backing
+    writes_before = backing.tracker.dirty_count
+    f2 = cm.save(2, {"big": big, "tiny": np.ones(4, np.float32)})
+    assert f1 >= (1 << 18) and f2 == PAGE  # exactly the changed page
+    assert writes_before == 0  # staging itself dirtied nothing extra
+    r = cm.restore()
+    assert r.step == 2 and (r.tree["big"] == big).all() \
+        and (r.tree["tiny"] == 1).all()
+    cm.close()
+
+
+def test_ckpt_snapshot_diff_async_roundtrip(tmp_path):
+    comm = Communicator(1)
+    specs = {"w": ((256, 256), np.float32)}
+    cm = CheckpointManager(str(tmp_path), comm, specs)
+    w = np.ones((256, 256), np.float32)
+    cm.save_async(1, {"w": w})
+    w2 = w.copy()
+    w2[0, 0] = 5.0
+    cm.save_async(2, {"w": w2})   # window B: first save, full
+    cm.save_async(3, {"w": w})    # window A again: diff vs step 1
+    cm.wait()
+    assert cm.saves == 3
+    r = cm.restore()
+    assert r.step == 3 and (r.tree["w"] == w).all()
+    cm.close()
+
+
+# -- crash-replay: manifest never ahead of data -------------------------------
+
+class _DiskDies(OSError):
+    pass
+
+
+def _fail_after(backing, n_calls):
+    """Kill the write-back pipeline after ``n_calls`` pwrites (mid-flush)."""
+    orig = backing.file.pwrite
+    state = {"n": 0}
+
+    def dying(offset, data):
+        state["n"] += 1
+        if state["n"] > n_calls:
+            raise _DiskDies("disk died mid-flush")
+        return orig(offset, data)
+
+    backing.file.pwrite = dying
+    return lambda: setattr(backing.file, "pwrite", orig)
+
+
+def _manifest_step(tmp_path) -> int:
+    import json
+    with open(tmp_path / "manifest.json") as f:
+        return int(json.load(f)["step"])
+
+
+def test_crash_mid_save_async_never_commits_manifest_ahead_of_data(tmp_path):
+    comm = Communicator(1)
+    specs = {"w": ((1 << 15,), np.float32)}
+    cm = CheckpointManager(str(tmp_path), comm, specs, double_buffer=False)
+    w1 = np.random.default_rng(1).standard_normal(1 << 15).astype(np.float32)
+    cm.save(1, {"w": w1})
+    backing = cm.windows["a"].win.segments[0].backing
+
+    # change two *scattered* page regions -> two dirty runs -> two pwrites;
+    # killing after the first dies genuinely mid-flush
+    w2 = w1.copy()
+    w2[: PAGE // 4] += 1.0
+    w2[-(PAGE // 4):] += 1.0
+    undo = _fail_after(backing, 1)  # first run lands, then the disk dies
+    req = cm.save_async(2, {"w": w2})
+    with pytest.raises(_DiskDies):
+        req.wait(timeout=30.0)
+    # the manifest was never committed ahead of the (partial) data flush
+    assert _manifest_step(tmp_path) == 1
+    with pytest.raises(_DiskDies):
+        cm.wait()  # surfaces the failure to the manager (invalidates snap)
+    assert cm.saves == 1
+    undo()
+
+    # replay-but-never-skip: the retry must rewrite *everything* the failed
+    # flush took (tracker restore + snapshot invalidation), so the
+    # recommitted checkpoint CRC-validates from a cold restart
+    cm.save(2, {"w": w2})
+    assert _manifest_step(tmp_path) == 2
+    cm2 = CheckpointManager.open_for_restore(str(tmp_path), Communicator(1),
+                                             specs)
+    r = cm2.restore()
+    assert r is not None and not r.fell_back
+    assert r.step == 2 and (r.tree["w"] == w2).all()
+    cm2.close()
+    cm.close()
+
+
+def test_crash_mid_blocking_save_keeps_previous_checkpoint(tmp_path):
+    comm = Communicator(1)
+    specs = {"w": ((1 << 14,), np.float32)}
+    cm = CheckpointManager(str(tmp_path), comm, specs, double_buffer=False)
+    w1 = np.full(1 << 14, 3.0, np.float32)
+    cm.save(7, {"w": w1})
+    backing = cm.windows["a"].win.segments[0].backing
+    undo = _fail_after(backing, 0)  # nothing lands
+    with pytest.raises(_DiskDies):
+        cm.save(8, {"w": w1 * 2})
+    undo()
+    assert _manifest_step(tmp_path) == 7
+    # "crash": restart cold -- disk still holds step 7's bytes, CRC intact
+    # (the in-process page cache holds the staged-but-unflushed step 8)
+    cm2 = CheckpointManager.open_for_restore(str(tmp_path), Communicator(1),
+                                             specs)
+    r = cm2.restore()
+    assert r is not None and r.step == 7 and (r.tree["w"] == 3.0).all()
+    cm2.close()
+    cm.close()
+
+
+# -- out-of-core optimizer: write-behind skips untouched blocks ---------------
+
+def test_offload_opt_selective_write_behind(tmp_path):
+    from repro.train.offload_opt import OutOfCoreAdamW
+    from repro.train.optimizer import AdamWConfig
+
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=10,
+                      clip_norm=0.0, weight_decay=0.01)
+    rng = np.random.default_rng(3)
+    params = {"w": rng.standard_normal((64, 16)).astype(np.float32),
+              "norm/b": np.zeros(2048, np.float32)}  # not decayed
+    oo = OutOfCoreAdamW(Communicator(1),
+                        {k: (v.shape, v.dtype) for k, v in params.items()},
+                        str(tmp_path), cfg, block_bytes=1024)
+    oo.initialize(params)
+    oo.state.sync()  # clean baseline
+
+    grads = {"w": rng.standard_normal((64, 16)).astype(np.float32),
+             "norm/b": np.zeros(2048, np.float32)}
+    out = oo.update(grads)
+    assert set(out) == {"norm/b", "w"}
+    assert (out["norm/b"] == 0).all()  # provable no-op, still returned
+    assert oo.blocks_skipped == 8  # zero-grad blocks never wrote back
+    # touched-only sync flushes just w's state pages (m, v, master)
+    flushed = oo.sync(touched_only=True)
+    assert 0 < flushed <= 3 * 2 * PAGE
+    assert oo.state.win.dirty_bytes(0) == 0  # skipped blocks stayed clean
+
+    # sparse update: a key absent from grads is untouched end to end
+    out = oo.update({"w": grads["w"]})
+    assert set(out) == {"w"}
+    assert oo.sync(touched_only=True) > 0
+    assert oo.sync(touched_only=True) == 0  # nothing touched since
+    oo.free()
+
+
+def test_offload_opt_touched_mask_survives_flush_failure(tmp_path):
+    """A failed touched-only flush must restore the mask: the retry replays
+    the touched blocks instead of reporting 0 (replay-never-skip)."""
+    from repro.train.offload_opt import OutOfCoreAdamW
+    from repro.train.optimizer import AdamWConfig
+
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=10,
+                      clip_norm=0.0, weight_decay=0.01)
+    params = {"w": np.ones((256, 16), np.float32)}
+    oo = OutOfCoreAdamW(Communicator(1), {"w": ((256, 16), np.float32)},
+                        str(tmp_path), cfg, block_bytes=1024)
+    oo.initialize(params)
+    oo.state.sync()
+    oo.update({"w": np.ones((256, 16), np.float32)})
+    backing = oo.state.win.segments[0].backing
+    undo = _fail_after(backing, 0)
+    with pytest.raises(_DiskDies):
+        oo.sync(touched_only=True)
+    undo()
+    assert oo.sync(touched_only=True) > 0  # mask restored, retry flushes
+    assert oo.state.win.dirty_bytes(0) == 0
+    oo.free()
+
+
+def test_ckpt_stage_failure_invalidates_snapshot(tmp_path):
+    """A failure during staging itself (put dies mid-way) leaves a mixed
+    page cache; the snapshot must be dropped so the next save replays a
+    full put + unmasked flush and the checkpoint CRC-validates."""
+    comm = Communicator(1)
+    specs = {"w": ((1 << 14,), np.float32)}
+    cm = CheckpointManager(str(tmp_path), comm, specs, double_buffer=False)
+    w1 = np.random.default_rng(5).standard_normal(1 << 14).astype(np.float32)
+    cm.save(1, {"w": w1})
+    wt = cm.windows["a"]
+
+    w2 = w1.copy()
+    w2[: PAGE // 4] += 1.0
+    w2[-(PAGE // 4):] += 1.0  # two scattered changed regions -> two puts
+    orig_put = wt.win.put
+    calls = {"n": 0}
+
+    def dying_put(data, rank, disp=0, **kw):
+        calls["n"] += 1
+        if calls["n"] > 1:
+            raise _DiskDies("cache eviction hit a dead disk")
+        return orig_put(data, rank, disp, **kw)
+
+    wt.win.put = dying_put
+    with pytest.raises(_DiskDies):
+        cm.save(2, {"w": w2})
+    wt.win.put = orig_put
+    assert "a" not in cm._snapshots  # stale snapshot dropped
+    assert _manifest_step(tmp_path) == 1
+
+    cm.save(2, {"w": w2})  # full replay: no diff against the mixed cache
+    cm2 = CheckpointManager.open_for_restore(str(tmp_path), Communicator(1),
+                                             specs)
+    r = cm2.restore()
+    assert r is not None and not r.fell_back
+    assert r.step == 2 and (r.tree["w"] == w2).all()
+    cm2.close()
+    cm.close()
+
+
+# -- window-level backpressure ------------------------------------------------
+
+def test_backpressure_no_deadlock_inside_exclusive_epoch(tmp_path):
+    """rput batching inside an exclusive lock epoch (the module's documented
+    MPI pattern) must not deadlock under backpressure: the queued tasks are
+    blocked on the caller's own lock, so the stall is bypassed for that
+    thread (bytes still charged, watermark transiently exceeded)."""
+    high = 8 * PAGE
+    comm = Communicator(1)
+    win = Window.allocate(comm, PAGES * PAGE, info=storage_info(tmp_path),
+                          max_inflight_bytes=high, low_watermark=2 * PAGE)
+    data = np.full(4 * PAGE, 5, np.uint8)
+    win.lock(0, exclusive=True)
+    try:
+        reqs = [win.rput(data, 0, 0), win.rput(data, 0, 4 * PAGE),
+                win.rput(data, 0, 8 * PAGE)]  # 12 pages queued > high mark
+        assert not reqs[0].test()  # all blocked on our exclusive lock
+    finally:
+        win.unlock(0)
+    Request.waitall(reqs, timeout=30.0)
+    assert (win.get(0, 8 * PAGE, 4 * PAGE) == 5).all()
+    win.free()
+
+
+def test_backpressure_no_deadlock_inside_shared_epoch(tmp_path):
+    """The shared-epoch variant: the caller's reader hold blocks a queued
+    exclusive-acquiring task (raccumulate) whose charge keeps in-flight
+    above the watermark; a stalled submit could never drain, so the epoch
+    holder bypasses the stall."""
+    high = 4 * PAGE
+    comm = Communicator(1)
+    win = Window.allocate(comm, PAGES * PAGE, info=storage_info(tmp_path),
+                          max_inflight_bytes=high, low_watermark=PAGE)
+    acc = np.ones(high // 8, np.int64)  # charge == high watermark
+    win.lock(0, exclusive=False)
+    try:
+        blocked = win.raccumulate(acc, 0, 0, "sum")  # waits on our reader
+        reqs = [win.rput(np.full(2 * PAGE, 3, np.uint8), 0, 8 * PAGE)
+                for _ in range(3)]  # would stall without the epoch bypass
+        assert not blocked.test()
+    finally:
+        win.unlock(0)
+    Request.waitall([blocked] + reqs, timeout=30.0)
+    assert (win.get(0, 8 * PAGE, 2 * PAGE) == 3).all()
+    win.free()
+
+
+def test_flush_charge_full_counts_only_storage_bytes(tmp_path):
+    """full=True charges what a flush can actually write: the combined
+    window's storage subrange, never the pinned memory part."""
+    comm = Communicator(1)
+    info = {**storage_info(tmp_path, "c.bin"), "storage_alloc_factor": "0.5"}
+    win = Window.allocate(comm, PAGES * PAGE, info=info)
+    assert win._flush_charge(0, True, None) == 8 * PAGE  # sto_bytes only
+    win.free()
+    mem = Window.allocate(comm, PAGES * PAGE)
+    assert mem._flush_charge(0, True, None) == 0  # nothing to persist
+    mem.free()
+
+
+def test_window_backpressure_stats_and_bound(tmp_path):
+    high, low = 8 * PAGE, 2 * PAGE
+    comm = Communicator(1)
+    win = Window.allocate(comm, PAGES * PAGE, info=storage_info(tmp_path),
+                          max_inflight_bytes=high, low_watermark=low)
+    data = np.full(PAGE, 1, np.uint8)
+    for i in range(64):
+        win.rput(data, 0, (i % PAGES) * PAGE)
+    win.flush(0)
+    stats = win.pool_stats()
+    assert stats["max_inflight_bytes"] <= high
+    assert stats["completed_bytes"] == stats["submitted_bytes"] == 64 * PAGE
+    win.free()

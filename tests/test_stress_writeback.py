@@ -1,0 +1,187 @@
+"""Concurrency stress for the WritebackPool + window nonblocking layer.
+
+Many threads race ``rput`` / ``flush_async`` / ``flush_all`` against one
+storage window.  Invariants under fire:
+
+* per-target-rank FIFO: each thread's writes to its private region land in
+  issue order, so the *last* value wins;
+* no write is ever lost: after the final drain the backing files match the
+  expected bytes byte-for-byte;
+* with backpressure enabled, queued in-flight bytes never exceed the high
+  watermark (the pool records the observed high-water mark at submit time).
+
+Marked ``slow``: quick runs exclude these with ``-m 'not slow'``.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import Communicator, Request, Window
+from repro.core.storage import WritebackPool
+
+NRANKS = 4
+THREADS = 8
+WRITES = 120
+REGION = 512  # bytes, per-thread private region
+PAGES_PER_RANK = 8
+
+
+def _storage_info(tmp_path):
+    return {"alloc_type": "storage",
+            "storage_alloc_filename": str(tmp_path / "stress.bin")}
+
+
+def _run_race(win, *, probe_order: bool):
+    """THREADS writers race rputs + async flushes; returns per-thread errors."""
+    errs = []
+    start = threading.Barrier(THREADS)
+
+    def worker(t):
+        try:
+            rank = t % NRANKS
+            base = (t // NRANKS) * REGION
+            start.wait()
+            last = None
+            for seq in range(WRITES):
+                val = (t * WRITES + seq) % 251
+                last = val
+                win.rput(np.full(REGION, val, np.uint8), rank, base)
+                if seq % 16 == 15:
+                    win.flush_async(rank)
+                if seq % 48 == 47:
+                    win.flush_all()
+            if probe_order:
+                # FIFO per rank: a get issued after all rputs must observe
+                # the final value
+                got = win.rget(rank, base, REGION).wait(timeout=30.0)
+                assert (got == last).all(), "FIFO violated mid-flight"
+        except BaseException as e:  # pragma: no cover - surfaced below
+            errs.append((t, e))
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(THREADS)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    return errs
+
+
+def _expected_region(t):
+    return np.full(REGION, ((t + 1) * WRITES - 1) % 251, np.uint8)
+
+
+def _verify_files(tmp_path):
+    """Final file contents byte-for-byte: every thread's last write won."""
+    for t in range(THREADS):
+        rank = t % NRANKS
+        base = (t // NRANKS) * REGION
+        raw = np.fromfile(f"{tmp_path / 'stress.bin'}.{rank}", np.uint8)
+        got = raw[base: base + REGION]
+        want = _expected_region(t)
+        assert (got == want).all(), \
+            f"thread {t} rank {rank}: lost/reordered write"
+
+
+@pytest.mark.slow
+def test_stress_racing_rput_flush_fifo_no_lost_writes(tmp_path):
+    comm = Communicator(NRANKS)
+    win = Window.allocate(comm, PAGES_PER_RANK * 4096,
+                          info=_storage_info(tmp_path), async_workers=4)
+    errs = _run_race(win, probe_order=True)
+    assert not errs, errs
+    win.flush_all()
+    win.sync()  # persist whatever the async flushes didn't catch
+    win.free()
+    _verify_files(tmp_path)
+
+
+@pytest.mark.slow
+def test_stress_backpressure_bounds_inflight_bytes(tmp_path):
+    high, low = 64 << 10, 16 << 10
+    comm = Communicator(NRANKS)
+    win = Window.allocate(comm, PAGES_PER_RANK * 4096,
+                          info=_storage_info(tmp_path), async_workers=4,
+                          max_inflight_bytes=high, low_watermark=low)
+    errs = _run_race(win, probe_order=False)
+    assert not errs, errs
+    win.flush_all()
+    stats = win.pool_stats()
+    win.sync()
+    win.free()
+    _verify_files(tmp_path)
+    # every payload (REGION) is far below high-low, so the bound is strict
+    assert stats["max_inflight_bytes"] <= high, stats
+    assert stats["submitted_bytes"] == stats["completed_bytes"]
+    assert stats["inflight_bytes"] == 0
+
+
+@pytest.mark.slow
+def test_stress_pool_fifo_per_key_many_keys():
+    """Pool-level FIFO: per-key sequence numbers must arrive in order even
+    with more keys than workers and concurrent submitters."""
+    pool = WritebackPool(3)
+    seen: dict[int, list[int]] = {k: [] for k in range(6)}
+    seen_lock = threading.Lock()
+
+    def make(k, s):
+        def task():
+            with seen_lock:
+                seen[k].append(s)
+        return task
+
+    def submitter(k):
+        for s in range(300):
+            pool.submit(make(k, s), key=k)
+
+    threads = [threading.Thread(target=submitter, args=(k,))
+               for k in range(6)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    pool.drain()
+    pool.shutdown()
+    for k, lst in seen.items():
+        assert lst == sorted(lst), f"key {k} executed out of order"
+        assert len(lst) == 300
+
+
+def test_backpressure_submit_blocks_until_drained():
+    """Quick (non-slow) watermark unit test: a submit past the high mark
+    stalls until completions drain to the low mark."""
+    gate = threading.Event()
+    pool = WritebackPool(1, max_inflight_bytes=2048, low_watermark=512)
+    pool.submit(gate.wait, nbytes=1024)  # occupies the single worker
+    pool.submit(lambda: None, nbytes=1024)  # fits exactly at the high mark
+
+    admitted = threading.Event()
+
+    def late():
+        pool.submit(lambda: None, nbytes=512)  # must stall: 2048 in flight
+        admitted.set()
+
+    th = threading.Thread(target=late)
+    th.start()
+    assert not admitted.wait(0.3), "submit should stall past the high mark"
+    gate.set()  # drain: both queued tasks complete -> 0 <= low watermark
+    assert admitted.wait(10.0), "stalled submit never resumed"
+    th.join()
+    pool.drain()
+    stats = pool.stats()
+    pool.shutdown()
+    assert stats["stalls"] == 1
+    assert stats["max_inflight_bytes"] <= 2048
+
+
+def test_backpressure_oversized_task_admitted_alone():
+    """A single submission larger than the high mark must not deadlock: it
+    is admitted once the queue is empty."""
+    pool = WritebackPool(1, max_inflight_bytes=1024)
+    pool.submit(lambda: None, nbytes=512)
+    t = pool.submit(lambda: None, nbytes=4096)  # > high mark
+    assert t.wait(10.0)
+    pool.shutdown()
+    assert pool.stats()["completed"] == 2
