@@ -11,10 +11,16 @@ The compute phase is calibrated to ~1.25x one flush time -- the regime the
 paper targets, where storage I/O can hide entirely behind compute.
 Effective throughput = persisted bytes / wall time; the nonblocking
 pipeline should approach 2x the blocking one (reported as the ratio row).
+
+The pipeline also runs cross-process (``--transport mp`` or
+``REPRO_TRANSPORT=mp``): the window's rank is then a real worker process
+servicing puts/flushes over its control channel, so the async-vs-blocking
+ratio is measured with genuine process-boundary traffic on both paths.
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
@@ -27,8 +33,8 @@ CHUNK = 1 << 20     # rput granularity: 8 staged requests per iteration
 ITERS = 8
 
 
-def _mk_win(d: str, name: str) -> Window:
-    return Window.allocate(Communicator(1), SIZE, info={
+def _mk_win(d: str, name: str, comm: Communicator) -> Window:
+    return Window.allocate(comm, SIZE, info={
         "alloc_type": "storage",
         "storage_alloc_filename": f"{d}/{name}.bin"})
 
@@ -58,12 +64,23 @@ def _compute(seconds: float, a: np.ndarray) -> np.ndarray:
     return a
 
 
-def run(bench: Bench) -> None:
+def run(bench: Bench, transport: str | None = None) -> float:
+    """Runs both pipelines; returns the async/blocking speedup ratio."""
+    # the pipeline only ever targets rank 0: pin the world to one rank so a
+    # lane-wide REPRO_NRANKS doesn't spawn idle workers/segments
+    comm = Communicator.from_env(1, transport=transport, nranks=1)
+    try:
+        return _run_pipelines(bench, comm)
+    finally:
+        comm.close()  # never leak mp workers, even on a failed pipeline
+
+
+def _run_pipelines(bench: Bench, comm: Communicator) -> float:
     with workdir("asyncwin") as d:
         a = np.random.default_rng(0).standard_normal((768, 768)).astype(np.float32)
 
         # calibrate: one full put+sync gives the flush time to hide
-        cal = _mk_win(d, "cal")
+        cal = _mk_win(d, "cal", comm)
         _stage(cal, 0, nonblocking=False)
         with timer() as t:
             cal.sync(0)
@@ -75,7 +92,7 @@ def run(bench: Bench) -> None:
         cal.free()
 
         # blocking pipeline: compute -> put -> sync, fully serialized
-        win_b = _mk_win(d, "blocking")
+        win_b = _mk_win(d, "blocking", comm)
         with timer() as tb:
             for i in range(ITERS):
                 a = _compute(t_compute, a)
@@ -86,7 +103,7 @@ def run(bench: Bench) -> None:
         # nonblocking pipeline: rput + flush_async overlap the next compute.
         # One checkpoint in flight at a time (wait before re-staging), like
         # the checkpoint manager's A/B discipline.
-        win_a = _mk_win(d, "async")
+        win_a = _mk_win(d, "async", comm)
         with timer() as ta:
             req = None
             for i in range(ITERS):
@@ -101,8 +118,26 @@ def run(bench: Bench) -> None:
         total_mb = SIZE * ITERS / 1e6
         mbps_b = total_mb / tb["s"]
         mbps_a = total_mb / ta["s"]
-        bench.add("blocking_put_sync", tb["s"], calls=ITERS,
+        label = f"[{comm.transport.kind}]"
+        bench.add(f"blocking_put_sync{label}", tb["s"], calls=ITERS,
                   derived=f"{mbps_b:.0f}MB/s")
-        bench.add("nonblocking_rput_flush_async", ta["s"], calls=ITERS,
+        bench.add(f"nonblocking_rput_flush_async{label}", ta["s"], calls=ITERS,
                   derived=f"{mbps_a:.0f}MB/s")
-        bench.add("speedup", 0.0, derived=f"{mbps_a / mbps_b:.2f}x")
+        bench.add(f"speedup{label}", 0.0, derived=f"{mbps_a / mbps_b:.2f}x")
+    return mbps_a / mbps_b
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--transport", choices=("inproc", "mp"), default=None,
+                    help="window transport (default: $REPRO_TRANSPORT or inproc)")
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="fail (exit 1) if async/blocking falls below this "
+                         "ratio (the overlap gate; 0 = report only)")
+    args = ap.parse_args()
+    b = Bench("async_win")
+    speedup = run(b, transport=args.transport)
+    b.emit()
+    if args.min_speedup and speedup < args.min_speedup:
+        raise SystemExit(
+            f"async_win gate: speedup {speedup:.2f}x < {args.min_speedup}x")

@@ -2,9 +2,14 @@
 
 A crash mid-job loses nothing: the reduce state and per-rank progress live
 in storage windows synced after every Map task; the restarted job resumes
-from the first unfinished task.
+from the first unfinished task.  The storage-window file layout is
+transport-invariant, so the same run works (and recovers) with the ranks
+as real worker processes: ``REPRO_TRANSPORT=mp REPRO_NRANKS=4``.  (The
+``__main__`` guard is what makes that safe: spawned workers re-import this
+file.)
 
 Run:  PYTHONPATH=src python examples/mapreduce_wordcount.py
+      REPRO_TRANSPORT=mp REPRO_NRANKS=4 PYTHONPATH=src python examples/mapreduce_wordcount.py
 """
 
 import tempfile
@@ -14,34 +19,43 @@ import numpy as np
 from repro.core import Communicator, MapReduce1S
 from repro.core.mapreduce import stable_word_key, wordcount_map
 
-tmp = tempfile.mkdtemp(prefix="repro_mr_")
-WORDS = "the quick brown fox jumps over lazy dog lorem ipsum".split()
-rng = np.random.default_rng(0)
-tasks = [" ".join(rng.choice(WORDS, 500)) for _ in range(16)]
 
-info = {"alloc_type": "storage", "storage_alloc_filename": f"{tmp}/mr.bin"}
+def main() -> None:
+    tmp = tempfile.mkdtemp(prefix="repro_mr_")
+    words = "the quick brown fox jumps over lazy dog lorem ipsum".split()
+    rng = np.random.default_rng(0)
+    tasks = [" ".join(rng.choice(words, 500)) for _ in range(16)]
 
-# -- phase 1: run a few tasks, then "crash" ----------------------------------
-mr = MapReduce1S(Communicator(4), 1 << 10, info=info)
-my0 = mr._tasks_of(0, len(tasks))
-for pos in range(2):  # rank 0 finishes only 2 tasks
-    for k, v in wordcount_map(tasks[my0[pos]]).items():
-        mr.table.insert(k, v, op="sum")
-    mr._commit_task(0, pos)
-print(f"crash after {mr.completed_tasks()} committed tasks "
-      f"({mr.ckpt_bytes >> 10} KiB checkpointed so far)")
+    info = {"alloc_type": "storage", "storage_alloc_filename": f"{tmp}/mr.bin"}
 
-# -- phase 2: resume -- the progress window knows where everyone stopped -----
-mr.run(tasks)
-result = mr.result()
+    # -- phase 1: run a few tasks, then "crash" -------------------------------
+    comm = Communicator.from_env(4)
+    print(f"transport={comm.transport.kind} ranks={comm.size}")
+    mr = MapReduce1S(comm, 1 << 10, info=info)
+    my0 = mr._tasks_of(0, len(tasks))
+    for pos in range(2):  # rank 0 finishes only 2 tasks
+        for k, v in wordcount_map(tasks[my0[pos]]).items():
+            mr.table.insert(k, v, op="sum")
+        mr._commit_task(0, pos)
+    print(f"crash after {mr.completed_tasks()} committed tasks "
+          f"({mr.ckpt_bytes >> 10} KiB checkpointed so far)")
 
-expect = {}
-for t in tasks:
-    for k, v in wordcount_map(t).items():
-        expect[k] = expect.get(k, 0) + v
-assert result == expect, "resumed result must equal a clean run"
-print(f"wordcount ok: 'the' -> {result[stable_word_key('the')]}")
-print(f"transparent checkpoints: {mr.ckpt_count} syncs, "
-      f"{mr.ckpt_bytes >> 10} KiB total (selective)")
-mr.free()
-print("done")
+    # -- phase 2: resume -- the progress window knows where everyone stopped --
+    mr.run(tasks)
+    result = mr.result()
+
+    expect = {}
+    for t in tasks:
+        for k, v in wordcount_map(t).items():
+            expect[k] = expect.get(k, 0) + v
+    assert result == expect, "resumed result must equal a clean run"
+    print(f"wordcount ok: 'the' -> {result[stable_word_key('the')]}")
+    print(f"transparent checkpoints: {mr.ckpt_count} syncs, "
+          f"{mr.ckpt_bytes >> 10} KiB total (selective)")
+    mr.free()
+    comm.close()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

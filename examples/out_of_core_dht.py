@@ -2,8 +2,14 @@
 
 The combined window's ``factor='auto'`` pins what fits and spills the rest
 behind the user-level page cache -- the application code never changes.
+Neither does it change with the transport: under ``REPRO_TRANSPORT=mp``
+the four ranks are real worker processes (segments owned by them, RMA
+serviced by their progress threads) and the numbers must come out the same.
+(The ``__main__`` guard is what makes that safe: spawned workers re-import
+this file.)
 
 Run:  PYTHONPATH=src python examples/out_of_core_dht.py
+      REPRO_TRANSPORT=mp REPRO_NRANKS=4 PYTHONPATH=src python examples/out_of_core_dht.py
 """
 
 import tempfile
@@ -13,37 +19,45 @@ import numpy as np
 
 from repro.core import Communicator, DistributedHashTable
 
-tmp = tempfile.mkdtemp(prefix="repro_ooc_")
-comm = Communicator(4)
-
 LV = 1 << 14          # 16k slots/rank -> ~7.9 MiB/rank with the heap
 BUDGET = 1 << 20      # pretend each rank only has 1 MiB of memory
 
-dht = DistributedHashTable(comm, LV, heap_factor=4, info={
-    "alloc_type": "storage",
-    "storage_alloc_filename": f"{tmp}/dht.bin",
-    "storage_alloc_factor": "auto",          # spill beyond the budget
-}, memory_budget=BUDGET)
 
-seg = dht.win.segments[0]
-print(f"per-rank segment: {seg.size >> 10} KiB "
-      f"({seg.mem_bytes >> 10} KiB pinned, {seg.sto_bytes >> 10} KiB spilled)")
+def main() -> None:
+    tmp = tempfile.mkdtemp(prefix="repro_ooc_")
+    comm = Communicator.from_env(4)
+    print(f"transport={comm.transport.kind} ranks={comm.size}")
 
-rng = np.random.default_rng(0)
-n = int(LV * 4 * 0.8 * 0.25)
-t0 = time.perf_counter()
-for k in rng.integers(1, 1 << 48, n):
-    dht.insert(int(k), 1, op="sum")
-dt = time.perf_counter() - t0
-print(f"inserted {n} keys at {n / dt:.0f}/s (out-of-core)")
+    dht = DistributedHashTable(comm, LV, heap_factor=4, info={
+        "alloc_type": "storage",
+        "storage_alloc_filename": f"{tmp}/dht.bin",
+        "storage_alloc_factor": "auto",          # spill beyond the budget
+    }, memory_budget=BUDGET)
 
-t0 = time.perf_counter()
-flushed = dht.sync()
-print(f"checkpoint: {flushed >> 20} MiB flushed in "
-      f"{time.perf_counter() - t0:.2f}s")
+    seg = dht.win.segments[0]
+    print(f"per-rank segment: {seg.size >> 10} KiB "
+          f"({seg.mem_bytes >> 10} KiB pinned, {seg.sto_bytes >> 10} KiB spilled)")
 
-hits = sum(dht.lookup(int(k)) is not None
-           for k in rng.integers(1, 1 << 48, 100))
-print(f"probe: {hits}/100 random keys found (expected ~0 misses on inserted)")
-dht.free()
-print("done")
+    rng = np.random.default_rng(0)
+    n = int(LV * 4 * 0.8 * 0.25)
+    t0 = time.perf_counter()
+    for k in rng.integers(1, 1 << 48, n):
+        dht.insert(int(k), 1, op="sum")
+    dt = time.perf_counter() - t0
+    print(f"inserted {n} keys at {n / dt:.0f}/s (out-of-core)")
+
+    t0 = time.perf_counter()
+    flushed = dht.sync()
+    print(f"checkpoint: {flushed >> 20} MiB flushed in "
+          f"{time.perf_counter() - t0:.2f}s")
+
+    hits = sum(dht.lookup(int(k)) is not None
+               for k in rng.integers(1, 1 << 48, 100))
+    print(f"probe: {hits}/100 random keys found (expected ~0 misses on inserted)")
+    dht.free()
+    comm.close()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

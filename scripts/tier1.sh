@@ -8,8 +8,14 @@
 # tests/conftest.py, so CI runs are reproducible; override with
 # HYPOTHESIS_PROFILE=dev for randomized exploration.
 #
+# After the suite, a multiprocess smoke lane re-runs the DHT and MapReduce
+# examples with ranks as real worker processes (REPRO_TRANSPORT=mp): spawn
+# start method (safe under threaded parents), bounded by a timeout, and
+# skipped gracefully where multiprocessing.shared_memory is unavailable.
+#
 # Usage: scripts/tier1.sh [extra pytest args...]
 #   TIER1_QUICK=1 scripts/tier1.sh    # exclude @pytest.mark.slow stress tests
+#   TIER1_NO_MP=1 scripts/tier1.sh    # skip the multiprocess smoke lane
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -31,3 +37,21 @@ fi
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q ${MARKER_ARGS+"${MARKER_ARGS[@]}"} "$@"
+
+# -- multiprocess smoke lane --------------------------------------------------
+if [[ "${TIER1_NO_MP:-0}" == "1" ]]; then
+    echo "tier1: TIER1_NO_MP=1 -- skipping multiprocess smoke lane" >&2
+elif ! python -c "import multiprocessing.shared_memory" >/dev/null 2>&1; then
+    echo "tier1: multiprocessing.shared_memory unavailable --" \
+         "skipping multiprocess smoke lane" >&2
+else
+    echo "tier1: multiprocess smoke lane (REPRO_TRANSPORT=mp, 4 ranks)" >&2
+    MP_ENV=(env REPRO_TRANSPORT=mp REPRO_NRANKS=4 REPRO_MP_START=spawn
+            PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}")
+    timeout 300 "${MP_ENV[@]}" python examples/mapreduce_wordcount.py
+    timeout 300 "${MP_ENV[@]}" python examples/out_of_core_dht.py
+    # the async-vs-blocking overlap gate, cross-process (enforced: exit 1
+    # below the ratio)
+    timeout 300 "${MP_ENV[@]}" python -m benchmarks.async_win \
+        --transport mp --min-speedup 1.5
+fi

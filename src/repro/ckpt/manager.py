@@ -68,13 +68,15 @@ class CheckpointManager:
 
     def __init__(self, directory: str, comm: Communicator,
                  specs: Mapping[str, tuple[tuple[int, ...], Any]], *,
-                 rank: int = 0, double_buffer: bool = True,
+                 rank: int | None = None, double_buffer: bool = True,
                  mechanism: str = "cached", writeback_interval: float | None = None,
                  striping_factor: int = 1, striping_unit: int = 1 << 20,
                  page_size_hint: int | None = None, snapshot_diff: bool = True):
         self.directory = directory
         self.comm = comm
-        self.rank = rank
+        # SPMD wiring: by default each process checkpoints its own rank's
+        # segment (the communicator's env-bootstrapped identity)
+        self.rank = comm.rank if rank is None else rank
         self.specs = {k: (tuple(v[0]), np.dtype(v[1])) for k, v in specs.items()}
         os.makedirs(directory, exist_ok=True)
         self.names = ["a", "b"] if double_buffer else ["a"]
@@ -93,7 +95,7 @@ class CheckpointManager:
                 "striping_unit": str(striping_unit),
             }
             self.windows[name] = WindowedPyTree.allocate(
-                comm, self.specs, info, rank=rank, mechanism=mechanism,
+                comm, self.specs, info, rank=self.rank, mechanism=mechanism,
                 writeback_interval=writeback_interval)
             if not snapshot_diff:
                 # selective sync even under whole-tree puts:
@@ -138,7 +140,11 @@ class CheckpointManager:
     def _page_size(self, wt: WindowedPyTree) -> int:
         seg = wt.win.segments[self.rank]
         tracker = getattr(seg, "tracker", None)
-        return tracker.page_size if tracker is not None else WindowedPyTree.PAGE
+        if tracker is not None:
+            return tracker.page_size
+        # remote segments (mp transport) carry the owner's page size as an
+        # attribute; last resort is the layout's page constant
+        return getattr(seg, "page_size", None) or WindowedPyTree.PAGE
 
     @staticmethod
     def _page_diff(new: np.ndarray, old: np.ndarray, ps: int) -> np.ndarray:

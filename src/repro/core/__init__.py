@@ -1,7 +1,11 @@
 """repro.core — the paper's contribution: MPI-style windows on storage.
 
 Public API:
-    Communicator                      rank bookkeeping + collective stubs
+    Communicator                      rank bookkeeping + collectives over a
+                                      pluggable transport
+    Transport / InprocTransport /     the transport layer: in-process ranks
+    TransportError / make_transport   (default) or real worker processes
+                                      (``REPRO_TRANSPORT=mp``)
     Window / alloc_mem                MPI_Win_* analogues (allocate, put/get,
                                       accumulate, CAS, lock/unlock, sync, free)
     Request / WritebackPool           nonblocking layer: rput/rget/raccumulate
@@ -15,6 +19,8 @@ Public API:
 """
 
 from .comm import Communicator
+from .transport import (InprocTransport, Transport, TransportError,
+                        make_transport)
 from .hints import HintError, Info, WindowHints
 from .storage import (
     DEFAULT_PAGE_SIZE,
@@ -34,6 +40,10 @@ from .mapreduce import MapReduce1S, wordcount_map, wordcount_reduce
 
 __all__ = [
     "Communicator",
+    "Transport",
+    "TransportError",
+    "InprocTransport",
+    "make_transport",
     "HintError",
     "Info",
     "WindowHints",

@@ -7,7 +7,10 @@ update is a one-sided operation -- ``get``/``put``/``compare_and_swap``/
 ``fetch_and_op`` -- against the owner's window.  Because the storage vs
 memory decision is entirely in the window hints, the exact same data
 structure runs in memory, on storage, or on a combined allocation
-(out-of-core, §3.4) without touching this file.
+(out-of-core, §3.4) without touching this file.  The same is true of the
+*transport*: under ``REPRO_TRANSPORT=mp`` the owners are real worker
+processes and every CAS/accumulate executes atomically in the owner's
+progress thread -- still without touching this file.
 
 Entry layout (3 int64 words): [key, value, next]
     key   == EMPTY sentinel -> slot unused (CAS target for claiming)
@@ -44,7 +47,12 @@ class DistributedHashTable:
 
     def __init__(self, comm: Communicator, lv_entries: int, *,
                  heap_factor: int = 4, info=None, memory_budget: int | None = None,
-                 mechanism: str = "cached", writeback_interval: float | None = None):
+                 mechanism: str = "cached", writeback_interval: float | None = None,
+                 resume: bool = False):
+        """``resume=True`` maps the windows over their existing storage
+        files *without* re-initializing the slots -- restart/recovery: the
+        table is whatever the last ``sync`` persisted.  Only meaningful for
+        storage windows whose files already exist."""
         if lv_entries < 1:
             raise ValueError("lv_entries must be >= 1")
         self.comm = comm
@@ -58,7 +66,8 @@ class DistributedHashTable:
                                    memory_budget=memory_budget,
                                    mechanism=mechanism,
                                    writeback_interval=writeback_interval)
-        self._init_segments()
+        if not resume:
+            self._init_segments()
         self.insert_conflicts = 0
 
     def _init_segments(self) -> None:

@@ -25,6 +25,14 @@ task's commutative ``sum`` updates, which a replay then double-counts --
 the synchronous scheme had the same window, confined to the sync call
 itself.  Pass ``checkpoint=False`` (or wait each commit) where exactly-once
 replay matters more than overlap.
+
+Transports: the reduce state and progress windows ride whatever transport
+the communicator carries.  Under ``mp`` the reducers are real worker
+processes, and because the storage-window file layout is
+transport-invariant, a job that dies mid-run (even by SIGKILL of a worker,
+taking its page cache with it) restarts from the synced checkpoints with a
+fresh communicator over the same files -- the paper's fault-tolerance
+claim across real process boundaries.
 """
 
 from __future__ import annotations
@@ -81,12 +89,17 @@ class MapReduce1S:
 
     def __init__(self, comm: Communicator, lv_entries: int = 1 << 12, *,
                  info=None, checkpoint: bool = True, heap_factor: int = 4,
-                 mechanism: str = "cached"):
+                 mechanism: str = "cached", resume: bool = False):
+        """``resume=True`` re-opens a checkpointed job after a crash/restart:
+        the reduce table and progress windows map their existing storage
+        files as-is (no re-initialization), so ``run()`` picks up at each
+        rank's first unfinished task."""
         self.comm = comm
         self.checkpoint = checkpoint
+        self.resume = resume
         self.table = DistributedHashTable(comm, lv_entries, info=info,
                                           heap_factor=heap_factor,
-                                          mechanism=mechanism)
+                                          mechanism=mechanism, resume=resume)
         # progress window: one int64 per rank = index of next unfinished task
         prog_info = None
         if info is not None and info.get("alloc_type") == "storage":
@@ -95,8 +108,9 @@ class MapReduce1S:
                 info["storage_alloc_filename"] + ".progress")
         self.progress = Window.allocate(comm, 8, info=prog_info,
                                         mechanism=mechanism)
-        for r in range(comm.size):
-            self.progress.put(np.zeros(1, np.int64).view(np.uint8), r, 0)
+        if not resume:
+            for r in range(comm.size):
+                self.progress.put(np.zeros(1, np.int64).view(np.uint8), r, 0)
         self.ckpt_count = 0
         self.ckpt_bytes = 0
         self._ckpt_reqs: list = []  # in-flight checkpoint of the last commit

@@ -686,14 +686,15 @@ class _Ticket:
     ``Request`` objects.  ``result``/``exception`` are valid once ``done()``.
     """
 
-    __slots__ = ("_event", "_fn", "key", "nbytes", "result", "exception",
-                 "_next")
+    __slots__ = ("_event", "_fn", "key", "nbytes", "sample", "result",
+                 "exception", "_next")
 
-    def __init__(self, fn, key, nbytes: int = 0):
+    def __init__(self, fn, key, nbytes: int = 0, sample: bool = False):
         self._event = threading.Event()
         self._fn = fn
         self.key = key
         self.nbytes = int(nbytes)  # in-flight byte charge (backpressure)
+        self.sample = sample  # count toward the flush-throughput EWMA
         self.result = None
         self.exception: BaseException | None = None
         self._next: "_Ticket | None" = None  # same-key successor (FIFO chain)
@@ -735,14 +736,35 @@ class WritebackPool:
     oversized flush cannot deadlock.  Stats (``stats()``): submitted/
     completed task and byte counters, ``stalls``/``stall_seconds``, and the
     ``max_inflight_bytes`` high-water mark actually observed.
+
+    Adaptive watermarks: the pool always tracks an EWMA of the *observed
+    flush throughput* (bytes/second over tasks submitted with
+    ``sample=True`` -- the disk-bound flushes, not the memcpy-fast rputs).
+    When ``max_inflight_bytes`` is **not** given but ``target_latency`` is,
+    the high watermark is sized from that measurement instead of a static
+    hint: ``high = ~2 x (ewma_throughput x target_latency)`` (2x headroom so
+    steady-state production at disk speed never stalls; floored at 1 MiB),
+    with ``low = high // 2`` hysteresis, re-derived as each sampled flush
+    completes.  The queue is unbounded until the first measurement.  The
+    chosen value is exposed by ``stats()['high_watermark']``.
     """
+
+    #: EWMA smoothing for the flush-throughput estimate (per completed task)
+    EWMA_ALPHA = 0.3
+    #: adaptive high watermark = HEADROOM * throughput * target_latency
+    ADAPTIVE_HEADROOM = 2.0
+    #: never adapt the high watermark below this
+    ADAPTIVE_FLOOR = 1 << 20
 
     def __init__(self, workers: int = 2, name: str = "repro-async-wb", *,
                  max_inflight_bytes: int | None = None,
-                 low_watermark: int | None = None):
+                 low_watermark: int | None = None,
+                 target_latency: float | None = None):
         self.workers = max(1, int(workers))
         if max_inflight_bytes is not None and max_inflight_bytes <= 0:
             raise ValueError("max_inflight_bytes must be > 0 (or None)")
+        if target_latency is not None and target_latency <= 0:
+            raise ValueError("target_latency must be > 0 (or None)")
         self.max_inflight_bytes = max_inflight_bytes
         if low_watermark is None:
             low_watermark = (max_inflight_bytes // 2
@@ -751,6 +773,15 @@ class WritebackPool:
                 0 <= low_watermark <= max_inflight_bytes):
             raise ValueError("low_watermark must be in [0, max_inflight_bytes]")
         self.low_watermark = low_watermark
+        self.target_latency = target_latency
+        # an explicit static bound wins; adaptive sizing needs a latency goal
+        self._adaptive = (max_inflight_bytes is None
+                          and target_latency is not None)
+        self._ewma_bps: float | None = None
+        # sampled tasks currently executing: a task sharing the disk with k
+        # others observes ~1/k of the aggregate bandwidth, so its per-task
+        # rate is scaled back up by the concurrency seen at its start
+        self._running_samples = 0
         self._inflight_bytes = 0
         self._counters = {
             "submitted": 0, "completed": 0,
@@ -770,8 +801,40 @@ class WritebackPool:
             t.start()
             self._threads.append(t)
 
+    def begin_flush_sample(self) -> int:
+        """Mark the start of an externally timed flush I/O region; returns
+        the sampled-flush concurrency to pass to :meth:`end_flush_sample`.
+
+        The window layer uses this pair instead of ``submit(sample=True)``
+        so the timed region covers only the storage I/O -- an exclusive
+        flush's wait for the target's window lock must not deflate the
+        throughput estimate.
+        """
+        with self._cond:
+            self._running_samples += 1
+            return self._running_samples
+
+    def end_flush_sample(self, nbytes: int, seconds: float,
+                         concurrency: int) -> None:
+        """Close a :meth:`begin_flush_sample` region and feed the EWMA
+        (``nbytes <= 0`` -- nothing flushed, or the flush failed -- only
+        decrements the concurrency)."""
+        with self._cond:
+            self._running_samples -= 1
+            if nbytes > 0:
+                self._observe_throughput(
+                    max(1, concurrency) * nbytes / max(seconds, 1e-6))
+
+    @property
+    def bounded(self) -> bool:
+        """True when in-flight byte charges matter: a static high watermark
+        is set, or adaptive sizing will derive one.  Callers whose charge
+        is expensive to estimate (a cross-process dirty_bytes query) can
+        skip it entirely for an unbounded pool."""
+        return self.max_inflight_bytes is not None or self._adaptive
+
     def submit(self, fn, key=None, nbytes: int = 0,
-               force: bool = False) -> _Ticket:
+               force: bool = False, sample: bool = False) -> _Ticket:
         """Queue ``fn`` for background execution; returns its ticket.
 
         ``nbytes`` is the task's in-flight byte charge (an rput's payload, a
@@ -784,8 +847,12 @@ class WritebackPool:
         its own window-lock epoch, where draining may require tasks blocked
         on (or queued behind a writer blocked on) that very lock (stalling
         would deadlock).
+
+        ``sample`` marks the task as a storage flush whose observed
+        bytes/second should feed the adaptive-watermark EWMA (rputs are
+        page-cache memcpys and would inflate the estimate).
         """
-        t = _Ticket(fn, key, nbytes)
+        t = _Ticket(fn, key, nbytes, sample=sample)
         with self._cond:
             if self._shutdown:
                 raise RuntimeError("writeback pool is shut down")
@@ -796,11 +863,15 @@ class WritebackPool:
                     > self.max_inflight_bytes):
                 # Past the high mark: stall until drained to the low mark
                 # (or far enough for an oversized task to fit alone).
-                target = max(0, min(self.max_inflight_bytes - t.nbytes,
-                                    self.low_watermark))
                 self._counters["stalls"] += 1
                 t0 = time.monotonic()
-                while self._inflight_bytes > target:
+                while True:
+                    # re-derive each wake-up: adaptive completions may move
+                    # the watermarks while we wait
+                    target = max(0, min(self.max_inflight_bytes - t.nbytes,
+                                        self.low_watermark))
+                    if self._inflight_bytes <= target:
+                        break
                     self._cond.wait()
                     if self._shutdown:
                         raise RuntimeError("writeback pool is shut down")
@@ -829,16 +900,27 @@ class WritebackPool:
                 if not self._runq and self._shutdown:
                     return
                 t = self._runq.popleft()
+                is_sample = t.sample and t.nbytes > 0
+                if is_sample:
+                    self._running_samples += 1
+                concurrency = self._running_samples
+            t0 = time.monotonic()
             try:
                 t.result = t._fn()
             except BaseException as e:  # surfaced at Request.wait()
                 t.exception = e
+            dt = time.monotonic() - t0
             with self._cond:
                 t._event.set()
                 self._pending -= 1
                 self._inflight_bytes -= t.nbytes
                 self._counters["completed"] += 1
                 self._counters["completed_bytes"] += t.nbytes
+                if is_sample:
+                    self._running_samples -= 1
+                    if t.exception is None:
+                        self._observe_throughput(
+                            max(1, concurrency) * t.nbytes / max(dt, 1e-6))
                 if t.key is not None:
                     if t._next is not None:
                         self._runq.append(t._next)
@@ -846,12 +928,40 @@ class WritebackPool:
                         del self._tails[t.key]
                 self._cond.notify_all()
 
+    def _observe_throughput(self, bps: float) -> None:
+        """EWMA-update the flush-throughput estimate (under ``_cond``) and,
+        in adaptive mode, re-derive the watermarks from it.  ``bps`` is the
+        task's observed rate scaled by the sampled-task concurrency at its
+        start -- an estimate of the *aggregate* disk bandwidth, so the 2x
+        headroom survives multi-worker pools."""
+        a = self.EWMA_ALPHA
+        self._ewma_bps = bps if self._ewma_bps is None else \
+            a * bps + (1 - a) * self._ewma_bps
+        if self._adaptive:
+            high = max(self.ADAPTIVE_FLOOR,
+                       int(self.ADAPTIVE_HEADROOM * self._ewma_bps
+                           * self.target_latency))
+            self.max_inflight_bytes = high
+            self.low_watermark = high // 2
+            self._cond.notify_all()  # stalled submitters re-check the marks
+
     def stats(self) -> dict:
-        """Snapshot of the backpressure/throughput counters."""
+        """Snapshot of the backpressure/throughput counters.
+
+        ``high_watermark``/``low_watermark`` are the currently *chosen*
+        bounds (static hint, adaptively derived, or None = unbounded);
+        ``ewma_bytes_per_s`` is the observed flush throughput behind the
+        adaptive choice.
+        """
         with self._cond:
             out = dict(self._counters)
             out["inflight_bytes"] = self._inflight_bytes
             out["pending"] = self._pending
+            out["high_watermark"] = self.max_inflight_bytes
+            out["low_watermark"] = self.low_watermark
+            out["ewma_bytes_per_s"] = self._ewma_bps
+            out["adaptive"] = self._adaptive
+            out["target_latency"] = self.target_latency
             return out
 
     def drain(self) -> None:

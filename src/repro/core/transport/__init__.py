@@ -1,0 +1,65 @@
+"""Pluggable transports for MPI-style windows.
+
+``Window``/``Communicator`` never talk to segments or processes directly --
+they go through a :class:`Transport`:
+
+===========  ==================================================================
+``inproc``   every rank in this process (single-controller; the default).
+             Zero behavior change vs. the pre-transport code.
+``mp``       one spawned worker process per rank.  Memory windows ride
+             ``multiprocessing.shared_memory``; storage windows reuse the
+             file backings (already cross-process); atomics and storage
+             access are serviced by the owner's progress thread over a
+             socketpair control channel (passive-target progress).
+===========  ==================================================================
+
+Selection: explicit ``Communicator(n, transport=...)`` beats the
+``REPRO_TRANSPORT`` env var, which beats the ``inproc`` default.  Rank
+bootstrap for SPMD launches reads ``REPRO_NRANKS`` / ``REPRO_RANK``.
+"""
+
+from __future__ import annotations
+
+import os
+
+from .base import Transport, TransportError
+from .local import InprocTransport
+
+__all__ = ["Transport", "TransportError", "InprocTransport",
+           "MultiprocessTransport", "make_transport", "env_transport_kind",
+           "env_nranks", "env_rank"]
+
+
+def __getattr__(name):
+    # lazy: importing the mp backend pulls in multiprocessing machinery the
+    # common in-process path never needs
+    if name == "MultiprocessTransport":
+        from .multiproc import MultiprocessTransport
+        return MultiprocessTransport
+    raise AttributeError(name)
+
+
+def env_transport_kind(default: str = "inproc") -> str:
+    return os.environ.get("REPRO_TRANSPORT", "").strip().lower() or default
+
+
+def env_nranks(default: int | None = None) -> int | None:
+    v = os.environ.get("REPRO_NRANKS", "").strip()
+    return int(v) if v else default
+
+
+def env_rank(default: int = 0) -> int:
+    v = os.environ.get("REPRO_RANK", "").strip()
+    return int(v) if v else default
+
+
+def make_transport(size: int, rank: int = 0,
+                   kind: str | None = None) -> Transport:
+    """Build a transport: ``kind`` or ``$REPRO_TRANSPORT`` or ``inproc``."""
+    kind = (kind or env_transport_kind()).strip().lower()
+    if kind == "inproc":
+        return InprocTransport(size, rank)
+    if kind == "mp":
+        from .multiproc import MultiprocessTransport
+        return MultiprocessTransport(size, rank)
+    raise ValueError(f"unknown transport {kind!r} (expected 'inproc' or 'mp')")

@@ -1,0 +1,200 @@
+"""Abstract transport layer for MPI-style windows.
+
+The paper's premise is *one interface over memory and storage across ranks*;
+which fabric actually moves the bytes is an implementation decision.  This
+module defines that boundary: a :class:`Transport` owns
+
+* **segment allocation** -- given a window's size/hints, produce one segment
+  handle per rank.  A segment handle exposes the uniform access interface
+  (``read``/``write``/``sync``/``dirty_bytes``/``close``) regardless of
+  whether the bytes live in this process, in another process's shared-memory
+  mapping, or behind a control channel serviced by the owner's progress
+  thread.
+* **target-side atomics** -- ``accumulate``/``get_accumulate``/
+  ``compare_and_swap`` execute *at the target rank* so they are atomic with
+  respect to every origin, not just threads of one process.
+* **collectives** -- ``barrier``, ``allreduce``, ``bcast``, ``split``.
+
+:class:`~repro.core.window.Window` programs exclusively against this
+interface; swapping ``InprocTransport`` for ``MultiprocessTransport`` (or a
+future DCN/NCCL backend, see ROADMAP) changes no window, DHT, MapReduce or
+checkpoint code.
+"""
+
+from __future__ import annotations
+
+import abc
+
+import numpy as np
+
+__all__ = ["Transport", "TransportError", "ACC_OPS", "apply_accumulate",
+           "apply_get_accumulate", "apply_compare_and_swap", "reduce_values"]
+
+
+class TransportError(RuntimeError):
+    """A transport-level failure (e.g. an unreachable/crashed rank worker)."""
+
+
+#: MPI_Accumulate reduction ops shared by every backend (and by the
+#: multiprocess worker's progress loop, which applies them target-side).
+ACC_OPS = {
+    "sum": np.add, "prod": np.multiply, "min": np.minimum,
+    "max": np.maximum, "band": np.bitwise_and, "bor": np.bitwise_or,
+    "replace": None, "no_op": None,
+}
+
+_REDUCE_OPS = {"sum": "sum", "max": "max", "min": "min"}
+
+
+def apply_accumulate(seg, offset: int, data: np.ndarray, op: str) -> None:
+    """Read-modify-write ``op`` against a segment (caller provides atomicity:
+    either the window's target lock or the owner's progress thread)."""
+    if op not in ACC_OPS:
+        raise ValueError(f"unknown accumulate op {op!r}")
+    if op == "no_op":
+        return
+    data = np.ascontiguousarray(data)
+    if op == "replace":
+        seg.write(offset, data.view(np.uint8).ravel())
+        return
+    cur = seg.read(offset, data.nbytes).view(data.dtype).reshape(data.shape)
+    out = ACC_OPS[op](cur, data).astype(data.dtype)
+    seg.write(offset, out.view(np.uint8).ravel())
+
+
+def apply_get_accumulate(seg, offset: int, data: np.ndarray,
+                         op: str) -> np.ndarray:
+    """Fetch the old value, then accumulate; returns the old value."""
+    if op not in ACC_OPS:
+        raise ValueError(f"unknown accumulate op {op!r}")
+    data = np.ascontiguousarray(data)
+    old = seg.read(offset, data.nbytes).view(data.dtype).reshape(data.shape)
+    if op == "no_op":
+        return old
+    new = data if op == "replace" else ACC_OPS[op](old, data).astype(data.dtype)
+    seg.write(offset, np.ascontiguousarray(new).view(np.uint8).ravel())
+    return old
+
+
+def apply_compare_and_swap(seg, offset: int, value, compare, dtype):
+    """Atomic CAS against a segment; returns the old value (scalar)."""
+    dt = np.dtype(dtype)
+    old = seg.read(offset, dt.itemsize).view(dt)[0]
+    if old == np.asarray(compare, dtype=dt):
+        seg.write(offset, np.asarray([value], dtype=dt).view(np.uint8).ravel())
+    return old
+
+
+def reduce_values(contribs, op: str):
+    """Reduce a list of per-rank contributions (numpy semantics)."""
+    if op not in _REDUCE_OPS:
+        raise ValueError(f"unknown allreduce op {op!r}")
+    arr = np.asarray(contribs)
+    if op == "sum":
+        return arr.sum(axis=0)
+    if op == "max":
+        return arr.max(axis=0)
+    return arr.min(axis=0)
+
+
+class Transport(abc.ABC):
+    """One-sided transport over the ranks of a communicator.
+
+    ``size`` is the number of ranks; ``rank`` is the local identity (the
+    single-controller driver uses 0 and may address every rank).  Segment
+    handles returned by :meth:`allocate_segments` are the only way window
+    code touches remote bytes.
+    """
+
+    #: short identifier used by the factory / env bootstrap ("inproc", "mp")
+    kind: str = "abstract"
+
+    def __init__(self, size: int, rank: int = 0):
+        if size < 1:
+            raise ValueError("transport size must be >= 1")
+        self.size = size
+        self.rank = rank
+
+    # -- segment lifecycle -------------------------------------------------
+    @abc.abstractmethod
+    def allocate_segments(self, size: int, hints, spec: dict) -> list:
+        """Collectively allocate one ``size``-byte segment per rank.
+
+        ``hints`` is a :class:`~repro.core.hints.WindowHints`; ``spec`` the
+        backing kwargs (``shared_file``, ``memory_budget``, ``mechanism``,
+        ``page_size``, ``cache_bytes``, ``writeback_interval``,
+        ``compare_on_write``).  Returns segment handles indexed by rank.
+        """
+
+    # -- one-sided data movement ------------------------------------------
+    def put(self, seg, offset: int, data: np.ndarray) -> None:
+        """Write raw bytes into a (possibly remote) segment's memory copy."""
+        seg.write(offset, data)
+
+    def get(self, seg, offset: int, nbytes: int) -> np.ndarray:
+        """Read raw bytes from a (possibly remote) segment's memory copy."""
+        return seg.read(offset, nbytes)
+
+    @abc.abstractmethod
+    def accumulate(self, seg, offset: int, data: np.ndarray, op: str) -> None:
+        """MPI_Accumulate, atomic at the target."""
+
+    @abc.abstractmethod
+    def get_accumulate(self, seg, offset: int, data: np.ndarray,
+                       op: str) -> np.ndarray:
+        """MPI_Get_accumulate, atomic at the target; returns the old value."""
+
+    @abc.abstractmethod
+    def compare_and_swap(self, seg, offset: int, value, compare, dtype):
+        """MPI_Compare_and_swap, atomic at the target; returns the old value."""
+
+    # -- collectives -------------------------------------------------------
+    @abc.abstractmethod
+    def barrier(self) -> None:
+        """Complete outstanding control traffic on every rank."""
+
+    def _check_contributions(self, value):
+        """Shared allreduce argument contract.
+
+        A list/tuple is a *per-rank contribution vector* and must have
+        exactly ``size`` entries -- a wrong length raises instead of being
+        silently passed through, so SPMD call sites fail loudly.  Anything
+        else (scalar/array) is treated as already reduced and returned
+        as-is by :meth:`allreduce`.
+        """
+        if isinstance(value, (list, tuple)):
+            if len(value) != self.size:
+                raise ValueError(
+                    f"allreduce expected one contribution per rank "
+                    f"({self.size}), got {len(value)}")
+            return True
+        return False
+
+    def _check_root(self, root: int) -> None:
+        """Shared bcast root-range contract."""
+        if root < 0 or root >= self.size:
+            raise ValueError(
+                f"bcast root {root} outside communicator of size {self.size}")
+
+    @abc.abstractmethod
+    def allreduce(self, value, op: str = "sum"):
+        """Reduce per-rank contributions; see :meth:`_check_contributions`."""
+
+    @abc.abstractmethod
+    def bcast(self, value, root: int = 0):
+        """Broadcast ``value`` from ``root`` to every rank; returns it."""
+
+    @abc.abstractmethod
+    def split(self, color: int, ranks: list[int]) -> "Transport":
+        """Transport for a sub-group; local rank ``i`` maps to parent
+        ``ranks[i]``."""
+
+    # -- capabilities / lifecycle -----------------------------------------
+    @property
+    def is_local(self) -> bool:
+        """True when every rank's segment lives in this process (enables
+        dynamic windows, zero-copy baseptr views and device-mask sync)."""
+        return False
+
+    def shutdown(self) -> None:
+        """Release transport resources (idempotent)."""

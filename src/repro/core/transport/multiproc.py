@@ -1,0 +1,575 @@
+"""Multiprocess transport: real worker processes under the same windows.
+
+``MultiprocessTransport`` maps each communicator rank onto a spawned worker
+process.  Placement of the bytes follows the paper's taxonomy:
+
+* **Memory windows** are backed by ``multiprocessing.shared_memory``: the
+  owning worker creates a named segment, the driver attaches, and put/get
+  are genuine one-sided load/stores on the shared mapping -- the target
+  never participates.
+* **Storage (and combined) windows** reuse the existing file backings,
+  which are *already cross-process by construction*: the file layout
+  produced by :func:`~repro.core.transport.local._make_segment` is
+  byte-identical to the in-process transport, so a checkpoint written under
+  one backend restores under the other.  The owner's user-level page cache
+  (dirty bitmap, selective sync) must live in exactly one process, so
+  remote access to these segments is serviced by the owner.
+* **Atomics** (accumulate / get_accumulate / compare_and_swap) always
+  execute at the target, serialized by its progress thread -- atomic with
+  respect to every origin process, not merely threads of one process.
+
+Passive-target progress: each worker runs a dedicated *progress thread*
+(`repro-progress-<rank>`) that services RMA requests arriving over a
+control channel -- a ``multiprocessing.Pipe(duplex=True)``, which on Unix
+is a ``socket.socketpair()``.  The target application never has to enter
+MPI calls for an origin to make progress, the property Schuchart et al.
+("Quo Vadis MPI RMA?") identify as the precondition for one-sided
+semantics to pay off.  The worker's main thread only joins the progress
+thread, leaving room for SPMD application code to run beside it.
+
+Failure semantics match the paper's storage-window story: a killed worker
+loses its page cache (un-synced data is gone, exactly like a crashed MPI
+rank), subsequent operations against it raise :class:`TransportError`, and
+a fresh transport over the same files recovers everything that was synced.
+
+Start method: ``REPRO_MP_START`` selects the multiprocessing context
+("spawn" by default -- safe under JAX/pytest parents with running threads;
+workers import only the jax-free ``repro.core`` storage stack).
+"""
+
+from __future__ import annotations
+
+import atexit
+import itertools
+import multiprocessing
+import os
+import threading
+import time
+
+import numpy as np
+
+from ..hints import WindowHints
+from .base import (Transport, TransportError, apply_accumulate,
+                   apply_compare_and_swap, apply_get_accumulate,
+                   reduce_values)
+from .local import _make_segment, _MemorySegment
+
+__all__ = ["MultiprocessTransport"]
+
+_READY_TIMEOUT_S = 60.0
+_SHUTDOWN_JOIN_S = 5.0
+
+
+def _call_timeout_s() -> float:
+    """Per-request reply timeout (a hung worker must surface as a
+    TransportError, not block the driver forever).  Generous by default --
+    a legitimate storage sync can take a while on a slow disk; tune with
+    ``REPRO_MP_TIMEOUT`` (seconds, 0 disables)."""
+    return float(os.environ.get("REPRO_MP_TIMEOUT", "120"))
+
+
+def _shm_open(name: str | None, size: int, create: bool):
+    from multiprocessing import shared_memory
+    if create:
+        return shared_memory.SharedMemory(create=True, size=max(1, size))
+    return shared_memory.SharedMemory(name=name)
+
+
+class _ShmBuf:
+    """A memory segment over a named shared-memory mapping.
+
+    Worker side it replaces ``_MemorySegment`` as the window's backing;
+    driver side it is the handle returned to :class:`Window` -- both views
+    alias the same pages, so put/get are direct load/stores (true one-sided
+    access), while atomics still route to the owner's progress thread.
+    """
+
+    kind = "memory"
+
+    def __init__(self, size: int, *, name: str | None = None,
+                 create: bool = False):
+        self.size = size
+        self._shm = _shm_open(name, size, create)
+        self._owner = create
+        self.buf = np.frombuffer(self._shm.buf, dtype=np.uint8, count=size) \
+            if size else np.zeros(0, dtype=np.uint8)
+        self.closed = False
+
+    @property
+    def name(self) -> str:
+        return self._shm.name
+
+    read = _MemorySegment.read
+    write = _MemorySegment.write
+
+    def sync(self, full: bool = False, mask: np.ndarray | None = None) -> int:
+        return 0  # nothing to persist
+
+    def close(self, unlink: bool = False, discard: bool = False) -> None:
+        if self.closed:
+            return
+        self.closed = True
+        self.buf = np.zeros(0, dtype=np.uint8)
+        try:
+            self._shm.close()
+        except BufferError:
+            # a baseptr()/shared_view() view is still alive out there; the
+            # mapping stays until that view dies, but unlink still proceeds
+            # (the eventual SharedMemory.__del__ may warn -- drop views
+            # before free() to close cleanly)
+            pass
+        if self._owner:
+            try:
+                self._shm.unlink()
+            except FileNotFoundError:
+                pass
+
+
+class _DriverShmBuf(_ShmBuf):
+    """Driver-side handle for a worker-owned shared-memory segment.
+
+    Reads/writes are direct load/stores on the attached mapping;
+    ``close()`` additionally releases the owner's mapping (the worker
+    unlinks, being the creator).  Carries the ``(_rank, _win_id)`` address
+    the transport's target-side atomics dispatch on.
+    """
+
+    def __init__(self, transport: "MultiprocessTransport", win_id: int,
+                 rank: int, size: int, name: str):
+        super().__init__(size, name=name)
+        self._t = transport
+        self._win_id = win_id
+        self._rank = rank
+
+    def close(self, unlink: bool = False, discard: bool = False) -> None:
+        if self.closed:
+            return
+        super().close(unlink=unlink, discard=discard)
+        self._t._call(self._rank, ("free", self._win_id, unlink, discard))
+
+
+class _RemoteSegment:
+    """Driver-side handle for a segment owned by a worker process.
+
+    Storage-backed segments keep their page cache (and ``DirtyTracker``) in
+    the owning rank's process; every access is a request serviced by that
+    rank's progress thread.  ``sync``/``dirty_bytes`` therefore reflect the
+    *owner's* dirty state -- selective synchronization happens where the
+    data lives.
+    """
+
+    #: no local tracker: the dirty bitmap lives with the owner (device-mask
+    #: sync needs a local transport and is gated in Window)
+    tracker = None
+
+    def __init__(self, transport: "MultiprocessTransport", win_id: int,
+                 rank: int, meta: dict):
+        self._t = transport
+        self._win_id = win_id
+        self._rank = rank
+        self.kind = meta["kind"]
+        self.size = meta["size"]
+        self.mem_bytes = meta["mem_bytes"]
+        self.sto_bytes = meta["sto_bytes"]
+        self.page_size = meta["page_size"]
+        self.closed = False
+        # driver-side upper bound on the owner's dirty bytes: written bytes
+        # accumulate, completed syncs drain.  Lets the backpressure charge
+        # (Window._flush_charge) avoid a blocking cross-process query that
+        # would serialize behind an in-flight sync on this rank's channel.
+        self._approx_dirty = 0
+        self._approx_lock = threading.Lock()
+        #: owner-measured seconds of the last sync's storage I/O (excludes
+        #: the channel round trip / queueing this driver observed)
+        self.last_sync_io: float | None = None
+
+    @property
+    def has_storage(self) -> bool:
+        return self.sto_bytes > 0
+
+    def read(self, offset: int, nbytes: int) -> np.ndarray:
+        raw = self._t._call(self._rank, ("get", self._win_id, offset, nbytes))
+        return np.frombuffer(raw, dtype=np.uint8).copy()
+
+    def write(self, offset: int, data) -> None:
+        data = np.ascontiguousarray(np.asarray(data, dtype=np.uint8).ravel())
+        self._t._call(self._rank, ("put", self._win_id, offset, data.tobytes()))
+        with self._approx_lock:
+            self._approx_dirty = min(self.size,
+                                     self._approx_dirty + data.nbytes)
+
+    def sync(self, full: bool = False, mask: np.ndarray | None = None) -> int:
+        n, io_s = self._t._call(self._rank,
+                                ("sync", self._win_id, full, mask))
+        self.last_sync_io = io_s
+        with self._approx_lock:
+            self._approx_dirty = max(0, self._approx_dirty - n)
+        return n
+
+    def dirty_bytes(self, mask: np.ndarray | None = None) -> int:
+        return self._t._call(self._rank, ("dirty", self._win_id, mask))
+
+    def dirty_bytes_estimate(self, mask: np.ndarray | None = None) -> int:
+        """Upper bound on un-synced bytes, computed without touching the
+        owner (``mask`` is ignored -- conservative).  Backpressure-charge
+        use only; for exact numbers query :meth:`dirty_bytes`."""
+        with self._approx_lock:
+            return self._approx_dirty
+
+    def close(self, unlink: bool = False, discard: bool = False) -> None:
+        if self.closed:
+            return
+        self.closed = True
+        self._t._call(self._rank, ("free", self._win_id, unlink, discard))
+
+
+def _seg_meta(seg) -> dict:
+    """Describe a worker-side segment for the driver's handle."""
+    tracker = getattr(seg, "tracker", None)
+    return {
+        "kind": getattr(seg, "kind", None) or (
+            "combined" if hasattr(seg, "mem_bytes") else
+            "storage" if tracker is not None else "memory"),
+        "size": seg.size,
+        "mem_bytes": getattr(seg, "mem_bytes", 0),
+        "sto_bytes": getattr(seg, "sto_bytes", seg.size),
+        "page_size": tracker.page_size if tracker is not None else None,
+        "shm": seg.name if isinstance(seg, _ShmBuf) else None,
+    }
+
+
+def _serve(conn, rank: int) -> None:
+    """The progress loop: service passive-target RMA until shutdown.
+
+    One request at a time, in channel FIFO order -- which is what makes the
+    target-side atomics atomic and keeps a rank's operations ordered the
+    way the window layer's per-rank request FIFO expects.
+    """
+    segments: dict[int, object] = {}
+    try:
+        conn.send(("ready", rank))
+        while True:
+            try:
+                msg = conn.recv()
+            except (EOFError, OSError):
+                break
+            op = msg[0]
+            if op == "shutdown":
+                try:
+                    conn.send(("ok", None))
+                except (OSError, BrokenPipeError):
+                    pass
+                break
+            try:
+                if op == "alloc":
+                    _, win_id, size, hints_kw, name_rank, name_nranks, spec = msg
+                    hints = WindowHints(**hints_kw)
+                    if not hints.is_storage:
+                        seg = _ShmBuf(size, create=True)
+                    else:
+                        seg = _make_segment(size, hints, name_rank,
+                                            name_nranks, **spec)
+                    segments[win_id] = seg
+                    reply = _seg_meta(seg)
+                elif op == "put":
+                    _, win_id, offset, raw = msg
+                    segments[win_id].write(offset, np.frombuffer(raw, np.uint8))
+                    reply = None
+                elif op == "get":
+                    _, win_id, offset, nbytes = msg
+                    reply = segments[win_id].read(offset, nbytes).tobytes()
+                elif op == "acc":
+                    _, win_id, offset, data, aop = msg
+                    apply_accumulate(segments[win_id], offset, data, aop)
+                    reply = None
+                elif op == "gacc":
+                    _, win_id, offset, data, aop = msg
+                    reply = apply_get_accumulate(segments[win_id], offset,
+                                                 data, aop)
+                elif op == "cas":
+                    _, win_id, offset, value, compare, dtype = msg
+                    reply = apply_compare_and_swap(segments[win_id], offset,
+                                                   value, compare, dtype)
+                elif op == "sync":
+                    _, win_id, full, mask = msg
+                    # reply carries the owner-side I/O time so the driver's
+                    # throughput estimate excludes channel queueing
+                    t0 = time.monotonic()
+                    n = segments[win_id].sync(full=full, mask=mask)
+                    reply = (n, time.monotonic() - t0)
+                elif op == "dirty":
+                    _, win_id, mask = msg
+                    seg = segments[win_id]
+                    reply = (seg.dirty_bytes(mask=mask)
+                             if hasattr(seg, "dirty_bytes") else 0)
+                elif op == "free":
+                    _, win_id, unlink, discard = msg
+                    seg = segments.pop(win_id, None)
+                    if seg is not None:
+                        seg.close(unlink=unlink, discard=discard)
+                    reply = None
+                elif op == "barrier":
+                    reply = None
+                elif op == "reduce_part":
+                    # echo the rank's contribution through the process
+                    # boundary (the driver reduces the gathered parts)
+                    reply = np.asarray(msg[1])
+                elif op == "bcast":
+                    # ack with the value: the round trip through the rank's
+                    # process is the delivery (workers run no app code yet)
+                    reply = msg[1]
+                else:
+                    raise TransportError(f"unknown transport op {op!r}")
+            except BaseException as e:  # surfaced at the origin's call site
+                try:
+                    conn.send(("err", e))
+                except Exception:
+                    conn.send(("err", TransportError(
+                        f"rank {rank}: {type(e).__name__}: {e}")))
+                continue
+            conn.send(("ok", reply))
+    finally:
+        for seg in segments.values():
+            try:
+                seg.close()
+            except Exception:
+                pass
+        try:
+            conn.close()
+        except Exception:
+            pass
+
+
+def _worker_main(conn, rank: int) -> None:
+    """Entry point of one rank's worker process.
+
+    All servicing happens on the *progress thread*; the main thread merely
+    joins it, mirroring an MPI implementation's asynchronous progress
+    engine running beside the application.
+    """
+    t = threading.Thread(target=_serve, args=(conn, rank),
+                         name=f"repro-progress-{rank}", daemon=True)
+    t.start()
+    t.join()
+
+
+class MultiprocessTransport(Transport):
+    """Spawned worker processes, one per rank, driven over socketpairs."""
+
+    kind = "mp"
+
+    def __init__(self, size: int, rank: int = 0, *,
+                 start_method: str | None = None):
+        super().__init__(size, rank)
+        method = (start_method or os.environ.get("REPRO_MP_START")
+                  or "spawn")
+        ctx = multiprocessing.get_context(method)
+        self._procs = []
+        self._conns = []
+        self._chan_locks = [threading.Lock() for _ in range(size)]
+        self._win_ids = itertools.count()
+        self._id_lock = threading.Lock()
+        self._shutdown_done = False
+        try:
+            for r in range(size):
+                # duplex Pipe == socket.socketpair() on Unix: the control
+                # channel the progress thread services
+                parent, child = ctx.Pipe(duplex=True)
+                p = ctx.Process(target=_worker_main, args=(child, r),
+                                name=f"repro-rank-{r}", daemon=True)
+                p.start()
+                child.close()
+                self._procs.append(p)
+                self._conns.append(parent)
+            for r, conn in enumerate(self._conns):
+                if not conn.poll(_READY_TIMEOUT_S):
+                    raise TransportError(f"rank {r} worker did not start")
+                tag, got = conn.recv()
+                if tag != "ready" or got != r:
+                    raise TransportError(f"rank {r} worker handshake failed")
+        except BaseException:
+            self.shutdown()
+            raise
+        atexit.register(self.shutdown)
+
+    # -- control channel ---------------------------------------------------
+    def _call(self, rank: int, msg):
+        conn = self._conns[rank]
+        timeout = _call_timeout_s()
+        with self._chan_locks[rank]:
+            try:
+                conn.send(msg)
+                if timeout > 0 and not conn.poll(timeout):
+                    # poison the channel: the reply stream is now off by
+                    # one (a late reply would be read as the *next* call's
+                    # payload), so this rank must never be reused
+                    try:
+                        conn.close()
+                    except Exception:
+                        pass
+                    raise TransportError(
+                        f"rank {rank} worker did not reply within "
+                        f"{timeout:.0f}s (hung channel; see REPRO_MP_TIMEOUT)")
+                status, payload = conn.recv()
+            except (EOFError, OSError, BrokenPipeError) as e:
+                alive = self._procs[rank].is_alive()
+                raise TransportError(
+                    f"rank {rank} worker is unreachable"
+                    f" ({'hung channel' if alive else 'process died'})"
+                ) from e
+        if status == "err":
+            raise payload
+        return payload
+
+    def _next_win_id(self) -> int:
+        with self._id_lock:
+            return next(self._win_ids)
+
+    # -- segments ----------------------------------------------------------
+    def _alloc_one(self, rank: int, win_id: int, size: int, hints,
+                   spec: dict, name_rank: int, name_nranks: int):
+        meta = self._call(rank, ("alloc", win_id, size, dict(hints.__dict__),
+                                 name_rank, name_nranks, dict(spec)))
+        if meta["shm"] is not None:
+            return _DriverShmBuf(self, win_id, rank, size, meta["shm"])
+        return _RemoteSegment(self, win_id, rank, meta)
+
+    def allocate_segments(self, size: int, hints, spec: dict) -> list:
+        win_id = self._next_win_id()
+        return [self._alloc_one(r, win_id, size, hints, spec, r, self.size)
+                for r in range(self.size)]
+
+    # -- target-side atomics ----------------------------------------------
+    @staticmethod
+    def _addr(seg) -> tuple[int, int]:
+        return seg._rank, seg._win_id
+
+    def accumulate(self, seg, offset, data, op):
+        rank, win_id = self._addr(seg)
+        self._call(rank, ("acc", win_id, offset,
+                          np.ascontiguousarray(data), op))
+
+    def get_accumulate(self, seg, offset, data, op):
+        rank, win_id = self._addr(seg)
+        return self._call(rank, ("gacc", win_id, offset,
+                                 np.ascontiguousarray(data), op))
+
+    def compare_and_swap(self, seg, offset, value, compare, dtype):
+        rank, win_id = self._addr(seg)
+        return self._call(rank, ("cas", win_id, offset, value, compare,
+                                 np.dtype(dtype)))
+
+    # -- collectives -------------------------------------------------------
+    def _barrier_on(self, ranks) -> None:
+        # channel FIFO: by the time each worker acks, it has serviced every
+        # operation sent before the barrier -- completion across all ranks
+        for r in ranks:
+            self._call(r, ("barrier",))
+
+    def barrier(self) -> None:
+        self._barrier_on(range(self.size))
+
+    def _reduce_on(self, ranks, value, op: str):
+        contribs = [self._call(r, ("reduce_part", np.asarray(v)))
+                    for r, v in zip(ranks, value)]
+        return reduce_values(contribs, op)
+
+    def allreduce(self, value, op: str = "sum"):
+        if self._check_contributions(value):
+            return self._reduce_on(range(self.size), value, op)
+        return value
+
+    def _bcast_on(self, ranks, value, root: int):
+        if root not in ranks:
+            raise ValueError(f"bcast root {root} outside group {list(ranks)}")
+        out = value
+        for r in ranks:
+            got = self._call(r, ("bcast", value))
+            if r == root:
+                out = got  # the root's echo proves the round trip
+        return out
+
+    def bcast(self, value, root: int = 0):
+        self._check_root(root)
+        return self._bcast_on(range(self.size), value, root)
+
+    def split(self, color: int, ranks: list[int]) -> "Transport":
+        return _MpSubTransport(self, ranks)
+
+    # -- lifecycle ---------------------------------------------------------
+    def shutdown(self) -> None:
+        """Stop the workers (idempotent; robust to already-dead children)."""
+        if self._shutdown_done:
+            return
+        self._shutdown_done = True
+        atexit.unregister(self.shutdown)  # don't retain closed transports
+        for r, conn in enumerate(self._conns):
+            with self._chan_locks[r]:
+                try:
+                    conn.send(("shutdown",))
+                    if conn.poll(_SHUTDOWN_JOIN_S):
+                        conn.recv()
+                except (EOFError, OSError, BrokenPipeError):
+                    pass
+        for p in self._procs:
+            p.join(timeout=_SHUTDOWN_JOIN_S)
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=_SHUTDOWN_JOIN_S)
+        for conn in self._conns:
+            try:
+                conn.close()
+            except Exception:
+                pass
+
+
+class _MpSubTransport(Transport):
+    """Rank-translated view of a parent multiprocess transport.
+
+    Sub-group rank ``i`` is served by the parent's worker ``ranks[i]``;
+    windows allocated through it exist only on those workers (with
+    group-local file naming, matching what an in-process sub-communicator
+    would produce).  The parent owns the worker processes -- shutting a
+    sub-transport down is a no-op.
+    """
+
+    kind = "mp"
+
+    def __init__(self, parent: MultiprocessTransport, ranks: list[int]):
+        super().__init__(len(ranks))
+        self.parent = parent
+        self.ranks = list(ranks)
+
+    def allocate_segments(self, size: int, hints, spec: dict) -> list:
+        win_id = self.parent._next_win_id()
+        return [self.parent._alloc_one(pr, win_id, size, hints, spec,
+                                       i, self.size)
+                for i, pr in enumerate(self.ranks)]
+
+    # segment handles are bound to their worker channel; delegate verbatim
+    def accumulate(self, seg, offset, data, op):
+        self.parent.accumulate(seg, offset, data, op)
+
+    def get_accumulate(self, seg, offset, data, op):
+        return self.parent.get_accumulate(seg, offset, data, op)
+
+    def compare_and_swap(self, seg, offset, value, compare, dtype):
+        return self.parent.compare_and_swap(seg, offset, value, compare, dtype)
+
+    def barrier(self) -> None:
+        self.parent._barrier_on(self.ranks)
+
+    def allreduce(self, value, op: str = "sum"):
+        if self._check_contributions(value):
+            return self.parent._reduce_on(self.ranks, value, op)
+        return value
+
+    def bcast(self, value, root: int = 0):
+        self._check_root(root)
+        return self.parent._bcast_on(self.ranks, value, self.ranks[root])
+
+    def split(self, color: int, ranks: list[int]) -> "Transport":
+        return _MpSubTransport(self.parent, [self.ranks[r] for r in ranks])
+
+    def shutdown(self) -> None:
+        pass  # the parent owns the workers

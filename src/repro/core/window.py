@@ -11,11 +11,21 @@ Single-controller re-implementation of the paper's extended routines:
     MPI_Accumulate / CAS      -> win.accumulate / win.compare_and_swap
     MPI_Win_lock/unlock       -> win.lock(rank, exclusive=...) / win.unlock
 
-"Ranks" are logical positions of a :class:`~repro.core.comm.Communicator`.
-On a real multi-host deployment each JAX process owns its rank's segment and
-remote put/get ride the ICI/DCN fabric; here every segment is addressable in
-one process, which preserves the *semantics* (one-sided access + explicit
-storage sync) that the paper's applications program against.
+"Ranks" are logical positions of a :class:`~repro.core.comm.Communicator`,
+and *where a rank's segment physically lives is the communicator's
+transport's decision* (``repro.core.transport``): the default ``inproc``
+backend keeps every segment addressable in this process (the original
+single-controller semantics), while the ``mp`` backend maps each rank onto
+a real worker process -- memory windows in ``multiprocessing.shared_memory``,
+storage windows behind the owner's page cache, atomics and storage access
+serviced by the owner's passive-target progress thread.  ``Window`` never
+touches segment internals for data movement: ``put``/``get`` and the
+``accumulate`` family route through ``comm.transport``, and the per-rank
+segment handles in ``self.segments`` are whatever the transport allocated
+(local objects, shared-memory views, or remote proxies).  What stays local
+to the *origin* is the nonblocking machinery -- ``Request`` bookkeeping and
+the ``WritebackPool`` -- while each ``DirtyTracker`` lives with the rank
+that owns the bytes, so selective sync always happens where the data is.
 
 Crucial paper nuance kept intact: put/get only touch the *memory copy*
 (page cache) of a storage window -- persistence requires an explicit
@@ -105,10 +115,11 @@ from typing import Any
 
 import numpy as np
 
-from .combined import CombinedSegment
 from .hints import Info, WindowHints
 from .storage import (DEFAULT_PAGE_SIZE, WritebackPool, dirty_runs,
-                      make_backing, mark_span)
+                      mark_span)
+from .transport.base import ACC_OPS
+from .transport.local import _make_segment, _MemorySegment, _StorageSegment  # noqa: F401  (re-exported for compat)
 
 __all__ = ["Window", "WindowError", "Request", "LOCK_SHARED",
            "LOCK_EXCLUSIVE", "alloc_mem"]
@@ -149,94 +160,6 @@ class _RWLock:
             else:
                 raise WindowError("unlock without matching lock")
             self._cond.notify_all()
-
-
-class _MemorySegment:
-    """Traditional MPI memory window segment."""
-
-    def __init__(self, size: int):
-        self.size = size
-        self.buf = np.zeros(size, dtype=np.uint8)
-
-    def read(self, offset: int, nbytes: int) -> np.ndarray:
-        if offset < 0 or offset + nbytes > self.size:
-            raise IndexError(f"access [{offset},{offset + nbytes}) outside {self.size}B window")
-        return self.buf[offset:offset + nbytes].copy()
-
-    def write(self, offset: int, data) -> None:
-        data = np.asarray(data, dtype=np.uint8).ravel()
-        if offset < 0 or offset + data.nbytes > self.size:
-            raise IndexError(f"access [{offset},{offset + data.nbytes}) outside {self.size}B window")
-        self.buf[offset:offset + data.nbytes] = data
-
-    def sync(self, full: bool = False, mask: np.ndarray | None = None) -> int:
-        return 0  # nothing to persist
-
-    def close(self, unlink: bool = False, discard: bool = False) -> None:
-        self.buf = np.zeros(0, dtype=np.uint8)
-
-
-class _StorageSegment:
-    """Pure storage window segment (memory copy = page cache of backing)."""
-
-    def __init__(self, size: int, hints: WindowHints, path: str, *,
-                 mechanism: str, page_size: int, cache_bytes: int | None,
-                 writeback_interval: float | None, compare_on_write: bool = False):
-        self.size = size
-        extra = ({"cache_bytes": cache_bytes, "writeback_interval": writeback_interval,
-                  "compare_on_write": compare_on_write}
-                 if mechanism == "cached" else {})
-        self.backing = make_backing(
-            path, size, mechanism=mechanism, offset=hints.offset,
-            page_size=page_size, file_perm=hints.file_perm,
-            striping_factor=hints.striping_factor,
-            striping_unit=hints.striping_unit, **extra)
-
-    def read(self, offset: int, nbytes: int) -> np.ndarray:
-        return self.backing.read(offset, nbytes)
-
-    def write(self, offset: int, data) -> None:
-        self.backing.write(offset, data)
-
-    def sync(self, full: bool = False, mask: np.ndarray | None = None) -> int:
-        return self.backing.sync(full=full, mask=mask)
-
-    def dirty_bytes(self, mask: np.ndarray | None = None) -> int:
-        return self.backing.dirty_bytes(mask=mask)
-
-    @property
-    def tracker(self):
-        return self.backing.tracker
-
-    def close(self, unlink: bool = False, discard: bool = False) -> None:
-        self.backing.close(unlink=unlink, discard=discard)
-
-
-def _make_segment(size: int, hints: WindowHints, rank: int, nranks: int, *,
-                  shared_file: bool, memory_budget: int | None,
-                  mechanism: str, page_size: int, cache_bytes: int | None,
-                  writeback_interval: float | None, compare_on_write: bool = False):
-    if not hints.is_storage:
-        return _MemorySegment(size)
-    if shared_file:
-        # Paper: "shared files are allowed if the same target is defined
-        # among all the processes of the communicator"; each rank maps at
-        # hint offset + rank * segment size (cf. Fig. 4's offset x).
-        path = hints.filename
-        hints = WindowHints(**{**hints.__dict__, "offset": hints.offset + rank * size})
-    else:
-        # independent file per process (the paper's benchmark default)
-        path = hints.filename if nranks == 1 else f"{hints.filename}.{rank}"
-    if hints.is_combined:
-        return CombinedSegment(size, hints, path, memory_budget=memory_budget,
-                               mechanism=mechanism, page_size=page_size,
-                               cache_bytes=cache_bytes,
-                               writeback_interval=writeback_interval,
-                               compare_on_write=compare_on_write)
-    return _StorageSegment(size, hints, path, mechanism=mechanism,
-                           page_size=page_size, cache_bytes=cache_bytes,
-                           writeback_interval=writeback_interval,
-                           compare_on_write=compare_on_write)
 
 
 class Request:
@@ -320,7 +243,8 @@ class Window:
     def __init__(self, comm, segments, hints: WindowHints, *, disp_unit: int = 1,
                  flavor: str, dynamic: bool = False, async_workers: int = 2,
                  max_inflight_bytes: int | None = None,
-                 low_watermark: int | None = None):
+                 low_watermark: int | None = None,
+                 target_flush_latency: float | None = None):
         self.comm = comm
         self.segments = segments  # list, one per rank (dynamic: list of lists)
         self.hints = hints
@@ -339,6 +263,7 @@ class Window:
         self._async_workers = async_workers
         self._max_inflight_bytes = max_inflight_bytes
         self._low_watermark = low_watermark
+        self._target_flush_latency = target_flush_latency
         self._pool: WritebackPool | None = None
         self._pool_lock = threading.Lock()
         self._req_lock = threading.Lock()
@@ -362,33 +287,37 @@ class Window:
                  compare_on_write: bool = False,
                  async_workers: int = 2,
                  max_inflight_bytes: int | None = None,
-                 low_watermark: int | None = None) -> "Window":
+                 low_watermark: int | None = None,
+                 target_flush_latency: float | None = None) -> "Window":
         """Collective MPI_Win_allocate over all ranks of ``comm``.
 
         ``size`` is the per-rank window size in bytes (like MPI, each rank
         passes its own size; we use a uniform size for the common case).
-        ``async_workers`` sizes the background write-back pool used by the
-        request-based (rput/rget/flush_async) layer; the pool's threads only
-        start on first nonblocking use.  ``max_inflight_bytes`` /
-        ``low_watermark`` bound the pool's queued write-back bytes
-        (backpressure; see the module docstring) -- default unbounded.
+        Segment placement is the communicator's *transport's* decision:
+        ``inproc`` builds local segments, ``mp`` has each rank's worker
+        process build (and own) its segment and hands back shared-memory
+        views / remote proxies.  ``async_workers`` sizes the background
+        write-back pool used by the request-based (rput/rget/flush_async)
+        layer; the pool's threads only start on first nonblocking use.
+        ``max_inflight_bytes`` / ``low_watermark`` bound the pool's queued
+        write-back bytes (backpressure; see the module docstring) --
+        default unbounded; ``target_flush_latency`` instead sizes the high
+        watermark adaptively from the observed flush throughput.
         """
         hints = WindowHints.from_info(info)
         comm.barrier()  # collective
-        segments = [
-            _make_segment(size, hints, r, comm.size, shared_file=shared_file,
-                          memory_budget=memory_budget, mechanism=mechanism,
-                          page_size=page_size, cache_bytes=cache_bytes,
-                          writeback_interval=writeback_interval,
-                          compare_on_write=compare_on_write)
-            for r in range(comm.size)
-        ]
+        segments = comm.transport.allocate_segments(size, hints, dict(
+            shared_file=shared_file, memory_budget=memory_budget,
+            mechanism=mechanism, page_size=page_size, cache_bytes=cache_bytes,
+            writeback_interval=writeback_interval,
+            compare_on_write=compare_on_write))
         flavor = ("combined" if hints.is_combined else
                   "storage" if hints.is_storage else "memory")
         return cls(comm, segments, hints, disp_unit=disp_unit, flavor=flavor,
                    async_workers=async_workers,
                    max_inflight_bytes=max_inflight_bytes,
-                   low_watermark=low_watermark)
+                   low_watermark=low_watermark,
+                   target_flush_latency=target_flush_latency)
 
     @classmethod
     def allocate_shared(cls, comm, size: int, **kw) -> "Window":
@@ -405,7 +334,15 @@ class Window:
 
     @classmethod
     def create_dynamic(cls, comm) -> "Window":
-        """MPI_Win_create_dynamic: start with no attached segments."""
+        """MPI_Win_create_dynamic: start with no attached segments.
+
+        Dynamic windows attach arbitrary local segment objects, so they
+        require a transport whose ranks live in this process.
+        """
+        if not comm.transport.is_local:
+            raise WindowError(
+                "dynamic windows require the in-process transport "
+                "(attached segments are local objects)")
         hints = WindowHints()
         win = cls.__new__(cls)
         Window.__init__(win, comm, [[] for _ in range(comm.size)], hints,
@@ -451,40 +388,42 @@ class Window:
         """
         data = np.ascontiguousarray(data)
         seg = self._seg(target_rank, handle)
-        seg.write(target_disp * self.disp_unit, data.view(np.uint8).ravel())
+        self.comm.transport.put(seg, target_disp * self.disp_unit,
+                                data.view(np.uint8).ravel())
 
     def get(self, target_rank: int, target_disp: int, count: int,
             dtype=np.uint8, *, handle: int | None = None) -> np.ndarray:
         """MPI_Get: read ``count`` items of ``dtype`` from the target."""
         dt = np.dtype(dtype)
         seg = self._seg(target_rank, handle)
-        raw = seg.read(target_disp * self.disp_unit, count * dt.itemsize)
+        raw = self.comm.transport.get(seg, target_disp * self.disp_unit,
+                                      count * dt.itemsize)
         return raw.view(dt)[:count].copy()
 
-    _ACC_OPS = {
-        "sum": np.add, "prod": np.multiply, "min": np.minimum,
-        "max": np.maximum, "band": np.bitwise_and, "bor": np.bitwise_or,
-        "replace": None, "no_op": None,
-    }
+    # kept as an alias: the op table now lives with the transport layer so
+    # the multiprocess worker applies the same reductions target-side
+    _ACC_OPS = ACC_OPS
 
     def accumulate(self, data: np.ndarray, target_rank: int, target_disp: int = 0,
                    op: str = "sum", *, handle: int | None = None) -> None:
-        """MPI_Accumulate with a reduction op; atomic under the rank lock."""
-        if op not in self._ACC_OPS:
+        """MPI_Accumulate with a reduction op.
+
+        The read-modify-write executes through the transport *at the
+        target* (the owner's progress thread under ``mp``), held under the
+        target rank's exclusive lock so it also serializes against this
+        process's epochs and request traffic.
+        """
+        if op not in ACC_OPS:
             raise WindowError(f"unknown accumulate op {op!r}")
         data = np.ascontiguousarray(data)
         if op == "no_op":
             return
+        seg = self._seg(target_rank, handle)
         lock = self._locks[target_rank]
         lock.acquire(exclusive=True)
         try:
-            if op == "replace":
-                self.put(data, target_rank, target_disp, handle=handle)
-                return
-            cur = self.get(target_rank, target_disp, data.size, data.dtype,
-                           handle=handle).reshape(data.shape)
-            out = self._ACC_OPS[op](cur, data)
-            self.put(out.astype(data.dtype), target_rank, target_disp, handle=handle)
+            self.comm.transport.accumulate(
+                seg, target_disp * self.disp_unit, data, op)
         finally:
             lock.release()
 
@@ -492,20 +431,15 @@ class Window:
                        target_disp: int = 0, op: str = "sum",
                        *, handle: int | None = None) -> np.ndarray:
         """MPI_Get_accumulate: fetch old value, then accumulate."""
+        if op not in ACC_OPS:
+            raise WindowError(f"unknown accumulate op {op!r}")
         data = np.ascontiguousarray(data)
+        seg = self._seg(target_rank, handle)
         lock = self._locks[target_rank]
         lock.acquire(exclusive=True)
         try:
-            old = self.get(target_rank, target_disp, data.size, data.dtype,
-                           handle=handle).reshape(data.shape)
-            if op != "no_op":
-                new = old if op == "replace" else None
-                if op == "replace":
-                    self.put(data, target_rank, target_disp, handle=handle)
-                else:
-                    self.put(self._ACC_OPS[op](old, data).astype(data.dtype),
-                             target_rank, target_disp, handle=handle)
-            return old
+            return self.comm.transport.get_accumulate(
+                seg, target_disp * self.disp_unit, data, op)
         finally:
             lock.release()
 
@@ -521,14 +455,12 @@ class Window:
                          *, handle: int | None = None):
         """MPI_Compare_and_swap: atomic CAS; returns the old value."""
         dt = np.dtype(dtype)
+        seg = self._seg(target_rank, handle)
         lock = self._locks[target_rank]
         lock.acquire(exclusive=True)
         try:
-            old = self.get(target_rank, target_disp, 1, dt, handle=handle)[0]
-            if old == np.asarray(compare, dtype=dt):
-                self.put(np.asarray([value], dtype=dt), target_rank,
-                         target_disp, handle=handle)
-            return old
+            return self.comm.transport.compare_and_swap(
+                seg, target_disp * self.disp_unit, value, compare, dt)
         finally:
             lock.release()
 
@@ -540,7 +472,8 @@ class Window:
                     self._pool = WritebackPool(
                         self._async_workers,
                         max_inflight_bytes=self._max_inflight_bytes,
-                        low_watermark=self._low_watermark)
+                        low_watermark=self._low_watermark,
+                        target_latency=self._target_flush_latency)
         return self._pool
 
     def pool_stats(self) -> dict | None:
@@ -596,7 +529,8 @@ class Window:
             lock = self._locks[target_rank]
             lock.acquire(exclusive=False)
             try:
-                self._seg(target_rank, handle).write(off, buf)
+                self.comm.transport.put(self._seg(target_rank, handle), off,
+                                        buf)
             finally:
                 lock.release()
 
@@ -673,7 +607,19 @@ class Window:
                 if exclusive:
                     self._locks[r].acquire(exclusive=True)
                 try:
-                    n = self._sync_rank_segs(r, full, mask)
+                    # time only the I/O (lock waits would deflate the
+                    # adaptive-watermark throughput estimate); remote
+                    # segments report the owner-measured I/O time, which
+                    # also excludes control-channel queueing
+                    n = 0
+                    k = pool.begin_flush_sample()
+                    t0 = time.monotonic()
+                    try:
+                        n = self._sync_rank_segs(r, full, mask)
+                    finally:
+                        dt = time.monotonic() - t0
+                        pool.end_flush_sample(
+                            n, self._rank_sync_io(r, dt), k)
                 finally:
                     if exclusive:
                         self._locks[r].release()
@@ -687,11 +633,27 @@ class Window:
             return task
 
         force = self._caller_in_lock_epoch()
+        # the task times its own I/O via begin/end_flush_sample (excluding
+        # lock waits), so the ticket itself is not worker-sampled
         tickets = [pool.submit(make_task(r), key=r,
-                               nbytes=self._flush_charge(r, full, mask),
+                               nbytes=(self._flush_charge(r, full, mask)
+                                       if pool.bounded else 0),
                                force=force)
                    for r in ranks]
         return self._register(Request(tickets, combine=sum), ranks)
+
+    def _rank_sync_io(self, rank: int, measured: float) -> float:
+        """I/O seconds of the rank's just-completed sync: the owner-side
+        measurement when every segment reports one (mp transport), else the
+        caller's wall measurement (local segments have no channel wait)."""
+        segs = self.segments[rank] if self.dynamic else [self.segments[rank]]
+        total = 0.0
+        for seg in segs:
+            io = getattr(seg, "last_sync_io", None)
+            if io is None:
+                return measured
+            total += io
+        return total
 
     def _flush_charge(self, rank: int, full: bool,
                       mask: np.ndarray | None) -> int:
@@ -699,7 +661,11 @@ class Window:
         dirty bytes at submit time.  An estimate -- writes landing between
         submit and execution flush too but are charged to *their* tickets.
         Only bytes a flush can actually write count: memory segments (and
-        the pinned memory part of combined windows) charge nothing."""
+        the pinned memory part of combined windows) charge nothing.  Only
+        computed for a bounded pool, and remote segments answer from their
+        driver-side ``dirty_bytes_estimate`` -- an exact cross-process
+        ``dirty_bytes`` query would serialize behind an in-flight sync on
+        the same rank's channel."""
         segs = self.segments[rank] if self.dynamic else [self.segments[rank]]
         total = 0
         for seg in segs:
@@ -708,6 +674,8 @@ class Window:
             if full:
                 total += (seg.sto_bytes if hasattr(seg, "sto_bytes")
                           else getattr(seg, "size", 0))
+            elif hasattr(seg, "dirty_bytes_estimate"):
+                total += seg.dirty_bytes_estimate(mask=mask)
             else:
                 total += (seg.dirty_bytes() if mask is None
                           else seg.dirty_bytes(mask=mask))
@@ -726,11 +694,12 @@ class Window:
 
     # -- load/store access ----------------------------------------------------
     def baseptr(self, rank: int):
-        """Local load/store pointer (memory windows / mmap storage windows
+        """Local load/store pointer (memory windows -- including the mp
+        transport's shared-memory mappings -- and mmap storage windows
         return a zero-copy numpy view; cached storage and combined windows
         return the segment itself, which supports read()/write())."""
         seg = self._seg(rank)
-        if isinstance(seg, _MemorySegment):
+        if hasattr(seg, "buf"):  # plain memory or shared-memory segment
             return seg.buf
         if hasattr(seg, "backing") and hasattr(seg.backing, "view"):
             view = seg.backing.view(0, seg.size)
@@ -739,7 +708,7 @@ class Window:
 
     def shared_view(self) -> np.ndarray:
         """Consecutive view across all ranks (shared memory windows)."""
-        if not all(isinstance(s, _MemorySegment) for s in self.segments):
+        if not all(hasattr(s, "buf") for s in self.segments):
             raise WindowError("shared_view requires memory segments")
         return np.concatenate([s.buf for s in self.segments])
 
@@ -848,7 +817,8 @@ class Window:
         tracker = getattr(seg, "tracker", None)
         if tracker is None:
             raise WindowError(
-                "device-mask sync requires a storage-backed segment")
+                "device-mask sync requires a storage-backed segment owned "
+                "by this process (in-process transport)")
         ps = tracker.page_size
         itemsize = np.dtype(dtype).itemsize
         if ps % itemsize:
@@ -951,8 +921,13 @@ class Window:
         """
         if self.freed:
             return
-        self.comm.barrier()
         errors: list[BaseException] = []
+        try:
+            self.comm.barrier()
+        except BaseException as e:
+            # a dead rank must not abort teardown: keep draining/closing so
+            # the surviving segments (and their files) shut down cleanly
+            errors.append(e)
         if self._pool is not None:
             with self._req_lock:
                 pending = [r for rs in self._pending_reqs.values() for r in rs]
@@ -970,7 +945,13 @@ class Window:
             segs = rank_seg if self.dynamic else [rank_seg]
             for seg in segs:
                 if seg is not None:
-                    seg.close(unlink=self.hints.unlink, discard=self.hints.discard)
+                    try:
+                        seg.close(unlink=self.hints.unlink,
+                                  discard=self.hints.discard)
+                    except BaseException as e:
+                        # close every remaining segment before surfacing:
+                        # one unreachable rank must not leak the others
+                        errors.append(e)
         self.freed = True
         self.comm._unregister(self)
         if errors:

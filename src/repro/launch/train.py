@@ -4,6 +4,14 @@ Runs the real Trainer.  With ``--smoke`` (default on CPU) the reduced
 config executes locally; on a TPU slice the full config shards over the
 production mesh (the dry-run in launch/dryrun.py proves every cell's
 sharding compiles before you burn pod-hours on it).
+
+Rank bootstrap: the trainer's :class:`~repro.core.comm.Communicator` is
+built from the environment -- ``REPRO_TRANSPORT`` selects the window
+transport (``inproc`` default, ``mp`` for real per-rank worker processes),
+``REPRO_NRANKS`` the world size and ``REPRO_RANK`` this process's identity
+-- or explicitly via ``--transport``/``--nranks``.  Checkpoint windows
+(and the out-of-core optimizer state) then ride whichever transport was
+picked, with an on-disk layout that is identical across backends.
 """
 
 from __future__ import annotations
@@ -13,6 +21,7 @@ import argparse
 import jax
 
 from repro.configs import ARCHS, OFFLOAD_ARCHS, get_config
+from repro.core.comm import Communicator
 from repro.data import SyntheticLM, make_batch_iter
 from repro.launch.mesh import make_production_mesh
 from repro.runtime.sharding import train_rules, use_rules
@@ -36,6 +45,10 @@ def main() -> None:
     ap.add_argument("--mesh", action="store_true",
                     help="shard over the production mesh (TPU slice)")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--transport", choices=("inproc", "mp"), default=None,
+                    help="window transport (default: $REPRO_TRANSPORT or inproc)")
+    ap.add_argument("--nranks", type=int, default=None,
+                    help="communicator size (default: $REPRO_NRANKS or 1)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -53,13 +66,17 @@ def main() -> None:
         rules = train_rules(args.multi_pod)
     ds = SyntheticLM(cfg, batch=args.batch, seq=args.seq,
                      microbatches=args.microbatches)
-    tr = Trainer(cfg, opt, tc, mesh=mesh, rules=rules)
+    comm = Communicator.from_env(transport=args.transport,
+                                 nranks=args.nranks)
+    tr = Trainer(cfg, opt, tc, mesh=mesh, rules=rules, comm=comm)
     with use_rules(rules, mesh):
         tr.run(make_batch_iter(iter(ds)))
     losses = [m["loss"] for m in tr.metrics_log]
     print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
-          f"({len(losses)} steps on {jax.device_count()} device(s))")
+          f"({len(losses)} steps on {jax.device_count()} device(s), "
+          f"transport={comm.transport.kind} x{comm.size})")
     tr.close()
+    comm.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,109 @@
+"""Adaptive write-back watermarks: EWMA throughput -> high-mark sizing."""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Communicator, Window, WritebackPool
+
+
+def _sleep_flush(nbytes, seconds):
+    def task():
+        time.sleep(seconds)
+        return nbytes
+    return task
+
+
+def test_ewma_tracked_without_adaptive_mode():
+    pool = WritebackPool(1)
+    try:
+        t = pool.submit(_sleep_flush(1 << 20, 0.02), nbytes=1 << 20,
+                        sample=True)
+        t.wait()
+        pool.drain()
+        s = pool.stats()
+        assert s["ewma_bytes_per_s"] is not None
+        assert s["ewma_bytes_per_s"] > 0
+        # no bound requested, no latency target: stays unbounded
+        assert s["adaptive"] is False
+        assert s["high_watermark"] is None
+    finally:
+        pool.shutdown()
+
+
+def test_adaptive_high_watermark_tracks_throughput():
+    # ~50 MB/s simulated flush throughput, 0.1 s latency target
+    # => high ~= 2 * 50e6 * 0.1 = 10 MB (within EWMA noise)
+    nbytes = 5 << 20
+    per_task = nbytes / 50e6
+    pool = WritebackPool(1, target_latency=0.1)
+    try:
+        assert pool.stats()["adaptive"] is True
+        assert pool.stats()["high_watermark"] is None  # no measurement yet
+        for _ in range(6):
+            pool.submit(_sleep_flush(nbytes, per_task), nbytes=nbytes,
+                        sample=True).wait()
+        s = pool.stats()
+        assert s["high_watermark"] is not None
+        want = 2 * s["ewma_bytes_per_s"] * 0.1
+        assert s["high_watermark"] == pytest.approx(want, rel=0.01)
+        # the 2x headroom puts it in the right ballpark of 10 MB
+        assert (5 << 20) < s["high_watermark"] < (40 << 20)
+        assert s["low_watermark"] == s["high_watermark"] // 2
+    finally:
+        pool.shutdown()
+
+
+def test_adaptive_floor():
+    pool = WritebackPool(1, target_latency=0.001)
+    try:
+        # pathetic throughput: 1 KiB over 50 ms -> raw high ~41 bytes
+        pool.submit(_sleep_flush(1024, 0.05), nbytes=1024, sample=True).wait()
+        pool.drain()
+        assert pool.stats()["high_watermark"] == WritebackPool.ADAPTIVE_FLOOR
+    finally:
+        pool.shutdown()
+
+
+def test_unsampled_tasks_do_not_feed_ewma():
+    pool = WritebackPool(1, target_latency=0.1)
+    try:
+        # rput-style task: bytes charged but excluded from the estimate
+        pool.submit(lambda: None, nbytes=1 << 20).wait()
+        pool.drain()
+        s = pool.stats()
+        assert s["ewma_bytes_per_s"] is None
+        assert s["high_watermark"] is None
+    finally:
+        pool.shutdown()
+
+
+def test_static_bound_wins_over_target_latency():
+    pool = WritebackPool(1, max_inflight_bytes=1 << 16, target_latency=0.5)
+    try:
+        assert pool.stats()["adaptive"] is False
+        pool.submit(_sleep_flush(1 << 20, 0.01), nbytes=1 << 12,
+                    sample=True).wait()
+        pool.drain()
+        assert pool.stats()["high_watermark"] == 1 << 16  # untouched
+    finally:
+        pool.shutdown()
+
+
+def test_window_exposes_adaptive_choice(tmp_path):
+    comm = Communicator(1)
+    win = Window.allocate(comm, 1 << 20, info={
+        "alloc_type": "storage",
+        "storage_alloc_filename": str(tmp_path / "w.bin")},
+        target_flush_latency=0.25)
+    try:
+        win.put(np.full(1 << 18, 3, np.uint8), 0, 0)
+        win.flush_async(0).wait()
+        stats = win.pool_stats()
+        assert stats["adaptive"] is True
+        assert stats["target_latency"] == 0.25
+        assert stats["ewma_bytes_per_s"] is not None
+        assert stats["high_watermark"] >= WritebackPool.ADAPTIVE_FLOOR
+    finally:
+        win.free()

@@ -1,0 +1,338 @@
+"""Transport conformance: the same window semantics over both backends.
+
+Every test in the parametrized half runs twice -- once on the in-process
+transport, once on the multiprocess transport (4 real worker processes) --
+and must observe identical behavior: that is the contract that lets every
+higher layer (DHT, MapReduce, checkpoints) ignore where ranks live.
+
+The mp-only half covers what only real processes can show: shared-memory
+windows, worker-kill fault tolerance with recovery from the storage
+window, and unreachable-rank errors.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (Communicator, DistributedHashTable, MapReduce1S,
+                        TransportError, Window)
+from repro.core.mapreduce import wordcount_map
+
+try:
+    import multiprocessing.shared_memory  # noqa: F401
+    HAVE_SHM = True
+except ImportError:  # pragma: no cover - exotic platforms
+    HAVE_SHM = False
+
+BACKENDS = ["inproc", "mp"]
+
+
+def _skip_if_unavailable(kind: str) -> None:
+    if kind == "mp" and not HAVE_SHM:
+        pytest.skip("multiprocessing.shared_memory unavailable")
+
+
+@pytest.fixture(scope="module", params=BACKENDS)
+def comm4(request):
+    """One 4-rank communicator per backend, shared by the module (spawning
+    worker processes per test would dominate the suite's runtime)."""
+    _skip_if_unavailable(request.param)
+    comm = Communicator(4, transport=request.param)
+    yield comm
+    comm.close()
+
+
+def storage_info(tmp_path, name="w.bin"):
+    return {"alloc_type": "storage",
+            "storage_alloc_filename": str(tmp_path / name)}
+
+
+# -- one-sided conformance ----------------------------------------------------
+
+def test_memory_window_put_get(comm4):
+    with Window.allocate(comm4, 1024) as win:
+        for r in range(comm4.size):
+            win.put(np.full(16, r + 1, np.uint8), r, 8 * r)
+        for r in range(comm4.size):
+            assert (win.get(r, 8 * r, 16) == r + 1).all()
+
+
+def test_storage_window_put_get_sync(comm4, tmp_path):
+    with Window.allocate(comm4, 8192, info=storage_info(tmp_path)) as win:
+        data = np.arange(256, dtype=np.int64)
+        win.put(data.view(np.uint8), 3, 64)
+        assert (win.get(3, 64, 256, np.int64) == data).all()
+        assert win.dirty_bytes(3) > 0
+        flushed = win.sync(3)
+        assert flushed > 0
+        assert win.dirty_bytes(3) == 0
+        assert win.sync(3) == 0  # already synchronized
+    # durability: the bytes are on disk under the per-rank naming scheme
+    raw = np.fromfile(str(tmp_path / "w.bin.3"), dtype=np.uint8)
+    assert (raw[64:64 + 256 * 8].view(np.int64) == data).all()
+
+
+def test_accumulate_parity(comm4):
+    ops = ["sum", "prod", "min", "max", "band", "bor", "replace"]
+    expect = {"sum": np.add, "prod": np.multiply, "min": np.minimum,
+              "max": np.maximum, "band": np.bitwise_and,
+              "bor": np.bitwise_or}
+    for op in ops:
+        with Window.allocate(comm4, 64) as win:
+            init = np.array([12], np.int64)
+            win.put(init.view(np.uint8), 2, 0)
+            val = np.array([7], np.int64)
+            win.accumulate(val, 2, 0, op=op)
+            got = win.get(2, 0, 1, np.int64)[0]
+            want = val[0] if op == "replace" else expect[op](init, val)[0]
+            assert got == want, op
+
+
+def test_get_accumulate_and_fetch_op(comm4):
+    with Window.allocate(comm4, 64) as win:
+        win.put(np.array([100], np.int64).view(np.uint8), 0, 0)
+        old = win.get_accumulate(np.array([5], np.int64), 0, 0, "sum")
+        assert old[0] == 100
+        assert win.fetch_and_op(1, 0, 0, "sum") == 105
+        assert win.get(0, 0, 1, np.int64)[0] == 106
+
+
+def test_compare_and_swap(comm4):
+    with Window.allocate(comm4, 64) as win:
+        win.put(np.array([-1], np.int64).view(np.uint8), 3, 0)
+        assert win.compare_and_swap(10, -1, 3, 0) == -1   # swaps
+        assert win.compare_and_swap(20, -1, 3, 0) == 10   # refuses
+        assert win.get(3, 0, 1, np.int64)[0] == 10
+
+
+def test_rput_rget_flush_pipeline(comm4, tmp_path):
+    with Window.allocate(comm4, 4096, info=storage_info(tmp_path)) as win:
+        reqs = [win.rput(np.full(64, r + 1, np.uint8), r, 0)
+                for r in range(comm4.size)]
+        for r in reqs:
+            r.wait()
+        got = [win.rget(r, 0, 64).wait() for r in range(comm4.size)]
+        for r, g in enumerate(got):
+            assert (g == r + 1).all()
+        assert win.flush_async(2).wait() > 0
+
+
+# -- collectives --------------------------------------------------------------
+
+def test_barrier_ordering(comm4):
+    """Operations issued before a barrier are visible after it completes on
+    every rank (channel-FIFO completion under mp)."""
+    before = comm4.barrier_count
+    with Window.allocate(comm4, 64) as win:
+        for r in range(comm4.size):
+            win.put(np.full(8, 42, np.uint8), r, 0)
+        comm4.barrier()
+        for r in range(comm4.size):
+            assert (win.get(r, 0, 8) == 42).all()
+    assert comm4.barrier_count >= before + 1
+
+
+def test_allreduce_parity(comm4):
+    vals = [1.5, -2.0, 7.25, 3.0]
+    assert comm4.allreduce(vals, "sum") == pytest.approx(9.75)
+    assert comm4.allreduce(vals, "max") == pytest.approx(7.25)
+    assert comm4.allreduce(vals, "min") == pytest.approx(-2.0)
+    # array-valued contributions
+    mat = [np.full(3, r, np.int64) for r in range(comm4.size)]
+    np.testing.assert_array_equal(comm4.allreduce(mat, "sum"),
+                                  np.full(3, 6, np.int64))
+    # already-reduced (non-list) input passes through
+    assert comm4.allreduce(5.0) == 5.0
+
+
+def test_allreduce_wrong_length_raises(comm4):
+    with pytest.raises(ValueError, match="contribution per rank"):
+        comm4.allreduce([1, 2], "sum")
+    with pytest.raises(ValueError, match="contribution per rank"):
+        comm4.allreduce(list(range(comm4.size + 1)), "sum")
+
+
+def test_bcast(comm4):
+    assert comm4.bcast(42) == 42
+    assert comm4.bcast({"k": [1, 2, 3]}, root=2) == {"k": [1, 2, 3]}
+    with pytest.raises(ValueError):
+        comm4.bcast(1, root=comm4.size)
+
+
+def test_split_translated_ranks(comm4):
+    sub = comm4.split(color=1, ranks=[1, 3])
+    assert sub.size == 2
+    assert sub.color == 1
+    assert sub.parent_ranks == (1, 3)
+    assert sub.translate_rank(0) == 1 and sub.translate_rank(1) == 3
+    assert sub.group_rank(3) == 1 and sub.group_rank(0) is None
+    # the sub-communicator is fully functional and has its own registry
+    with Window.allocate(sub, 128) as win:
+        assert sub.active_windows() == 1
+        assert comm4.active_windows() == 0
+        win.put(np.full(4, 9, np.uint8), 1, 0)
+        assert (win.get(1, 0, 4) == 9).all()
+    assert sub.allreduce([10, 20], "sum") == 30
+    # nested split translates to the root communicator
+    subsub = sub.split(color=0, ranks=[1])
+    assert subsub.parent_ranks == (3,)
+    sub.close()
+
+
+def test_split_validates_ranks(comm4):
+    with pytest.raises(ValueError):
+        comm4.split(0, [])
+    with pytest.raises(ValueError):
+        comm4.split(0, [0, 0])
+    with pytest.raises(ValueError):
+        comm4.split(0, [0, comm4.size])
+
+
+# -- applications behave identically across backends --------------------------
+
+def _dht_fill(comm, tmp_path):
+    dht = DistributedHashTable(comm, 128, info=storage_info(tmp_path, "dht.bin"))
+    rng = np.random.default_rng(7)
+    for k in rng.integers(1, 1 << 40, 200):
+        dht.insert(int(k), 1, op="sum")
+    items = sorted(dht.items())
+    dht.free()
+    return items
+
+
+def test_dht_results_match_reference(comm4, tmp_path):
+    """The DHT contents depend only on keys/hashing, never on the backend:
+    compare against a freshly computed in-process reference."""
+    ref_comm = Communicator(4, transport="inproc")  # pinned reference
+    ref = _dht_fill(ref_comm, tmp_path / "ref")
+    ref_comm.close()
+    got = _dht_fill(comm4, tmp_path / "run")
+    assert got == ref
+
+
+def test_mapreduce_results_match_reference(comm4, tmp_path):
+    rng = np.random.default_rng(3)
+    words = "alpha beta gamma delta epsilon zeta".split()
+    tasks = [" ".join(rng.choice(words, 60)) for _ in range(8)]
+    expect = {}
+    for t in tasks:
+        for k, v in wordcount_map(t).items():
+            expect[k] = expect.get(k, 0) + v
+    mr = MapReduce1S(comm4, 1 << 8, info=storage_info(tmp_path, "mr.bin"))
+    mr.run(tasks)
+    assert mr.result() == expect
+    assert mr.completed_tasks() == len(tasks)
+    mr.free()
+
+
+# -- multiprocess-only behavior ----------------------------------------------
+
+needs_shm = pytest.mark.skipif(not HAVE_SHM,
+                               reason="multiprocessing.shared_memory unavailable")
+
+
+@needs_shm
+def test_mp_memory_window_is_shared_memory():
+    comm = Communicator(2, transport="mp")
+    try:
+        with Window.allocate(comm, 256) as win:
+            # baseptr is a zero-copy view of the worker's shared mapping:
+            # a direct store is visible through the one-sided interface
+            view = win.baseptr(1)
+            view[3] = 77
+            assert win.get(1, 3, 1)[0] == 77
+            # and the worker-side accumulate sees the driver's store
+            win.accumulate(np.array([1], np.uint8), 1, 3, op="sum")
+            assert view[3] == 78
+            del view  # release the mapping before free() closes the shm
+    finally:
+        comm.close()
+
+
+@needs_shm
+def test_mp_dynamic_windows_rejected():
+    comm = Communicator(2, transport="mp")
+    try:
+        with pytest.raises(Exception, match="in-process transport"):
+            Window.create_dynamic(comm)
+    finally:
+        comm.close()
+
+
+@needs_shm
+def test_mp_worker_kill_detected_and_recovery(tmp_path):
+    """Kill a rank's worker mid-run: operations against it fail loudly, its
+    un-synced page cache is lost (the paper's failure model), and a fresh
+    transport over the same storage-window files resumes from the last
+    checkpoint -- replaying, never skipping, the unfinished tasks."""
+    rng = np.random.default_rng(11)
+    words = "one two three four five six seven".split()
+    tasks = [" ".join(rng.choice(words, 50)) for _ in range(8)]
+    expect = {}
+    for t in tasks:
+        for k, v in wordcount_map(t).items():
+            expect[k] = expect.get(k, 0) + v
+
+    comm = Communicator(4, transport="mp")
+    mr = MapReduce1S(comm, 1 << 8, info=storage_info(tmp_path, "mr.bin"))
+    # rank 0 commits two tasks (each commit checkpoints table + progress)
+    my0 = mr._tasks_of(0, len(tasks))
+    for pos in range(2):
+        for k, v in wordcount_map(tasks[my0[pos]]).items():
+            mr.table.insert(k, v, op="sum")
+        mr._commit_task(0, pos)
+    mr._drain_ckpt()  # the overlapped checkpoint is on storage
+    done = mr.completed_tasks()
+    assert done == 2
+
+    # SIGKILL one worker: the process dies page cache and all
+    victim = comm.transport._procs[1]
+    victim.kill()
+    victim.join(timeout=10)
+    with pytest.raises(TransportError, match="unreachable"):
+        mr.table.win.get(1, 0, 8)
+    # cleanup must not leak the surviving workers: close() surfaces the
+    # dead rank but still frees every other segment and stops the workers
+    with pytest.raises(TransportError):
+        comm.close()
+    for p in comm.transport._procs:
+        assert not p.is_alive()
+
+    # restart: fresh workers over the same files resume at the first
+    # unfinished task and the final result equals a clean run
+    comm2 = Communicator(4, transport="mp")
+    mr2 = MapReduce1S(comm2, 1 << 8, info=storage_info(tmp_path, "mr.bin"),
+                      resume=True)
+    assert mr2.completed_tasks() == done  # progress survived the kill
+    mr2.run(tasks)
+    assert mr2.result() == expect
+    mr2.free()
+    comm2.close()
+
+
+@needs_shm
+def test_mp_transport_env_bootstrap(monkeypatch):
+    monkeypatch.setenv("REPRO_TRANSPORT", "mp")
+    monkeypatch.setenv("REPRO_NRANKS", "2")
+    monkeypatch.setenv("REPRO_RANK", "1")
+    comm = Communicator.from_env()
+    try:
+        assert comm.transport.kind == "mp"
+        assert comm.size == 2
+        assert comm.rank == 1
+    finally:
+        comm.close()
+
+
+def test_rank_outside_size_rejected_at_bootstrap():
+    with pytest.raises(ValueError, match="outside communicator"):
+        Communicator(4, rank=5)
+    with pytest.raises(ValueError, match="outside communicator"):
+        Communicator(4, rank=-1)
+
+
+def test_inproc_env_default(monkeypatch):
+    monkeypatch.delenv("REPRO_TRANSPORT", raising=False)
+    monkeypatch.delenv("REPRO_NRANKS", raising=False)
+    comm = Communicator.from_env(3)
+    assert comm.transport.kind == "inproc" and comm.size == 3
+    comm.close()
