@@ -1,0 +1,137 @@
+"""Replication cost and recovery benchmark (resilience subsystem).
+
+Two questions the failure-model matrix can't answer by itself:
+
+1. **What does k cost on the write path?**  Every ``sync`` epoch writes
+   the dirty spans once per copy (primary flush + k-1 mirror writes, each
+   with its own durability sync), so the expected overhead of k=2 is ~2x
+   the k=1 path -- the enforced gate is <= 2.5x (REPLICATION_GATE) on the
+   local backend, leaving headroom for fsync jitter but failing loudly if
+   mirroring ever grows super-linear work.
+2. **How long is the recovery window?**  Under the mp transport: SIGKILL a
+   worker, then time (a) the first failover read served by a replica and
+   (b) ``comm.rebuild_rank`` -- respawn + page-diff reconciliation -- back
+   to full chain membership.  Skipped where shared_memory is unavailable.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import Bench, workdir
+from repro.core import Communicator, Window
+
+RANKS = 4
+SIZE = 2 << 20       # per-rank partition
+CHUNK = 256 << 10    # staging granularity
+ITERS = 6
+REPLICATION_GATE = 2.5  # enforced: k=2 write path <= 2.5x the k=1 path
+
+try:
+    import multiprocessing.shared_memory  # noqa: F401
+    HAVE_SHM = True
+except ImportError:  # pragma: no cover - exotic platforms
+    HAVE_SHM = False
+
+
+def _mk_win(d: str, name: str, comm: Communicator, k: int) -> Window:
+    return Window.allocate(comm, SIZE, info={
+        "alloc_type": "storage",
+        "storage_alloc_filename": f"{d}/{name}.bin",
+        "storage_alloc_replication": str(k)})
+
+
+def _write_epochs(win: Window, iters: int) -> float:
+    """put-the-window + sync epochs against rank 0; returns seconds."""
+    t0 = time.perf_counter()
+    for i in range(iters):
+        for c in range(SIZE // CHUNK):
+            data = np.full(CHUNK, (i * 37 + c) % 251, np.uint8)
+            win.put(data, 0, c * CHUNK)
+        win.sync(0)
+    return time.perf_counter() - t0
+
+
+def _overhead(bench: Bench, d: str) -> float:
+    """k=1/2/3 mirrored-write cost on the local backend; returns t2/t1."""
+    # pinned local backend (explicit: $REPRO_TRANSPORT must not leak in)
+    comm = Communicator(RANKS, transport="inproc")
+    times = {}
+    try:
+        for k in (1, 2, 3):
+            win = _mk_win(d, f"rep{k}", comm, k)
+            _write_epochs(win, 1)  # warm the page cache / file allocation
+            times[k] = _write_epochs(win, ITERS)
+            win.free()
+    finally:
+        comm.close()
+    mb = SIZE * ITERS / 1e6
+    for k, t in times.items():
+        bench.add(f"write_sync/k{k}", t, calls=ITERS,
+                  derived=f"{mb / t:.0f}MB/s")
+    for k in (2, 3):
+        bench.add(f"overhead/k{k}", 0.0,
+                  derived=f"{times[k] / times[1]:.2f}x_vs_k1")
+    return times[2] / times[1]
+
+
+def _recovery(bench: Bench, d: str) -> None:
+    """SIGKILL -> failover-read latency + respawn/rebuild time (mp)."""
+    comm = Communicator(RANKS, transport="mp")
+    try:
+        win = _mk_win(d, "recover", comm, 2)
+        blob = np.arange(SIZE, dtype=np.uint8) % 251
+        victim = 1
+        win.put(blob, victim, 0)
+        win.sync(victim)  # durable on primary AND replica
+        proc = comm.transport._procs[victim]
+        proc.kill()
+        proc.join(timeout=10)
+        t0 = time.perf_counter()
+        assert comm.probe(victim) is False
+        back = win.get(victim, 0, SIZE)
+        t_failover = time.perf_counter() - t0
+        assert (back == blob).all(), "failover read lost synced data"
+        t0 = time.perf_counter()
+        copied = comm.rebuild_rank(victim)
+        t_rebuild = time.perf_counter() - t0
+        assert (win.get(victim, 0, SIZE) == blob).all()
+        bench.add("recovery/failover_first_read", t_failover, 1,
+                  derived=f"{SIZE / 1e6 / t_failover:.0f}MB/s")
+        bench.add("recovery/rebuild", t_rebuild, 1,
+                  derived=f"copied={copied}B")
+        win.free()
+    finally:
+        comm.close()
+
+
+def run(bench: Bench) -> float:
+    """Returns the k=2/k=1 overhead ratio; raises past REPLICATION_GATE.
+
+    Transports are pinned by design: the gate on the local backend (the
+    satellite's contract, and the only apples-to-apples mirroring cost),
+    the recovery half on mp (SIGKILL needs a real process to kill).
+    """
+    with workdir("replication") as d:
+        ratio = _overhead(bench, d)
+        if HAVE_SHM:
+            _recovery(bench, d)
+        else:
+            bench.add("recovery/skipped", 0.0,
+                      derived="no_shared_memory")
+    if ratio > REPLICATION_GATE:
+        raise RuntimeError(
+            f"replication gate: k=2 write overhead {ratio:.2f}x exceeds "
+            f"{REPLICATION_GATE}x the k=1 path")
+    return ratio
+
+
+if __name__ == "__main__":
+    argparse.ArgumentParser(
+        description=__doc__.splitlines()[0]).parse_args()
+    b = Bench("replication")
+    run(b)
+    b.emit()

@@ -9,7 +9,15 @@ Suites:
   mapreduce        -- paper Fig. 12   (transparent-ckpt overhead vs rewrite)
   combined_win     -- paper Fig. 13   (combined-allocation throughput)
   async_win        -- nonblocking rput+flush_async vs blocking put+sync
+  replication      -- mirrored-write overhead vs k + SIGKILL recovery time
+                      (enforced gate: k=2 <= 2.5x the k=1 write path)
   roofline         -- this task's §Roofline (from dry-run artifacts)
+
+``--transport {inproc,mp}`` is passed through to the suites that take one
+(hacc_io, async_win): their windows then run over real worker processes,
+reproducing the paper's figures with genuine process-boundary traffic.
+(replication pins its own transports: the overhead gate to the local
+backend, the SIGKILL recovery half to mp.)
 """
 
 from __future__ import annotations
@@ -21,12 +29,21 @@ import traceback
 from benchmarks.common import Bench
 
 SUITES = ("imb_rma", "mstream", "dht", "hacc_io", "mapreduce",
-          "combined_win", "async_win", "selective_sync", "roofline")
+          "combined_win", "async_win", "selective_sync", "replication",
+          "roofline")
+
+#: suites whose run() accepts a transport passthrough (replication is NOT
+#: one: its gate is pinned to the local backend, its recovery half to mp)
+TRANSPORT_AWARE = ("hacc_io", "async_win")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=SUITES, default=None)
+    ap.add_argument("--transport", choices=("inproc", "mp"), default=None,
+                    help="transport for the transport-aware suites "
+                         f"{TRANSPORT_AWARE} (default: $REPRO_TRANSPORT "
+                         "or inproc)")
     args = ap.parse_args()
     failures = []
     for name in SUITES:
@@ -50,9 +67,14 @@ def main() -> None:
                 from benchmarks import async_win as m
             elif name == "selective_sync":
                 from benchmarks import selective_sync as m
+            elif name == "replication":
+                from benchmarks import replication as m
             else:
                 from benchmarks import roofline as m
-            m.run(bench)
+            if name in TRANSPORT_AWARE:
+                m.run(bench, transport=args.transport)
+            else:
+                m.run(bench)
             bench.emit()
         except Exception:
             failures.append(name)

@@ -54,4 +54,8 @@ else
     # below the ratio)
     timeout 300 "${MP_ENV[@]}" python -m benchmarks.async_win \
         --transport mp --min-speedup 1.5
+    # kill-and-rebuild smoke (resilience subsystem): SIGKILL a
+    # replica-holding worker mid-traffic, assert continued DHT service via
+    # failover (zero lost synced data) and a bit-exact respawn+rebuild
+    timeout 300 "${MP_ENV[@]}" python examples/replicated_failover.py
 fi

@@ -71,7 +71,16 @@ class CheckpointManager:
                  rank: int | None = None, double_buffer: bool = True,
                  mechanism: str = "cached", writeback_interval: float | None = None,
                  striping_factor: int = 1, striping_unit: int = 1 << 20,
-                 page_size_hint: int | None = None, snapshot_diff: bool = True):
+                 page_size_hint: int | None = None, snapshot_diff: bool = True,
+                 replication: int = 1):
+        """``replication=k`` passes the ``storage_alloc_replication`` hint
+        to both checkpoint windows: every save's flush then mirrors the
+        changed pages to k-1 replica ranks *before* the manifest commits
+        (the window's sync/flush epoch means k durable copies), and a
+        ``restore`` whose primary rank died reads transparently from a
+        replica -- the checkpoint survives rank death without a restart.
+        Requires ``comm.size >= k`` (clamped otherwise, like every hint).
+        """
         self.directory = directory
         self.comm = comm
         # SPMD wiring: by default each process checkpoints its own rank's
@@ -94,6 +103,8 @@ class CheckpointManager:
                 "striping_factor": str(striping_factor),
                 "striping_unit": str(striping_unit),
             }
+            if replication > 1:
+                info["storage_alloc_replication"] = str(replication)
             self.windows[name] = WindowedPyTree.allocate(
                 comm, self.specs, info, rank=self.rank, mechanism=mechanism,
                 writeback_interval=writeback_interval)

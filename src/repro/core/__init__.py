@@ -14,6 +14,10 @@ Public API:
     CombinedSegment                   heterogeneous memory+storage allocation
     DirtyTracker / backings           user-level page cache + selective sync
     WindowedArray / WindowedPyTree    JAX bridge (out-of-core tensors)
+    ReplicaPlacement / FailureDetector  resilience subsystem: replicated
+                                      partitions, probe-driven failure
+                                      detection, failover reads/writes,
+                                      live rebuild (repro.core.resilience)
     DistributedHashTable              paper §3.3 reference application
     MapReduce1S                       paper §3.5.2 reference application
 """
@@ -32,6 +36,7 @@ from .storage import (
     make_backing,
 )
 from .combined import CombinedSegment
+from .resilience import FailureDetector, ReplicaPlacement
 from .window import (LOCK_EXCLUSIVE, LOCK_SHARED, Request, Window,
                      WindowError, alloc_mem)
 from .offload import WindowedArray, WindowedPyTree, auto_factor
@@ -55,6 +60,8 @@ __all__ = [
     "WritebackPool",
     "make_backing",
     "CombinedSegment",
+    "FailureDetector",
+    "ReplicaPlacement",
     "LOCK_EXCLUSIVE",
     "LOCK_SHARED",
     "Request",

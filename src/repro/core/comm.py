@@ -49,6 +49,9 @@ class Communicator:
             self._owns_transport = True
         self._windows: list = []
         self.barrier_count = 0
+        # ranks known dead (probe- or error-detected); replicated windows
+        # consult this set to fail reads/writes over to live replicas
+        self._dead: set[int] = set()
         # sub-communicator bookkeeping (identity mapping at the top level)
         self.color: int | None = None
         self.parent_ranks: tuple[int, ...] = tuple(range(size))
@@ -126,6 +129,59 @@ class Communicator:
             return self.parent_ranks.index(parent_rank)
         except ValueError:
             return None
+
+    # -- liveness / resilience ----------------------------------------------
+    @property
+    def dead_ranks(self) -> set[int]:
+        """Ranks currently considered dead (read-only view)."""
+        return self._dead
+
+    def probe(self, rank: int) -> bool:
+        """Liveness of ``rank``: False once marked dead, else the
+        transport's :meth:`~repro.core.transport.base.Transport.probe`.
+        A failed probe marks the rank dead, flipping every replicated
+        window into failover routing before the first hung call."""
+        if rank < 0 or rank >= self.size:
+            raise ValueError(
+                f"probe rank {rank} outside communicator of size {self.size}")
+        if rank in self._dead:
+            return False
+        if rank == self.rank:
+            return True
+        alive = self.transport.probe(rank)
+        if not alive:
+            self._dead.add(rank)
+        return alive
+
+    def mark_dead(self, rank: int) -> None:
+        """Record ``rank`` as dead (error- or probe-detected, or a
+        simulated failure in tests): replicated windows stop routing to
+        it until :meth:`mark_alive` / :meth:`rebuild_rank`."""
+        if 0 <= rank < self.size:
+            self._dead.add(rank)
+
+    def mark_alive(self, rank: int) -> None:
+        self._dead.discard(rank)
+
+    def rebuild_rank(self, rank: int) -> int:
+        """Bring a dead rank back: respawn its worker (transports that can),
+        rebuild everything it hosted in every registered window from the
+        live replicas (page-diff granular), then mark it alive -- traffic
+        routes back to the primary.  Returns bytes copied while
+        reconciling.  See ``repro.core.resilience``.
+        """
+        if rank < 0 or rank >= self.size:
+            raise ValueError(
+                f"rebuild rank {rank} outside communicator of size {self.size}")
+        t = self.transport
+        if hasattr(t, "respawn_rank") and not t.probe(rank):
+            t.respawn_rank(rank)
+        self._dead.add(rank)  # exclude it from acting-holder resolution
+        copied = 0
+        for w in list(self._windows):
+            copied += w.rebuild_rank(rank, mark_alive=False)
+        self.mark_alive(rank)
+        return copied
 
     # -- window registry ----------------------------------------------------
     def _register(self, win) -> None:

@@ -10,7 +10,11 @@ structure runs in memory, on storage, or on a combined allocation
 (out-of-core, §3.4) without touching this file.  The same is true of the
 *transport*: under ``REPRO_TRANSPORT=mp`` the owners are real worker
 processes and every CAS/accumulate executes atomically in the owner's
-progress thread -- still without touching this file.
+progress thread -- still without touching this file.  And the same again
+for *resilience*: with ``replication=k`` the window layer mirrors each
+local volume to k-1 replica ranks at every sync and transparently fails
+``get``/``put``/CAS over to a live replica when the owner dies, so the
+table keeps serving through rank death (``repro.core.resilience``).
 
 Entry layout (3 int64 words): [key, value, next]
     key   == EMPTY sentinel -> slot unused (CAS target for claiming)
@@ -48,13 +52,23 @@ class DistributedHashTable:
     def __init__(self, comm: Communicator, lv_entries: int, *,
                  heap_factor: int = 4, info=None, memory_budget: int | None = None,
                  mechanism: str = "cached", writeback_interval: float | None = None,
-                 resume: bool = False):
+                 resume: bool = False, replication: int = 1):
         """``resume=True`` maps the windows over their existing storage
         files *without* re-initializing the slots -- restart/recovery: the
         table is whatever the last ``sync`` persisted.  Only meaningful for
-        storage windows whose files already exist."""
+        storage windows whose files already exist.
+
+        ``replication=k`` (storage tables only; shorthand for the
+        ``storage_alloc_replication`` info hint) keeps ``k`` copies of
+        every rank's local volume: a ``sync`` then means ``k`` durable
+        copies, and a dead rank's partition keeps serving ``get``/``put``/
+        CAS traffic transparently from its replicas instead of raising
+        ``TransportError`` -- see ``repro.core.resilience``."""
         if lv_entries < 1:
             raise ValueError("lv_entries must be >= 1")
+        if replication > 1:
+            info = dict(info or {})
+            info.setdefault("storage_alloc_replication", str(replication))
         self.comm = comm
         self.lv_entries = lv_entries
         self.heap_entries = heap_factor * lv_entries

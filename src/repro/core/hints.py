@@ -15,6 +15,13 @@ The seven storage hints from the paper:
     storage_alloc_unlink     delete the file at window free
     storage_alloc_discard    skip the final sync at window free
 
+plus one extension hint of this implementation (resilience subsystem):
+    storage_alloc_replication  total copies k >= 1 of each rank's partition
+                               (k-1 replicas on other ranks; see
+                               repro.core.resilience).  Advisory like every
+                               hint: ignored for memory/combined windows and
+                               clamped to the communicator size.
+
 plus the MPI-I/O reserved hints the paper integrates:
     access_style, file_perm, striping_factor, striping_unit
 """
@@ -83,6 +90,8 @@ class WindowHints:
     order: str = "memory_first"
     unlink: bool = False
     discard: bool = False
+    # resilience extension: total copies of each rank's partition (k >= 1)
+    replication: int = 1
     # MPI-I/O reserved hints (paper Section 2.1)
     access_style: str = ""
     file_perm: int = 0o644
@@ -129,6 +138,16 @@ class WindowHints:
             kw["unlink"] = _parse_bool("storage_alloc_unlink", info["storage_alloc_unlink"])
         if "storage_alloc_discard" in info:
             kw["discard"] = _parse_bool("storage_alloc_discard", info["storage_alloc_discard"])
+        if "storage_alloc_replication" in info:
+            try:
+                rep = int(info["storage_alloc_replication"])
+            except ValueError:
+                raise HintError("hint 'storage_alloc_replication': "
+                                "expected integer >= 1") from None
+            if rep < 1:
+                raise HintError("hint 'storage_alloc_replication': "
+                                "must be >= 1")
+            kw["replication"] = rep
         if "access_style" in info:
             style = info["access_style"].strip().lower()
             if style not in _ACCESS_STYLES:

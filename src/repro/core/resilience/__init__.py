@@ -1,0 +1,58 @@
+"""Replicated storage windows: failure detection, failover, live rebuild.
+
+The paper's storage windows make window state *durable* -- a crashed job
+restarts from whatever was synced.  This subsystem makes the job *keep
+serving through* rank death instead of stopping the world: each rank's
+window partition is kept in ``k`` total copies (the
+``storage_alloc_replication`` hint) placed by a rotating chain
+(:class:`ReplicaPlacement`); synced dirty spans are mirrored to the
+replica holders on the existing flush path; ``Transport.probe`` +
+:class:`FailureDetector` turn rank death into an observed event rather
+than a hung call; reads and writes aimed at a dead rank transparently
+fail over to the first live holder in chain order; and
+:func:`rebuild_window_rank` restores a respawned (or spare) worker to
+full chain membership with a page-diff-granular copy.
+
+Failure model (single rank death; "synced" = covered by a completed
+``sync(rank)`` / ``flush(rank)`` epoch):
+
+=============  ==================================  ==========================
+configuration  dead primary                        dead replica holder
+=============  ==================================  ==========================
+k = 1          partition unreachable until         n/a (no replicas)
+               restart/rebuild; synced bytes
+               survive in the rank's backing
+               file; un-synced page cache lost
+k >= 2         reads/writes fail over to the       primary unaffected;
+               first live holder in chain order;   un-mirrored spans stay
+               every synced byte is served (zero   pending (re-marked) and
+               lost synced data); un-synced page   replay on the next sync;
+               cache lost; degraded to k-1         degraded to k-1 copies
+               copies until rebuild                until rebuild
+=============  ==================================  ==========================
+
+Mirroring mode (when the replicas catch up):
+
+* **sync mirroring** -- blocking ``win.sync(rank)`` mirrors inline: on
+  return the epoch is durable on every live holder (k copies).
+* **async mirroring** -- ``win.flush_async(rank)`` runs the same work on
+  the write-back pool: k-durability holds when the request completes,
+  i.e. ``win.flush(rank)`` is the "k durable copies" epoch boundary the
+  checkpoint manager commits manifests against.
+
+Caveats: only pure storage windows replicate (memory and combined windows
+ignore the hint -- replicas must be durable to add fault tolerance);
+writes must go through window operations (``put``/``rput``/accumulates/
+``sync_from_device``) to be mirrored -- raw ``baseptr()``/
+``shared_view()`` stores bypass the mirror bookkeeping; a crash *between*
+a primary's fsync and the mirror completing can leave that epoch's spans
+on the primary's file only -- the chain treats the acting replica as
+authoritative, exactly like a torn checkpoint falls back to the previous
+manifest.
+"""
+
+from .detector import FailureDetector
+from .placement import ReplicaPlacement
+from .rebuild import rebuild_window_rank
+
+__all__ = ["FailureDetector", "ReplicaPlacement", "rebuild_window_rank"]

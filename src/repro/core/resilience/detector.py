@@ -1,0 +1,59 @@
+"""Probe-driven failure detection: Transport.probe -> HeartbeatMonitor.
+
+``HeartbeatMonitor`` (repro.runtime.fault) was built for SPMD step
+heartbeats, but in the single-controller deployments only rank 0 ever
+reports -- under the mp transport the monitor was blind to real worker
+deaths until an operation hung.  ``FailureDetector`` closes that loop:
+each ``poll()`` probes every rank through the communicator's transport
+(``Transport.probe``: trivial under inproc, process/channel liveness under
+mp), beats the monitor for live ranks, and both force-marks dead ranks on
+the monitor and records them on the communicator -- which is what flips
+the window layer into failover routing *before* the first hung call.
+"""
+
+from __future__ import annotations
+
+import time
+
+__all__ = ["FailureDetector"]
+
+
+class FailureDetector:
+    """Poll-based liveness feed for a communicator (and optional monitor).
+
+    ``monitor`` is any object with ``beat(rank, step, now=...)`` and
+    ``mark_dead(rank)`` -- normally a
+    :class:`repro.runtime.fault.HeartbeatMonitor`; ``None`` builds one.
+    ``interval`` rate-limits the actual probing: a ``poll()`` arriving
+    earlier than ``interval`` seconds after the last one only reports the
+    communicator's current dead set (so a training loop can call it every
+    step for free).
+    """
+
+    def __init__(self, comm, monitor=None, *, interval: float = 0.0):
+        self.comm = comm
+        if monitor is None:
+            from repro.runtime.fault import HeartbeatMonitor
+            monitor = HeartbeatMonitor(comm.size)
+        self.monitor = monitor
+        self.interval = interval
+        self._last_poll = -float("inf")
+
+    def poll(self, step: int = 0, now: float | None = None) -> list[int]:
+        """Probe every rank; returns the (sorted) dead ranks.
+
+        Live ranks beat the monitor with ``step``; dead ranks are marked on
+        both the communicator (enabling transparent failover in every
+        registered window) and the monitor (``dead()`` reports them
+        immediately, without waiting out ``dead_timeout``).
+        """
+        t = time.monotonic() if now is None else now
+        if t - self._last_poll < self.interval:
+            return sorted(self.comm.dead_ranks)
+        self._last_poll = t
+        for r in range(self.comm.size):
+            if self.comm.probe(r):
+                self.monitor.beat(r, step, now=now)
+            else:
+                self.monitor.mark_dead(r)
+        return sorted(self.comm.dead_ranks)

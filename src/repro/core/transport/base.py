@@ -126,6 +126,38 @@ class Transport(abc.ABC):
         ``compare_on_write``).  Returns segment handles indexed by rank.
         """
 
+    def allocate_segment(self, rank: int, size: int, hints, spec: dict, *,
+                         name_rank: int, name_nranks: int):
+        """Allocate (or re-map) ONE segment hosted by ``rank``.
+
+        Unlike the collective :meth:`allocate_segments`, this is a targeted
+        call: the resilience layer uses it to place replica copies of rank
+        ``name_rank``'s partition on other ranks and to re-create a
+        respawned rank's segments during rebuild.  ``name_rank``/
+        ``name_nranks`` feed the transport-invariant file naming policy, so
+        the segment maps the same on-disk bytes whichever rank hosts it.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support targeted segment "
+            "allocation (required for replication/rebuild)")
+
+    # -- liveness ----------------------------------------------------------
+    def probe(self, rank: int, timeout: float | None = None) -> bool:
+        """MPI-RMA liveness probe: is ``rank`` able to make progress?
+
+        Returns True when the rank is alive (or liveness cannot be
+        determined without blocking behind in-flight traffic), False when
+        its process is known dead or its control channel is unresponsive.
+        Never raises for a dead rank -- failure-detection callers
+        (``HeartbeatMonitor`` feeds) want a boolean, not an exception; the
+        mp backend converts its internal timeout ``TransportError`` into
+        False.  In-process ranks cannot die: the default is True.
+        """
+        if rank < 0 or rank >= self.size:
+            raise ValueError(
+                f"probe rank {rank} outside transport of size {self.size}")
+        return True
+
     # -- one-sided data movement ------------------------------------------
     def put(self, seg, offset: int, data: np.ndarray) -> None:
         """Write raw bytes into a (possibly remote) segment's memory copy."""

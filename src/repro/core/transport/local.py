@@ -128,6 +128,12 @@ class InprocTransport(Transport):
         return [_make_segment(size, hints, r, self.size, **spec)
                 for r in range(self.size)]
 
+    def allocate_segment(self, rank: int, size: int, hints, spec: dict, *,
+                         name_rank: int, name_nranks: int):
+        # every rank lives here: the hosting rank only matters for the mp
+        # backend's process placement, the naming policy is shared
+        return _make_segment(size, hints, name_rank, name_nranks, **spec)
+
     # Atomicity of the RMW ops comes from the window's target lock (the
     # caller holds it exclusively): every origin is a thread of this
     # process, so a process-local lock serializes them all.

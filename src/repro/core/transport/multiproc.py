@@ -68,6 +68,13 @@ def _call_timeout_s() -> float:
     return float(os.environ.get("REPRO_MP_TIMEOUT", "120"))
 
 
+def _probe_timeout_s() -> float:
+    """Reply timeout for liveness pings -- much tighter than the data-path
+    timeout: a probe must answer "dead or alive" quickly, and it only runs
+    on an otherwise idle channel (``REPRO_MP_PROBE_TIMEOUT`` seconds)."""
+    return float(os.environ.get("REPRO_MP_PROBE_TIMEOUT", "5"))
+
+
 def _shm_open(name: str | None, size: int, create: bool):
     from multiprocessing import shared_memory
     if create:
@@ -310,6 +317,10 @@ def _serve(conn, rank: int) -> None:
                     reply = None
                 elif op == "barrier":
                     reply = None
+                elif op == "ping":
+                    # liveness probe: any reply at all proves the progress
+                    # thread is servicing its channel
+                    reply = rank
                 elif op == "reduce_part":
                     # echo the rank's contribution through the process
                     # boundary (the driver reduces the gathered parts)
@@ -363,7 +374,7 @@ class MultiprocessTransport(Transport):
         super().__init__(size, rank)
         method = (start_method or os.environ.get("REPRO_MP_START")
                   or "spawn")
-        ctx = multiprocessing.get_context(method)
+        self._ctx = multiprocessing.get_context(method)
         self._procs = []
         self._conns = []
         self._chan_locks = [threading.Lock() for _ in range(size)]
@@ -372,25 +383,33 @@ class MultiprocessTransport(Transport):
         self._shutdown_done = False
         try:
             for r in range(size):
-                # duplex Pipe == socket.socketpair() on Unix: the control
-                # channel the progress thread services
-                parent, child = ctx.Pipe(duplex=True)
-                p = ctx.Process(target=_worker_main, args=(child, r),
-                                name=f"repro-rank-{r}", daemon=True)
-                p.start()
-                child.close()
+                p, parent = self._spawn_worker(r)
                 self._procs.append(p)
                 self._conns.append(parent)
             for r, conn in enumerate(self._conns):
-                if not conn.poll(_READY_TIMEOUT_S):
-                    raise TransportError(f"rank {r} worker did not start")
-                tag, got = conn.recv()
-                if tag != "ready" or got != r:
-                    raise TransportError(f"rank {r} worker handshake failed")
+                self._await_ready(r, conn)
         except BaseException:
             self.shutdown()
             raise
         atexit.register(self.shutdown)
+
+    def _spawn_worker(self, rank: int):
+        # duplex Pipe == socket.socketpair() on Unix: the control
+        # channel the progress thread services
+        parent, child = self._ctx.Pipe(duplex=True)
+        p = self._ctx.Process(target=_worker_main, args=(child, rank),
+                              name=f"repro-rank-{rank}", daemon=True)
+        p.start()
+        child.close()
+        return p, parent
+
+    @staticmethod
+    def _await_ready(rank: int, conn) -> None:
+        if not conn.poll(_READY_TIMEOUT_S):
+            raise TransportError(f"rank {rank} worker did not start")
+        tag, got = conn.recv()
+        if tag != "ready" or got != rank:
+            raise TransportError(f"rank {rank} worker handshake failed")
 
     # -- control channel ---------------------------------------------------
     def _call(self, rank: int, msg):
@@ -438,6 +457,84 @@ class MultiprocessTransport(Transport):
         win_id = self._next_win_id()
         return [self._alloc_one(r, win_id, size, hints, spec, r, self.size)
                 for r in range(self.size)]
+
+    def allocate_segment(self, rank: int, size: int, hints, spec: dict, *,
+                         name_rank: int, name_nranks: int):
+        """Targeted allocation: ``rank``'s worker hosts (and owns the page
+        cache of) a segment named after ``name_rank``'s partition -- replica
+        placement and post-respawn rebuild."""
+        return self._alloc_one(rank, self._next_win_id(), size, hints, spec,
+                               name_rank, name_nranks)
+
+    # -- liveness / recovery -----------------------------------------------
+    def probe(self, rank: int, timeout: float | None = None) -> bool:
+        """Liveness of ``rank``'s worker.
+
+        Two-level check: the worker *process* first (cheap ``is_alive`` --
+        catches SIGKILL immediately), then, only if the control channel is
+        idle, a ``ping`` round trip with a tight timeout (catches a live
+        process whose progress thread stopped servicing its channel).  A
+        busy channel is treated as alive -- queueing a ping behind an
+        in-flight storage sync would misreport a slow disk as a death.
+        The internal ``TransportError`` paths all surface as False.
+        """
+        super().probe(rank)  # range check
+        if not self._procs[rank].is_alive():
+            return False
+        lk = self._chan_locks[rank]
+        if not lk.acquire(blocking=False):
+            return True  # channel busy being serviced => making progress
+        try:
+            conn = self._conns[rank]
+            conn.send(("ping",))
+            if not conn.poll(timeout if timeout is not None
+                             else _probe_timeout_s()):
+                # unresponsive: poison the channel (a late reply would
+                # desync the request/reply stream, same as _call's timeout)
+                try:
+                    conn.close()
+                except Exception:
+                    pass
+                return False
+            status, payload = conn.recv()
+            return status == "ok"
+        except (EOFError, OSError, BrokenPipeError):
+            return False
+        finally:
+            lk.release()
+
+    def respawn_rank(self, rank: int) -> None:
+        """Replace a dead rank's worker with a freshly spawned one.
+
+        The new worker starts with no segments -- callers (the window
+        layer's rebuild) must re-allocate everything the rank hosted via
+        :meth:`allocate_segment`.  Refuses to replace a *responsive*
+        worker; a process that is technically alive but probe-dead (wedged
+        progress thread, channel poisoned by a ``_call`` timeout) is
+        terminated first -- both death modes must be recoverable, and its
+        channel is already unusable.
+        """
+        old = self._procs[rank]
+        if old.is_alive():
+            if self.probe(rank):
+                raise TransportError(
+                    f"rank {rank} worker is alive and responsive; "
+                    "refusing to respawn")
+            old.terminate()
+            old.join(timeout=_SHUTDOWN_JOIN_S)
+            if old.is_alive():
+                old.kill()
+        old.join(timeout=_SHUTDOWN_JOIN_S)
+        try:
+            self._conns[rank].close()
+        except Exception:
+            pass
+        p, parent = self._spawn_worker(rank)
+        self._await_ready(rank, parent)
+        self._procs[rank] = p
+        self._conns[rank] = parent
+        # fresh lock: the old channel may have been poisoned mid-_call
+        self._chan_locks[rank] = threading.Lock()
 
     # -- target-side atomics ----------------------------------------------
     @staticmethod
@@ -545,6 +642,19 @@ class _MpSubTransport(Transport):
         return [self.parent._alloc_one(pr, win_id, size, hints, spec,
                                        i, self.size)
                 for i, pr in enumerate(self.ranks)]
+
+    def allocate_segment(self, rank: int, size: int, hints, spec: dict, *,
+                         name_rank: int, name_nranks: int):
+        return self.parent._alloc_one(self.ranks[rank],
+                                      self.parent._next_win_id(), size,
+                                      hints, spec, name_rank, name_nranks)
+
+    def probe(self, rank: int, timeout: float | None = None) -> bool:
+        super().probe(rank)  # range check against the group size
+        return self.parent.probe(self.ranks[rank], timeout)
+
+    def respawn_rank(self, rank: int) -> None:
+        self.parent.respawn_rank(self.ranks[rank])
 
     # segment handles are bound to their worker channel; delegate verbatim
     def accumulate(self, seg, offset, data, op):

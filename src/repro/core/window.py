@@ -105,10 +105,43 @@ Deadlock avoidance: a thread submitting from inside its own lock epoch
 blocked on, or queued behind a writer blocked on, that very lock; the bytes
 are still charged, so the high mark can transiently be exceeded by such an
 epoch.
+
+Replication, failover and rebuild (resilience subsystem)
+--------------------------------------------------------
+
+A pure storage window allocated with the ``storage_alloc_replication=k``
+hint keeps ``k`` total copies of every rank's partition: the primary on the
+rank itself plus ``k-1`` replica segments placed on the following ranks in
+a rotating chain (``repro.core.resilience.ReplicaPlacement``), each backed
+by its own file (``<filename>.rep<j>.<rank>``) owned by the *holder*'s
+process.  Semantics:
+
+* put/get/accumulate traffic always targets the partition's **acting
+  holder** -- the first live rank in chain order.  While the primary is
+  alive that is the primary: zero behavior change, replicas only see
+  mirror traffic.
+* **mirroring rides the flush path**: every ``sync(rank)`` /
+  ``flush_async(rank)`` forwards the spans written since the last mirror
+  from the acting holder to every other live holder and syncs them there,
+  so a completed sync/flush epoch means *k durable copies*
+  (``flush(rank)`` is the epoch boundary the checkpoint manager commits
+  manifests against).  Mirror failures re-mark the spans (replay, never
+  skip).
+* a rank marked dead on the communicator (``comm.mark_dead`` -- fed by
+  ``Transport.probe`` / ``FailureDetector``, or by a ``TransportError``
+  surfacing from any window operation, which fails over transparently and
+  retries) stops receiving traffic; reads and writes serve from the acting
+  replica with every *synced* byte intact.
+* ``rebuild_rank`` (or ``comm.rebuild_rank``) restores a respawned worker
+  to full chain membership: segments re-mapped over the backing files,
+  partition reconciled page-diff-granularly from the acting holder.
+
+See ``repro.core.resilience`` for the failure-model matrix.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from typing import Any
@@ -116,9 +149,10 @@ from typing import Any
 import numpy as np
 
 from .hints import Info, WindowHints
-from .storage import (DEFAULT_PAGE_SIZE, WritebackPool, dirty_runs,
-                      mark_span)
-from .transport.base import ACC_OPS
+from .resilience.placement import ReplicaPlacement
+from .storage import (DEFAULT_PAGE_SIZE, DirtyTracker, WritebackPool,
+                      dirty_runs, mark_span)
+from .transport.base import ACC_OPS, TransportError
 from .transport.local import _make_segment, _MemorySegment, _StorageSegment  # noqa: F401  (re-exported for compat)
 
 __all__ = ["Window", "WindowError", "Request", "LOCK_SHARED",
@@ -244,7 +278,12 @@ class Window:
                  flavor: str, dynamic: bool = False, async_workers: int = 2,
                  max_inflight_bytes: int | None = None,
                  low_watermark: int | None = None,
-                 target_flush_latency: float | None = None):
+                 target_flush_latency: float | None = None,
+                 placement: ReplicaPlacement | None = None,
+                 replica_segs: dict | None = None,
+                 mirror_page_size: int = DEFAULT_PAGE_SIZE,
+                 alloc_size: int | None = None,
+                 alloc_spec: dict | None = None):
         self.comm = comm
         self.segments = segments  # list, one per rank (dynamic: list of lists)
         self.hints = hints
@@ -252,6 +291,19 @@ class Window:
         self.flavor = flavor
         self.dynamic = dynamic
         self.freed = False
+        # resilience: chain placement + replica segments, keyed (rank, copy)
+        # for copy in 1..k-1, plus per-rank mirror-pending span trackers
+        self.placement = placement
+        self.replica_segs = replica_segs or {}
+        self.replication = placement.k if placement is not None else 1
+        self._mirror_page = mirror_page_size
+        self._mirror_pending = (
+            {r: DirtyTracker(segments[r].size, mirror_page_size)
+             for r in range(comm.size)}
+            if placement is not None else {})
+        # remembered allocation geometry (rebuild re-creates segments with it)
+        self._alloc_size = alloc_size
+        self._alloc_spec = dict(alloc_spec) if alloc_spec is not None else {}
         self._locks = [_RWLock() for _ in range(comm.size)]
         self._epoch_depth = [0] * comm.size
         # thread ident -> number of lock epochs it holds on this window
@@ -306,18 +358,37 @@ class Window:
         """
         hints = WindowHints.from_info(info)
         comm.barrier()  # collective
-        segments = comm.transport.allocate_segments(size, hints, dict(
+        spec = dict(
             shared_file=shared_file, memory_budget=memory_budget,
             mechanism=mechanism, page_size=page_size, cache_bytes=cache_bytes,
             writeback_interval=writeback_interval,
-            compare_on_write=compare_on_write))
+            compare_on_write=compare_on_write)
+        segments = comm.transport.allocate_segments(size, hints, spec)
         flavor = ("combined" if hints.is_combined else
                   "storage" if hints.is_storage else "memory")
+        # replication (advisory, like every hint): pure storage windows
+        # only -- replicas must be durable to add fault tolerance -- and
+        # clamped to the communicator size (each copy on a distinct rank)
+        k = (hints.replication
+             if hints.is_storage and not hints.is_combined else 1)
+        k = max(1, min(k, comm.size))
+        placement = ReplicaPlacement(comm.size, k) if k > 1 else None
+        replica_segs: dict = {}
+        if placement is not None:
+            for j in range(1, k):
+                h_j = cls._replica_hints_for(hints, j)
+                for r in range(comm.size):
+                    replica_segs[(r, j)] = comm.transport.allocate_segment(
+                        placement.holders(r)[j], size, h_j, spec,
+                        name_rank=r, name_nranks=comm.size)
         return cls(comm, segments, hints, disp_unit=disp_unit, flavor=flavor,
                    async_workers=async_workers,
                    max_inflight_bytes=max_inflight_bytes,
                    low_watermark=low_watermark,
-                   target_flush_latency=target_flush_latency)
+                   target_flush_latency=target_flush_latency,
+                   placement=placement, replica_segs=replica_segs,
+                   mirror_page_size=page_size, alloc_size=size,
+                   alloc_spec=spec)
 
     @classmethod
     def allocate_shared(cls, comm, size: int, **kw) -> "Window":
@@ -378,26 +449,99 @@ class Window:
             return seg
         return self.segments[rank]
 
+    # -- replication / failover routing --------------------------------------
+    @property
+    def replicated(self) -> bool:
+        return self.placement is not None
+
+    @staticmethod
+    def _replica_hints_for(hints: WindowHints, j: int) -> WindowHints:
+        """Hints for replica generation ``j``: same window, distinct file
+        namespace (the transport's naming policy then appends the *home*
+        rank, so copy ``j`` of rank ``r`` is ``<file>.rep<j>.<r>``)."""
+        return dataclasses.replace(hints, filename=f"{hints.filename}.rep{j}")
+
+    def _replica_hints(self, j: int) -> WindowHints:
+        return self._replica_hints_for(self.hints, j)
+
+    def _holder_of(self, rank: int) -> int:
+        """Acting holder of ``rank``'s partition: the first live rank in
+        chain order (primary first).  Every origin resolves this from the
+        communicator's shared dead set, so they agree without coordination."""
+        if self.placement is None:
+            return rank
+        dead = self.comm.dead_ranks
+        for h in self.placement.holders(rank):
+            if h not in dead:
+                return h
+        raise WindowError(
+            f"no live holder for rank {rank}'s partition "
+            f"(k={self.replication}, dead={sorted(dead)})")
+
+    def _seg_at(self, rank: int, holder: int):
+        """The segment through which ``holder`` serves ``rank``'s bytes."""
+        if holder == rank:
+            return self.segments[rank]
+        return self.replica_segs[(rank, self.placement.copy_index(rank, holder))]
+
+    def _route(self, rank: int, handle: int | None = None):
+        """(segment, acting holder) for ``rank``'s partition; validates
+        freed/rank/handle exactly like :meth:`_seg`."""
+        seg = self._seg(rank, handle)
+        if self.placement is None:
+            return seg, rank
+        holder = self._holder_of(rank)
+        return (seg if holder == rank
+                else self._seg_at(rank, holder)), holder
+
+    def _failover(self, rank: int, fn, *, handle: int | None = None):
+        """Run ``fn(segment)`` against the acting holder; a TransportError
+        marks the holder dead and retries on the next live replica
+        (primary -> chain order).  Non-replicated windows propagate the
+        error unchanged -- zero behavior change without the hint.  The loop
+        terminates: every retry removes a holder, and ``_route`` raises
+        WindowError once none is left."""
+        while True:
+            seg, holder = self._route(rank, handle)
+            try:
+                return fn(seg)
+            except TransportError:
+                if self.placement is None:
+                    raise
+                self.comm.mark_dead(holder)
+
+    def _note_write(self, rank: int, offset: int, nbytes: int) -> None:
+        """Record a written span for mirroring at the next sync/flush."""
+        if self.placement is not None and nbytes > 0:
+            self._mirror_pending[rank].mark(offset, nbytes)
+
     # -- one-sided operations ------------------------------------------------
     def put(self, data: np.ndarray, target_rank: int, target_disp: int = 0,
             *, handle: int | None = None) -> None:
         """MPI_Put: write ``data`` into the target rank's window.
 
         Only the memory copy (page cache) is updated -- storage consistency
-        requires a subsequent ``sync`` (paper §2.1.1).
+        requires a subsequent ``sync`` (paper §2.1.1).  On a replicated
+        window the write targets the partition's acting holder and its span
+        is recorded for mirroring at the next sync.
         """
-        data = np.ascontiguousarray(data)
-        seg = self._seg(target_rank, handle)
-        self.comm.transport.put(seg, target_disp * self.disp_unit,
-                                data.view(np.uint8).ravel())
+        buf = np.ascontiguousarray(data).view(np.uint8).ravel()
+        off = target_disp * self.disp_unit
+        self._failover(target_rank,
+                       lambda seg: self.comm.transport.put(seg, off, buf),
+                       handle=handle)
+        self._note_write(target_rank, off, buf.nbytes)
 
     def get(self, target_rank: int, target_disp: int, count: int,
             dtype=np.uint8, *, handle: int | None = None) -> np.ndarray:
-        """MPI_Get: read ``count`` items of ``dtype`` from the target."""
+        """MPI_Get: read ``count`` items of ``dtype`` from the target (the
+        acting holder, on a replicated window)."""
         dt = np.dtype(dtype)
-        seg = self._seg(target_rank, handle)
-        raw = self.comm.transport.get(seg, target_disp * self.disp_unit,
-                                      count * dt.itemsize)
+        off = target_disp * self.disp_unit
+        raw = self._failover(
+            target_rank,
+            lambda seg: self.comm.transport.get(seg, off, count * dt.itemsize),
+            handle=handle)
         return raw.view(dt)[:count].copy()
 
     # kept as an alias: the op table now lives with the transport layer so
@@ -418,12 +562,15 @@ class Window:
         data = np.ascontiguousarray(data)
         if op == "no_op":
             return
-        seg = self._seg(target_rank, handle)
+        off = target_disp * self.disp_unit
         lock = self._locks[target_rank]
         lock.acquire(exclusive=True)
         try:
-            self.comm.transport.accumulate(
-                seg, target_disp * self.disp_unit, data, op)
+            self._failover(
+                target_rank,
+                lambda seg: self.comm.transport.accumulate(seg, off, data, op),
+                handle=handle)
+            self._note_write(target_rank, off, data.nbytes)
         finally:
             lock.release()
 
@@ -434,12 +581,18 @@ class Window:
         if op not in ACC_OPS:
             raise WindowError(f"unknown accumulate op {op!r}")
         data = np.ascontiguousarray(data)
-        seg = self._seg(target_rank, handle)
+        off = target_disp * self.disp_unit
         lock = self._locks[target_rank]
         lock.acquire(exclusive=True)
         try:
-            return self.comm.transport.get_accumulate(
-                seg, target_disp * self.disp_unit, data, op)
+            old = self._failover(
+                target_rank,
+                lambda seg: self.comm.transport.get_accumulate(
+                    seg, off, data, op),
+                handle=handle)
+            if op != "no_op":
+                self._note_write(target_rank, off, data.nbytes)
+            return old
         finally:
             lock.release()
 
@@ -455,12 +608,17 @@ class Window:
                          *, handle: int | None = None):
         """MPI_Compare_and_swap: atomic CAS; returns the old value."""
         dt = np.dtype(dtype)
-        seg = self._seg(target_rank, handle)
+        off = target_disp * self.disp_unit
         lock = self._locks[target_rank]
         lock.acquire(exclusive=True)
         try:
-            return self.comm.transport.compare_and_swap(
-                seg, target_disp * self.disp_unit, value, compare, dt)
+            old = self._failover(
+                target_rank,
+                lambda seg: self.comm.transport.compare_and_swap(
+                    seg, off, value, compare, dt),
+                handle=handle)
+            self._note_write(target_rank, off, dt.itemsize)
+            return old
         finally:
             lock.release()
 
@@ -529,8 +687,11 @@ class Window:
             lock = self._locks[target_rank]
             lock.acquire(exclusive=False)
             try:
-                self.comm.transport.put(self._seg(target_rank, handle), off,
-                                        buf)
+                self._failover(
+                    target_rank,
+                    lambda seg: self.comm.transport.put(seg, off, buf),
+                    handle=handle)
+                self._note_write(target_rank, off, buf.nbytes)
             finally:
                 lock.release()
 
@@ -615,11 +776,20 @@ class Window:
                     k = pool.begin_flush_sample()
                     t0 = time.monotonic()
                     try:
-                        n = self._sync_rank_segs(r, full, mask)
+                        n = self._sync_rank_segs(r, full, mask,
+                                                 mirror=False)
                     finally:
                         dt = time.monotonic() - t0
                         pool.end_flush_sample(
                             n, self._rank_sync_io(r, dt), k)
+                    if self.placement is not None:
+                        # replica mirroring after the sample closes: its
+                        # seconds would otherwise be charged against
+                        # primary-only bytes.  Still inside the task (and
+                        # the exclusive epoch, if any): request completion
+                        # = k durable copies, and the on_complete manifest
+                        # hook keeps running only after the mirror.
+                        self._mirror_rank(r)
                 finally:
                     if exclusive:
                         self._locks[r].release()
@@ -642,11 +812,20 @@ class Window:
                    for r in ranks]
         return self._register(Request(tickets, combine=sum), ranks)
 
+    def _rank_segs_for_io(self, rank: int) -> list:
+        """Segments a sync of ``rank`` touches (the acting holder's, on a
+        replicated window with the primary dead)."""
+        if self.dynamic:
+            return self.segments[rank]
+        if self.placement is not None:
+            return [self._route(rank)[0]]
+        return [self.segments[rank]]
+
     def _rank_sync_io(self, rank: int, measured: float) -> float:
         """I/O seconds of the rank's just-completed sync: the owner-side
         measurement when every segment reports one (mp transport), else the
         caller's wall measurement (local segments have no channel wait)."""
-        segs = self.segments[rank] if self.dynamic else [self.segments[rank]]
+        segs = self._rank_segs_for_io(rank)
         total = 0.0
         for seg in segs:
             io = getattr(seg, "last_sync_io", None)
@@ -666,7 +845,7 @@ class Window:
         driver-side ``dirty_bytes_estimate`` -- an exact cross-process
         ``dirty_bytes`` query would serialize behind an in-flight sync on
         the same rank's channel."""
-        segs = self.segments[rank] if self.dynamic else [self.segments[rank]]
+        segs = self._rank_segs_for_io(rank)
         total = 0
         for seg in segs:
             if seg is None or not hasattr(seg, "dirty_bytes"):
@@ -686,8 +865,7 @@ class Window:
         ranks = range(self.comm.size) if rank is None else [rank]
         total = 0
         for r in ranks:
-            segs = self.segments[r] if self.dynamic else [self.segments[r]]
-            for seg in segs:
+            for seg in self._rank_segs_for_io(r):
                 if seg is not None and hasattr(seg, "dirty_bytes"):
                     total += seg.dirty_bytes()
         return total
@@ -697,8 +875,10 @@ class Window:
         """Local load/store pointer (memory windows -- including the mp
         transport's shared-memory mappings -- and mmap storage windows
         return a zero-copy numpy view; cached storage and combined windows
-        return the segment itself, which supports read()/write())."""
-        seg = self._seg(rank)
+        return the segment itself, which supports read()/write()).  NB:
+        stores through this pointer bypass the replication mirror
+        bookkeeping (see the resilience module docstring)."""
+        seg, _ = self._route(rank)
         if hasattr(seg, "buf"):  # plain memory or shared-memory segment
             return seg.buf
         if hasattr(seg, "backing") and hasattr(seg.backing, "view"):
@@ -797,18 +977,100 @@ class Window:
             raise WindowError("mask is not supported on dynamic windows")
         return np.asarray(mask, dtype=bool).ravel()
 
-    def _sync_rank_segs(self, rank: int, full: bool, mask) -> int:
+    def _sync_rank_segs(self, rank: int, full: bool, mask,
+                        mirror: bool = True) -> int:
         """Sync every segment of one rank.  The mask kw is only forwarded
         when set: dynamically attached segments may be third-party objects
         whose sync() predates the mask parameter (mask is already rejected
-        for dynamic windows)."""
-        segs = self.segments[rank] if self.dynamic else [self.segments[rank]]
-        total = 0
-        for seg in segs:
-            if seg is not None and hasattr(seg, "sync"):
-                total += (seg.sync(full=full) if mask is None
-                          else seg.sync(full=full, mask=mask))
+        for dynamic windows).
+
+        Replicated windows sync the partition's *acting* holder (failing
+        over on a death discovered right here) and then piggyback the
+        mirror: pending written spans are forwarded to every other live
+        holder and synced there, so the completed epoch means ``k`` durable
+        copies.  Returns the primary-path bytes (mirror bytes are extra
+        copies of the same data, not new persisted state).  ``mirror=False``
+        skips the piggyback -- the flush_async task runs the mirror itself,
+        *outside* its throughput-sample window (mirror seconds with only
+        primary bytes would deflate the adaptive-watermark EWMA by ~k x).
+        """
+        if self.dynamic or self.placement is None:
+            segs = (self.segments[rank] if self.dynamic
+                    else [self.segments[rank]])
+            total = 0
+            for seg in segs:
+                if seg is not None and hasattr(seg, "sync"):
+                    total += (seg.sync(full=full) if mask is None
+                              else seg.sync(full=full, mask=mask))
+            return total
+        total = self._failover(
+            rank, lambda seg: (seg.sync(full=full) if mask is None
+                               else seg.sync(full=full, mask=mask)))
+        if mirror:
+            self._mirror_rank(rank)
         return total
+
+    #: chunk size for reading mirror spans off the acting holder
+    MIRROR_CHUNK = 4 << 20
+
+    def _mirror_rank(self, rank: int) -> int:
+        """Forward the spans written since the last mirror from ``rank``'s
+        acting holder to every other live holder, then sync them there.
+
+        Piggybacked on the flush path (the caller just synced the acting
+        holder).  The source is the acting holder's *memory copy*, which is
+        at least as new as its disk -- a replica may run slightly ahead of
+        the primary's storage, never behind a completed epoch.  Failures
+        re-mark the taken spans so the next sync replays them (never
+        skips); a holder dying mid-mirror is marked dead and skipped.
+        Returns bytes made durable on the replicas.
+        """
+        tracker = self._mirror_pending[rank]
+        take = tracker.snapshot_and_clear()
+        if not take.any():
+            return 0
+        dead = self.comm.dead_ranks
+        acting = self._holder_of(rank)
+        src = self._seg_at(rank, acting)
+        live = {h: self._seg_at(rank, h)
+                for h in self.placement.holders(rank)
+                if h != acting and h not in dead}
+        if not live:
+            tracker.restore(take)  # degraded: keep pending for the rebuild
+            return 0
+        ps = tracker.page_size
+        partial = False
+        mirrored = 0
+        try:
+            for b0, b1 in dirty_runs(take):
+                lo, hi = b0 * ps, min(b1 * ps, tracker.size)
+                while lo < hi:
+                    n = min(hi - lo, self.MIRROR_CHUNK)
+                    data = self.comm.transport.get(src, lo, n)
+                    for h in list(live):
+                        try:
+                            self.comm.transport.put(live[h], lo, data)
+                        except TransportError:
+                            self.comm.mark_dead(h)
+                            live.pop(h)
+                            partial = True
+                    lo += n
+            for h in list(live):
+                try:
+                    mirrored += live[h].sync()
+                except TransportError:
+                    self.comm.mark_dead(h)
+                    live.pop(h)
+                    partial = True
+        except BaseException:
+            # reading the acting holder failed (or a replica sync raised a
+            # non-transport error): this epoch is not k-durable -- re-mark
+            # and surface so the flush's caller sees it
+            tracker.restore(take)
+            raise
+        if partial or not live:
+            tracker.restore(take)
+        return mirrored
 
     # -- device-side selective sync -----------------------------------------
     def _device_page_geometry(self, rank: int, dtype) -> tuple[int, int, int]:
@@ -906,9 +1168,27 @@ class Window:
             chunk = np.ascontiguousarray(np.asarray(cur_flat[lo_e:hi_e]))
             seg.write(byte_off + lo_e * itemsize,
                       chunk.view(np.uint8).ravel())
+            self._note_write(rank, byte_off + lo_e * itemsize, chunk.nbytes)
         if blocking:
             return self.sync(rank, mask=mask)
         return self.flush_async(rank, mask=mask)
+
+    # -- resilience: live rebuild -------------------------------------------
+    def rebuild_rank(self, rank: int, *, mark_alive: bool = True) -> int:
+        """Restore a dead rank's state in this window from live replicas.
+
+        Re-maps the rank's segments (on transports whose workers can be
+        respawned -- call ``comm.rebuild_rank`` to also respawn), then
+        reconciles its partition and the replica copies it hosts with a
+        page-diff-granular copy from each partition's acting holder.  With
+        ``mark_alive`` (default) the rank is returned to service, routing
+        traffic back to the primary.  Returns bytes copied.
+        """
+        from .resilience.rebuild import rebuild_window_rank
+        copied = rebuild_window_rank(self, rank)
+        if mark_alive:
+            self.comm.mark_alive(rank)
+        return copied
 
     # -- teardown -----------------------------------------------------------
     def free(self) -> None:
@@ -917,7 +1197,12 @@ class Window:
         Drains the nonblocking layer first: every pending request and queued
         ``flush_async`` completes before segments close, so fire-and-forget
         flushes are durable once free() returns.  Errors raised by pending
-        background operations re-raise here after teardown finishes.
+        background operations re-raise here after teardown finishes --
+        except on a replicated window where every error is a
+        ``TransportError`` of an already-dead rank and every partition
+        still has a live holder: the death was already observable (probe /
+        dead set), no data is at risk, and a job that kept serving through
+        the failure should also shut down through it.
         """
         if self.freed:
             return
@@ -941,7 +1226,18 @@ class Window:
                         errors.append(e)
             self._pool.shutdown()
             self._pool = None
-        for rank_seg in self.segments:
+        if self.placement is not None and not self.hints.discard:
+            # final mirror: segment close() flushes each holder's own page
+            # cache, but only a mirror pass carries the last un-synced spans
+            # to the replicas -- without it a freed window's replica files
+            # could trail the primaries
+            for r in range(self.comm.size):
+                try:
+                    self._mirror_rank(r)
+                except BaseException as e:
+                    errors.append(e)
+        # dynamic windows never replicate, so replica_segs is empty there
+        for rank_seg in list(self.segments) + list(self.replica_segs.values()):
             segs = rank_seg if self.dynamic else [rank_seg]
             for seg in segs:
                 if seg is not None:
@@ -954,8 +1250,23 @@ class Window:
                         errors.append(e)
         self.freed = True
         self.comm._unregister(self)
-        if errors:
+        if errors and not self._survivable_teardown(errors):
             raise errors[0]
+
+    def _survivable_teardown(self, errors) -> bool:
+        """True when free() may swallow its errors: replicated window,
+        transport-only failures, and a live holder for every partition
+        (nothing the surviving copies don't already hold)."""
+        if self.placement is None:
+            return False
+        if not all(isinstance(e, TransportError) for e in errors):
+            return False
+        try:
+            for r in range(self.comm.size):
+                self._holder_of(r)
+        except WindowError:
+            return False
+        return True
 
     def __enter__(self):
         return self

@@ -5,7 +5,12 @@ storage); this module supplies the cluster-side machinery that decides when
 and how to restart around it:
 
 * ``HeartbeatMonitor`` -- per-rank step heartbeats; a rank is *suspect*
-  after ``timeout`` without one, *dead* after ``dead_timeout``.
+  after ``timeout`` without one, *dead* after ``dead_timeout``.  Fed two
+  ways: SPMD ranks self-report via ``beat``, and
+  ``repro.core.resilience.FailureDetector`` probes every rank through the
+  communicator's transport (``Transport.probe``) so real worker death under
+  the mp transport is observed (``mark_dead``) instead of discovered on the
+  first hung call.
 * ``StragglerDetector`` -- robust (median + MAD) step-time outliers; in
   elastic mode persistent stragglers are evicted into the spare pool.
 * ``plan_recovery`` -- given the survivor count, pick the largest valid
@@ -40,6 +45,12 @@ class HeartbeatMonitor:
         now = time.monotonic() if now is None else now
         self.last_beat[rank] = now
         self.last_step[rank] = step
+
+    def mark_dead(self, rank: int) -> None:
+        """Force-expire a rank (probe-confirmed death, e.g. a SIGKILLed mp
+        worker): it reports as dead immediately instead of after
+        ``dead_timeout`` without a beat.  A later ``beat`` revives it."""
+        self.last_beat[rank] = -np.inf
 
     def suspects(self, now: float | None = None) -> list[int]:
         now = time.monotonic() if now is None else now

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.ckpt import CheckpointManager
 from repro.core.comm import Communicator
+from repro.core.resilience import FailureDetector
 from repro.models import init_params, make_loss_fn, param_specs
 from repro.models.config import ModelConfig
 from repro.models.spec import param_specs_to_shapes
@@ -65,6 +66,12 @@ class Trainer:
         self.specs = param_specs(model_cfg)
         self.metrics_log: list[dict[str, float]] = []
         self.hb = HeartbeatMonitor(self.comm.size)
+        # probe-driven liveness: under the mp transport the other ranks are
+        # real worker processes, and only Transport.probe can observe their
+        # death -- self-reported beats would keep every rank but our own
+        # permanently silent on the monitor.  interval rate-limits the
+        # actual probing so the per-step poll() stays off the hot path
+        self.detector = FailureDetector(self.comm, self.hb, interval=1.0)
         self.straggler = StragglerDetector(self.comm.size)
         self._build_steps()
         self._ckpt: CheckpointManager | None = None
@@ -194,6 +201,10 @@ class Trainer:
                 stats = {"lr": 0.0, "gnorm": 0.0}
             dt = time.monotonic() - t0
             self.hb.beat(self.comm.rank, step)
+            # beat every *probed-live* rank through the communicator (and
+            # force-mark probed-dead ones), so the monitor tracks real
+            # worker liveness, not just this process's self-report
+            self.detector.poll(step)
             self.straggler.record(self.comm.rank, dt)
             rec = {"step": step, "loss": float(loss), "time": dt,
                    "lr": float(stats["lr"])}

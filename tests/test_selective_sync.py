@@ -476,3 +476,46 @@ def test_window_backpressure_stats_and_bound(tmp_path):
     assert stats["max_inflight_bytes"] <= high
     assert stats["completed_bytes"] == stats["submitted_bytes"] == 64 * PAGE
     win.free()
+
+
+try:
+    import multiprocessing.shared_memory  # noqa: F401
+    _HAVE_SHM = True
+except ImportError:  # pragma: no cover - exotic platforms
+    _HAVE_SHM = False
+
+
+@pytest.mark.skipif(not _HAVE_SHM,
+                    reason="multiprocessing.shared_memory unavailable")
+def test_crash_replay_mp_worker_death_never_commits_manifest(tmp_path):
+    """The crash-replay invariant under the mp transport: a save whose
+    owning worker is SIGKILLed fails loudly (TransportError) without
+    committing its manifest, and a cold cross-transport restart restores
+    the previous checkpoint CRC-intact (manifest never ahead of data)."""
+    comm = Communicator(1, transport="mp")
+    specs = {"w": ((1 << 14,), np.float32)}
+    cm = CheckpointManager(str(tmp_path), comm, specs, double_buffer=False)
+    w1 = np.random.default_rng(4).standard_normal(1 << 14).astype(np.float32)
+    cm.save(5, {"w": w1})
+    assert _manifest_step(tmp_path) == 5
+
+    # SIGKILL the page-cache-owning worker: the next save dies before any
+    # of step 6's bytes can reach storage, so no manifest may name step 6
+    comm.transport._procs[0].kill()
+    comm.transport._procs[0].join(timeout=10)
+    from repro.core import TransportError
+    with pytest.raises(TransportError):
+        cm.save_async(6, {"w": w1 * 2})
+    assert _manifest_step(tmp_path) == 5
+    with pytest.raises(TransportError):
+        cm.close()
+
+    # cold restart under the *in-process* transport over the same files
+    # (the byte-identical on-disk layout is the recovery contract)
+    cm2 = CheckpointManager.open_for_restore(str(tmp_path), Communicator(1),
+                                             specs, double_buffer=False)
+    r = cm2.restore()
+    assert r is not None and not r.fell_back
+    assert r.step == 5 and (r.tree["w"] == w1).all()
+    cm2.close()
+    comm.close()

@@ -336,3 +336,23 @@ def test_inproc_env_default(monkeypatch):
     comm = Communicator.from_env(3)
     assert comm.transport.kind == "inproc" and comm.size == 3
     comm.close()
+
+
+@needs_shm
+def test_mp_free_after_worker_death_idempotent(tmp_path):
+    """free() after a rank's worker died surfaces the TransportError once;
+    a second free() (and the communicator close) must not raise secondary
+    errors -- teardown paths overlap in practice."""
+    comm = Communicator(2, transport="mp")
+    win = Window.allocate(comm, 4096, info=storage_info(tmp_path))
+    win.put(np.full(16, 8, np.uint8), 1, 0)
+    comm.transport._procs[1].kill()
+    comm.transport._procs[1].join(timeout=10)
+    with pytest.raises(TransportError):
+        win.free()
+    assert win.freed
+    win.free()  # idempotent: the error does not replay
+    assert comm.active_windows() == 0
+    comm.close()  # no window left -> shuts the workers down cleanly
+    for p in comm.transport._procs:
+        assert not p.is_alive()

@@ -213,3 +213,25 @@ def test_combined_window_equals_memory_model(tmp_path_factory, writes, factor):
     got = win.get(0, 0, 8192)
     assert (got == model).all()
     win.free()
+
+
+def test_free_idempotent(tmp_path):
+    """Double free is a silent no-op (MPI_Win_free is called once, but
+    teardown paths -- __exit__, close(), error handlers -- may overlap)."""
+    comm = Communicator(2)
+    win = Window.allocate(comm, 4096, info=mk_storage_info(tmp_path))
+    win.put(np.full(16, 4, np.uint8), 0, 0)
+    win.free()
+    assert win.freed
+    win.free()  # second free: no error, no re-close
+    assert comm.active_windows() == 0
+    # and the communicator still closes cleanly afterwards
+    comm.close()
+
+
+def test_free_idempotent_with_context_manager(tmp_path):
+    comm = Communicator(1)
+    with Window.allocate(comm, 1024, info=mk_storage_info(tmp_path)) as win:
+        win.free()  # explicit free inside the with: __exit__ must not raise
+    assert win.freed
+    comm.close()
