@@ -8,6 +8,12 @@ pages.  The *full* path re-puts the whole state and flushes everything; the
 the changed pages.  Acceptance: with <=10% of blocks dirty the selective
 path writes <=15% of the full path's bytes.
 
+The suite runs cross-process too (``--transport mp`` or
+``REPRO_TRANSPORT=mp``): the rank's page cache then lives in a real worker
+process, the full path ships the whole state over the control channel every
+iteration, and the selective path ships one masked span-write message --
+the <=15% byte gate must hold with genuine process-boundary traffic.
+
 The second half exercises backpressure: a window allocated with
 ``max_inflight_bytes`` (high watermark) takes a burst of rput+flush_async
 traffic; queued write-back bytes must never exceed the high mark (the
@@ -16,6 +22,8 @@ slow disk throttles producers instead of growing the queue without limit.
 """
 
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
@@ -34,8 +42,8 @@ BURST_CHUNK = 128 << 10
 BURSTS = 64                  # 8 MiB total through a 1 MiB-bounded queue
 
 
-def _mk_win(d: str, name: str, **kw) -> Window:
-    return Window.allocate(Communicator(1), SIZE, info={
+def _mk_win(d: str, name: str, comm: Communicator, **kw) -> Window:
+    return Window.allocate(comm, SIZE, info={
         "alloc_type": "storage",
         "storage_alloc_filename": f"{d}/{name}.bin"}, **kw)
 
@@ -49,13 +57,24 @@ def _mutate(rng, state: np.ndarray) -> np.ndarray:
     return out
 
 
-def run(bench: Bench) -> None:
+def run(bench: Bench, transport: str | None = None) -> None:
+    # every window targets rank 0 only: pin the world to one rank so a
+    # lane-wide REPRO_NRANKS doesn't spawn idle workers/segments
+    comm = Communicator.from_env(1, transport=transport, nranks=1)
+    try:
+        _run_suites(bench, comm)
+    finally:
+        comm.close()  # never leak mp workers, even on a failed gate
+
+
+def _run_suites(bench: Bench, comm: Communicator) -> None:
+    label = f"[{comm.transport.kind}]"
     rng = np.random.default_rng(0)
     state = rng.standard_normal(SIZE // 4).astype(np.float32)
 
     with workdir("selsync") as d:
         # -- full path: re-put everything, flush everything ------------------
-        win_f = _mk_win(d, "full")
+        win_f = _mk_win(d, "full", comm)
         win_f.put(state, 0, 0)
         win_f.sync(0)
         cur = _mutate(rng, state)  # warmup iteration (outside the timer)
@@ -71,7 +90,7 @@ def run(bench: Bench) -> None:
 
         # -- selective path: device diff -> masked flush ---------------------
         rng = np.random.default_rng(0)  # identical mutation sequence
-        win_s = _mk_win(d, "selective")
+        win_s = _mk_win(d, "selective", comm)
         win_s.put(state, 0, 0)
         win_s.sync(0)
         snap = _mutate(rng, state)  # warmup: jit the diff kernel off-clock
@@ -85,16 +104,18 @@ def run(bench: Bench) -> None:
         win_s.free()
 
         ratio = sel_bytes / max(1, full_bytes)
-        bench.add("full_put_sync", tf["s"], calls=ITERS,
+        bench.add(f"full_put_sync{label}", tf["s"], calls=ITERS,
                   derived=f"{full_bytes >> 20}MiB")
-        bench.add("selective_device_mask", ts["s"], calls=ITERS,
+        bench.add(f"selective_device_mask{label}", ts["s"], calls=ITERS,
                   derived=f"{sel_bytes >> 10}KiB")
-        bench.add("selective_vs_full_bytes", 0.0, derived=f"{ratio:.3f}")
+        bench.add(f"selective_vs_full_bytes{label}", 0.0,
+                  derived=f"{ratio:.3f}")
         assert ratio <= 0.15, (
             f"selective flush wrote {ratio:.1%} of full-sync bytes (>15%)")
 
         # -- backpressure: bounded in-flight write-back ----------------------
-        win_b = _mk_win(d, "bounded", max_inflight_bytes=HIGH_WATERMARK,
+        win_b = _mk_win(d, "bounded", comm,
+                        max_inflight_bytes=HIGH_WATERMARK,
                         low_watermark=LOW_WATERMARK)
         data = np.full(BURST_CHUNK, 7, np.uint8)
         with timer() as tb:
@@ -107,10 +128,21 @@ def run(bench: Bench) -> None:
         win_b.free()
 
         peak = stats["max_inflight_bytes"]
-        bench.add("bounded_queue_burst", tb["s"], calls=BURSTS,
+        bench.add(f"bounded_queue_burst{label}", tb["s"], calls=BURSTS,
                   derived=f"peak={peak >> 10}KiB stalls={stats['stalls']}")
-        bench.add("queue_peak_vs_watermark", 0.0,
+        bench.add(f"queue_peak_vs_watermark{label}", 0.0,
                   derived=f"{peak / HIGH_WATERMARK:.2f}")
         assert peak <= HIGH_WATERMARK, (
             f"in-flight bytes peaked at {peak} > high watermark "
             f"{HIGH_WATERMARK}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--transport", choices=("inproc", "mp"), default=None,
+                    help="window transport (default: $REPRO_TRANSPORT or "
+                         "inproc)")
+    args = ap.parse_args()
+    b = Bench("selective_sync")
+    run(b, transport=args.transport)  # the <=15% gate asserts (exit 1)
+    b.emit()

@@ -54,6 +54,17 @@ else
     # below the ratio)
     timeout 300 "${MP_ENV[@]}" python -m benchmarks.async_win \
         --transport mp --min-speedup 1.5
+    # masked device-sync gate, cross-process: at 8% dirty blocks the
+    # selective path (one masked span-write message per rank) must write
+    # <=15% of the full-sync bytes (the suite's assert enforces: exit 1).
+    # The device diff needs jax (repro.kernels); skip gracefully without it
+    # -- every other lane stays jax-free.
+    if python -c "import jax" >/dev/null 2>&1; then
+        timeout 300 "${MP_ENV[@]}" python -m benchmarks.selective_sync \
+            --transport mp
+    else
+        echo "tier1: jax unavailable -- skipping mp selective-sync gate" >&2
+    fi
     # kill-and-rebuild smoke (resilience subsystem): SIGKILL a
     # replica-holding worker mid-traffic, assert continued DHT service via
     # failover (zero lost synced data) and a bit-exact respawn+rebuild

@@ -21,13 +21,17 @@ Implements the paper's fault-tolerance recipe end to end:
   the flush runs concurrently with the training step in between.
 * **Snapshot-diff staging** (``snapshot_diff=True``, the default): the
   manager keeps a host copy of each window's last-checkpointed bytes and
-  page-diffs the new state against it, so only *changed* blocks are put into
-  the page cache and the flush is narrowed with ``mask=changed`` -- the
-  host-side twin of ``Window.sync_from_device``.  If a flush fails, the
-  snapshot for that window is invalidated and the backing re-marks the taken
-  blocks, so the retry replays a full put + unmasked flush (replay, never
-  skip); the manifest hook only ever runs after a *successful* flush, so a
-  crash mid-save can never commit a manifest ahead of its data.
+  page-diffs the new state against it.  Each slot is staged as a *shard*:
+  its changed pages become byte spans and the per-slot page masks OR-merge
+  into one window mask, shipped together through the transport's masked
+  span-write primitive (``Window.sync(spans=...)``) -- apply + selective
+  flush in a single operation, one control-channel round trip per rank
+  under the multiprocess transport; the host-side twin of
+  ``Window.sync_shards_from_device``.  If a flush fails, the snapshot for
+  that window is invalidated and the backing re-marks the taken blocks, so
+  the retry replays a full put + unmasked flush (replay, never skip); the
+  manifest hook only ever runs after a *successful* flush, so a crash
+  mid-save can never commit a manifest ahead of its data.
 """
 
 from __future__ import annotations
@@ -173,46 +177,58 @@ class CheckpointManager:
 
     def _stage(self, target: str, wt: WindowedPyTree,
                tree: Mapping[str, Any]) -> tuple[dict[str, int],
-                                                 np.ndarray | None]:
-        """Write ``tree`` into the window; returns (crcs, flush mask).
+                                                 np.ndarray | None,
+                                                 list | None]:
+        """Diff ``tree`` against the last checkpoint; returns
+        (crcs, flush mask, changed spans).
 
-        With a snapshot of the window's last checkpoint available, only
-        pages whose bytes changed are put (coalesced runs) and the returned
-        mask names exactly those window blocks; otherwise every slot is put
-        in full and the mask is None (flush everything dirty).
+        With a snapshot of the window's last checkpoint available, each
+        slot is a *shard*: its changed pages become ``(offset, bytes)``
+        spans and the per-slot page masks merge into one window mask --
+        the sync/flush then ships spans + mask through the transport's
+        masked span-write primitive (one round trip per rank on remote
+        transports), applying them to the page cache and flushing in a
+        single operation.  Without a snapshot every slot is put in full
+        here and (None, None) means "flush everything dirty".
         """
         snap = self._snapshots.get(target) if self.snapshot_diff else None
         ps = self._page_size(wt)
         seg = wt.win.segments[self.rank]
         mask = (np.zeros(-(-seg.size // ps), dtype=bool)
                 if snap is not None else None)
+        spans: list | None = [] if snap is not None else None
         crcs: dict[str, int] = {}
         new_snap: dict[str, np.ndarray] = {}
         for k in sorted(self.specs):
             arr = np.ascontiguousarray(tree[k], dtype=self.specs[k][1])
             crcs[k] = _crc(arr)
             raw = arr.view(np.uint8).ravel()
+            if self.snapshot_diff:
+                new_snap[k] = raw.copy()
             if snap is not None:
                 slot = wt.slots[k]
+                # span payloads slice the manager-owned snapshot copy, so
+                # a caller mutating its tree before the flush runs cannot
+                # corrupt the staged bytes
+                staged = new_snap[k]
                 for b0, b1 in dirty_runs(self._page_diff(raw, snap[k], ps)):
                     lo, hi = b0 * ps, min(b1 * ps, raw.nbytes)
-                    wt.win.put(raw[lo:hi], self.rank, slot.offset + lo)
+                    spans.append((slot.offset + lo, staged[lo:hi]))
                     mark_span(mask, slot.offset + lo, slot.offset + hi, ps)
             else:
                 wt.put(k, arr)
-            if self.snapshot_diff:
-                new_snap[k] = raw.copy()
         if self.snapshot_diff:
             self._snapshots[target] = new_snap
-        return crcs, mask
+        return crcs, mask, spans
 
     def _checked_stage(self, target: str, wt: WindowedPyTree,
                        tree: Mapping[str, Any]):
-        """_stage, but a failure mid-staging (e.g. ENOSPC on a cache-eviction
-        write) invalidates the window's snapshot: the page cache now holds a
-        mix of old and new pages, so the next save must replay a full put +
-        unmasked flush rather than diff against a snapshot that no longer
-        describes the cache."""
+        """_stage, but a failure mid-staging (e.g. ENOSPC on a full put's
+        cache-eviction write) invalidates the window's snapshot: the page
+        cache may now hold a mix of old and new pages, so the next save
+        must replay a full put + unmasked flush rather than diff against a
+        snapshot that no longer describes the cache.  (Span-apply failures
+        at flush time are handled the same way by save()/wait().)"""
         try:
             return self._stage(target, wt, tree)
         except BaseException:
@@ -225,14 +241,14 @@ class CheckpointManager:
         target = self.names[self._turn % len(self.names)]
         self._turn += 1
         wt = self.windows[target]
-        crcs, mask = self._checked_stage(target, wt, tree)
+        crcs, mask, spans = self._checked_stage(target, wt, tree)
         # Paper Listing 4: exclusive lock prevents remote access during sync.
         wt.win.lock(self.rank, exclusive=True)
         try:
-            flushed = wt.sync(mask=mask)
+            flushed = wt.sync(mask=mask, spans=spans)
         except BaseException:
-            # The snapshot now disagrees with disk: drop it so the retry
-            # replays a full put + unmasked flush (never skips).
+            # The snapshot now disagrees with the cache/disk: drop it so
+            # the retry replays a full put + unmasked flush (never skips).
             self._snapshots.pop(target, None)
             raise
         finally:
@@ -245,19 +261,21 @@ class CheckpointManager:
     def save_async(self, step: int, tree: Mapping[str, Any]) -> Request:
         """Stage the state, then flush + commit on the write-back pool.
 
-        The puts land in the window's page cache synchronously (cheap
-        memcpy) -- only pages the snapshot diff marks as changed; the
-        storage flush -- the expensive part -- runs as a ``sync_async``
-        request (exclusive lock, paper Listing 4) narrowed to the changed
-        blocks, whose completion hook commits the manifest.  The hook runs
-        only after a successful flush, so the manifest can never get ahead
-        of its data.  Errors surface at ``wait()``.
+        Staging computes the snapshot diff synchronously (cheap memory
+        compares): the changed pages of every slot become spans merged
+        under one window mask.  The flush request (exclusive lock, paper
+        Listing 4) then ships spans + mask through the masked span-write
+        primitive -- apply + selective flush in one operation, one
+        control-channel round trip per rank on remote transports -- and
+        its completion hook commits the manifest.  The hook runs only
+        after a successful flush, so the manifest can never get ahead of
+        its data.  Errors surface at ``wait()``.
         """
         self.wait()
         target = self.names[self._turn % len(self.names)]
         self._turn += 1
         wt = self.windows[target]
-        crcs, mask = self._checked_stage(target, wt, tree)
+        crcs, mask, spans = self._checked_stage(target, wt, tree)
 
         def _commit(flushed: int) -> None:
             # Runs on the write-back thread after a successful flush; the
@@ -267,7 +285,7 @@ class CheckpointManager:
             self.bytes_flushed_total += flushed
 
         self._pending = wt.sync_async(exclusive=True, on_complete=_commit,
-                                      mask=mask)
+                                      mask=mask, spans=spans)
         self._pending_target = target
         return self._pending
 
@@ -316,11 +334,24 @@ class CheckpointManager:
 
     # -- teardown -----------------------------------------------------------------
     def close(self, unlink: bool = False) -> None:
-        self.wait()
+        """Join the pending save and free both windows.  A failed pending
+        flush (e.g. a crashed owning rank) re-raises here, but only after
+        every window has been freed -- teardown must not leak segments or
+        worker-side state behind the error."""
+        errors: list[BaseException] = []
+        try:
+            self.wait()
+        except BaseException as e:
+            errors.append(e)
         for wt in self.windows.values():
             wt.win.hints = dataclasses.replace(wt.win.hints, unlink=unlink) \
                 if unlink else wt.win.hints
-            wt.free()
+            try:
+                wt.free()
+            except BaseException as e:
+                errors.append(e)
+        if errors:
+            raise errors[0]
 
     @classmethod
     def open_for_restore(cls, directory: str, comm: Communicator,

@@ -128,6 +128,13 @@ class CombinedSegment:
             return self.backing.sync(full=full)
         return self.backing.sync(full=full, mask=self._storage_mask(mask))
 
+    def mark_blocks(self, mask: np.ndarray) -> None:
+        """OR a *window-block* mask into the storage tracker (masked
+        span-write apply); translated like :meth:`sync`, so blocks entirely
+        inside the memory part mark nothing."""
+        if self.backing is not None:
+            self.backing.tracker.mark_blocks(self._storage_mask(mask))
+
     @property
     def has_storage(self) -> bool:
         """True if any bytes spilled to storage (the ``auto`` factor may

@@ -230,22 +230,29 @@ class WindowedPyTree:
         for k, v in tree.items():
             self.put(k, np.asarray(v))
 
-    def sync(self, *, mask: np.ndarray | None = None) -> int:
+    def sync(self, *, mask: np.ndarray | None = None,
+             spans: list | None = None) -> int:
         """MPI_Win_sync over the rank's segment: selective dirty-block flush.
-        ``mask`` restricts it to ``host_dirty AND mask`` window blocks."""
-        return self.win.sync(self.rank, mask=mask)
+        ``mask`` restricts it to ``host_dirty AND mask`` window blocks;
+        ``spans`` first applies the given ``(offset, bytes)`` spans through
+        the transport's masked span-write primitive (one round trip per
+        rank on remote transports)."""
+        return self.win.sync(self.rank, mask=mask, spans=spans)
 
     def sync_async(self, *, exclusive: bool = False, on_complete=None,
-                   mask: np.ndarray | None = None) -> Request:
+                   mask: np.ndarray | None = None,
+                   spans: list | None = None) -> Request:
         """Queue the rank's selective flush on the window's write-back pool.
 
         ``wait()`` returns bytes flushed; see :meth:`Window.flush_async` for
-        the ``exclusive`` / ``on_complete`` / ``mask`` semantics.  The
-        checkpoint manager overlaps this with the next train step and
-        narrows it with the snapshot-diff mask.
+        the ``exclusive`` / ``on_complete`` / ``mask`` / ``spans``
+        semantics.  The checkpoint manager overlaps this with the next
+        train step and narrows it with the snapshot-diff mask (its changed
+        pages riding along as spans).
         """
         return self.win.flush_async(self.rank, exclusive=exclusive,
-                                    on_complete=on_complete, mask=mask)
+                                    on_complete=on_complete, mask=mask,
+                                    spans=spans)
 
     def manifest(self) -> dict[str, Any]:
         """Serializable layout description (used by the checkpoint manager)."""

@@ -112,10 +112,15 @@ class DirtyTracker:
             self._bits[b0:b1] = True
 
     def _normalize(self, mask: np.ndarray) -> np.ndarray:
-        """Clip/pad an external block mask to ``num_blocks`` booleans.
+        """Clip/pad a block mask to ``num_blocks`` booleans.
 
         Extra trailing bits (a device diff padded past the last block) are
-        ignored; a short mask leaves the uncovered tail unselected.
+        ignored; a short mask leaves the uncovered tail unselected.  This
+        tolerant normalization is for *internal* masks (device diffs,
+        mirror/replica bookkeeping): user-supplied masks are length-checked
+        at the window boundary (``Window._validate_mask`` raises on
+        mismatch) before they ever reach a tracker, so a short mask cannot
+        silently skip a dirty tail.
         """
         mask = np.asarray(mask, dtype=bool).ravel()
         out = np.zeros(self.num_blocks, dtype=bool)

@@ -28,7 +28,8 @@ import abc
 import numpy as np
 
 __all__ = ["Transport", "TransportError", "ACC_OPS", "apply_accumulate",
-           "apply_get_accumulate", "apply_compare_and_swap", "reduce_values"]
+           "apply_get_accumulate", "apply_compare_and_swap",
+           "apply_masked_spans", "reduce_values"]
 
 
 class TransportError(RuntimeError):
@@ -83,6 +84,26 @@ def apply_compare_and_swap(seg, offset: int, value, compare, dtype):
     if old == np.asarray(compare, dtype=dt):
         seg.write(offset, np.asarray([value], dtype=dt).view(np.uint8).ravel())
     return old
+
+
+def apply_masked_spans(seg, spans, mask) -> int:
+    """Target-side half of the masked span-write primitive.
+
+    Applies the changed byte ``spans`` (``(offset, uint8 array)`` pairs) to
+    the segment's memory copy, ORs the block ``mask`` into its dirty
+    tracker (segments exposing ``mark_blocks``; conservative -- the mask
+    may cover straddled blocks the spans only partially rewrite), then runs
+    the masked flush.  This is the whole device-diff epilogue in one call,
+    executed wherever the segment's page cache lives: directly for local
+    segments, inside the owner's progress thread for remote ones.  Returns
+    bytes flushed.
+    """
+    for offset, data in spans:
+        seg.write(offset, np.asarray(data, dtype=np.uint8).ravel())
+    mark = getattr(seg, "mark_blocks", None)
+    if mask is not None and mark is not None:
+        mark(mask)
+    return seg.sync(mask=mask)
 
 
 def reduce_values(contribs, op: str):
@@ -167,6 +188,23 @@ class Transport(abc.ABC):
         """Read raw bytes from a (possibly remote) segment's memory copy."""
         return seg.read(offset, nbytes)
 
+    def write_spans_masked(self, seg, spans, mask) -> int:
+        """Masked span write + flush: the device-diff one-sided primitive.
+
+        The origin ships the changed byte ``spans`` **and** the block
+        ``mask`` together; the segment's owner applies the spans to its
+        page cache, ORs the mask into its ``DirtyTracker``, and runs the
+        masked flush there -- on remote transports this is a single
+        control-channel round trip per target rank, so selective device
+        sync never degenerates into per-span messages or a full-window
+        transfer.  Returns bytes flushed.
+
+        The base implementation covers every transport whose segment
+        handles expose ``write``/``sync`` locally (the in-process backend:
+        zero behavior change).
+        """
+        return apply_masked_spans(seg, spans, mask)
+
     @abc.abstractmethod
     def accumulate(self, seg, offset: int, data: np.ndarray, op: str) -> None:
         """MPI_Accumulate, atomic at the target."""
@@ -225,7 +263,7 @@ class Transport(abc.ABC):
     @property
     def is_local(self) -> bool:
         """True when every rank's segment lives in this process (enables
-        dynamic windows, zero-copy baseptr views and device-mask sync)."""
+        dynamic windows and zero-copy baseptr views)."""
         return False
 
     def shutdown(self) -> None:

@@ -77,6 +77,11 @@ class _StorageSegment:
     def dirty_bytes(self, mask: np.ndarray | None = None) -> int:
         return self.backing.dirty_bytes(mask=mask)
 
+    def mark_blocks(self, mask: np.ndarray) -> None:
+        """OR a block mask into the dirty tracker (masked span-write
+        apply: the mask may conservatively cover straddled blocks)."""
+        self.backing.tracker.mark_blocks(mask)
+
     @property
     def tracker(self):
         return self.backing.tracker

@@ -51,7 +51,7 @@ import numpy as np
 from ..hints import WindowHints
 from .base import (Transport, TransportError, apply_accumulate,
                    apply_compare_and_swap, apply_get_accumulate,
-                   reduce_values)
+                   apply_masked_spans, reduce_values)
 from .local import _make_segment, _MemorySegment
 
 __all__ = ["MultiprocessTransport"]
@@ -165,8 +165,9 @@ class _RemoteSegment:
     data lives.
     """
 
-    #: no local tracker: the dirty bitmap lives with the owner (device-mask
-    #: sync needs a local transport and is gated in Window)
+    #: no local tracker: the dirty bitmap lives with the owner -- device
+    #: masks reach it through :meth:`write_spans_sync` (the ``wsync`` op),
+    #: and the window layer reads block geometry from ``page_size``
     tracker = None
 
     def __init__(self, transport: "MultiprocessTransport", win_id: int,
@@ -211,6 +212,24 @@ class _RemoteSegment:
         self.last_sync_io = io_s
         with self._approx_lock:
             self._approx_dirty = max(0, self._approx_dirty - n)
+        return n
+
+    def write_spans_sync(self, spans, mask) -> int:
+        """Masked span write + flush, one control-channel round trip: the
+        owner's progress thread applies the spans to its page cache, ORs
+        the mask into its ``DirtyTracker`` and runs the masked flush --
+        the device-diff epilogue without per-span messages."""
+        payload = [(int(off),
+                    np.ascontiguousarray(np.asarray(d, np.uint8).ravel())
+                    .tobytes())
+                   for off, d in spans]
+        n, io_s = self._t._call(self._rank,
+                                ("wsync", self._win_id, payload, mask))
+        self.last_sync_io = io_s
+        written = sum(len(raw) for _, raw in payload)
+        with self._approx_lock:
+            self._approx_dirty = max(
+                0, min(self.size, self._approx_dirty + written) - n)
         return n
 
     def dirty_bytes(self, mask: np.ndarray | None = None) -> int:
@@ -303,6 +322,21 @@ def _serve(conn, rank: int) -> None:
                     # throughput estimate excludes channel queueing
                     t0 = time.monotonic()
                     n = segments[win_id].sync(full=full, mask=mask)
+                    reply = (n, time.monotonic() - t0)
+                elif op == "wsync":
+                    # masked span write + flush (the device-diff primitive):
+                    # spans land in this owner's page cache, the mask ORs
+                    # into its DirtyTracker, and the masked flush runs here
+                    # -- one round trip carried everything
+                    _, win_id, spans, mask = msg
+                    seg = segments[win_id]
+                    for offset, raw in spans:
+                        seg.write(offset, np.frombuffer(raw, np.uint8))
+                    mark = getattr(seg, "mark_blocks", None)
+                    if mask is not None and mark is not None:
+                        mark(mask)
+                    t0 = time.monotonic()  # time only the storage I/O
+                    n = seg.sync(mask=mask)
                     reply = (n, time.monotonic() - t0)
                 elif op == "dirty":
                     _, win_id, mask = msg
@@ -556,6 +590,15 @@ class MultiprocessTransport(Transport):
         return self._call(rank, ("cas", win_id, offset, value, compare,
                                  np.dtype(dtype)))
 
+    def write_spans_masked(self, seg, spans, mask):
+        """Device-diff primitive over the control channel: spans + mask in
+        one ``wsync`` message, applied and flushed by the owner's progress
+        thread.  Driver-side shared-memory handles (memory windows) apply
+        locally -- they alias the owner's pages and have nothing to flush."""
+        if isinstance(seg, _ShmBuf):
+            return apply_masked_spans(seg, spans, mask)
+        return seg.write_spans_sync(spans, mask)
+
     # -- collectives -------------------------------------------------------
     def _barrier_on(self, ranks) -> None:
         # channel FIFO: by the time each worker acks, it has serviced every
@@ -665,6 +708,9 @@ class _MpSubTransport(Transport):
 
     def compare_and_swap(self, seg, offset, value, compare, dtype):
         return self.parent.compare_and_swap(seg, offset, value, compare, dtype)
+
+    def write_spans_masked(self, seg, spans, mask):
+        return self.parent.write_spans_masked(seg, spans, mask)
 
     def barrier(self) -> None:
         self.parent._barrier_on(self.ranks)

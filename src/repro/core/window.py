@@ -69,8 +69,8 @@ Completion/durability semantics:
   rput/rget, exclusive for raccumulate/locked flushes), so an exclusive
   ``win.lock(rank)`` epoch holds off concurrent request traffic.
 
-Device-side selective sync (mask path)
---------------------------------------
+Device-side selective sync (mask path, transport-native)
+--------------------------------------------------------
 
 ``flush_async(rank, mask=...)`` / ``sync(rank, mask=...)`` take a boolean
 *block mask* (``page_size`` blocks over the rank's [0, size) byte space) and
@@ -81,13 +81,32 @@ flush the **intersection** ``host_dirty AND mask``:
 * clean blocks inside the mask cost nothing ("may return immediately if the
   pages are already synchronized");
 * on combined windows the mask is given in window coordinates and is shifted
-  onto the storage subrange (memory blocks select nothing).
+  onto the storage subrange (memory blocks select nothing);
+* the mask must cover the rank's block count exactly -- a short or long mask
+  raises ``WindowError`` instead of silently skipping a dirty tail (only the
+  internal device-diff path keeps the tolerant tail-padding normalization).
 
 ``sync_from_device(rank, cur, snap)`` builds that mask with the Pallas
 ``dirty_diff`` kernel: the (device-resident) current/snapshot states reduce
-to a per-page changed bitmap on-device, only the changed spans cross to the
-host page cache, and the flush is queued with the resulting mask -- clean
-pages never cross the memory/storage boundary, without any host compares.
+to a per-page changed bitmap on-device, and only the changed element spans
+cross to the host.  The epilogue is **transport-native**: the spans and the
+mask travel together through ``Transport.write_spans_masked`` to wherever
+the rank's page cache lives.  Under the in-process transport that is a
+direct apply (zero behavior change); under a remote-owner transport
+(``mp``) the origin ships *one* control-channel message per target rank --
+the owner's progress thread applies the spans to its page cache, ORs the
+mask into its ``DirtyTracker``, and runs the masked flush owner-side.  No
+per-span messages, no full-window traffic: both the fabric bytes and the
+storage writes scale with the *changed* pages.
+
+``sync_shards_from_device(rank, [(cur, snap, target_disp), ...])`` extends
+this to sharded device state: each shard's bitmap is translated by its
+displacement and OR-merged into a single window mask, and all shards'
+changed spans ride one masked flush (still one round trip per rank).
+
+On a replicated window both paths route through the partition's acting
+holder exactly like ``put`` -- a dead primary fails over to the replica,
+and the written spans are recorded for mirroring at the flush.
 
 Write-back backpressure (bounded in-flight bytes)
 -------------------------------------------------
@@ -729,6 +748,7 @@ class Window:
 
     def flush_async(self, rank: int | None = None, *, full: bool = False,
                     mask: np.ndarray | None = None,
+                    spans: list | None = None,
                     exclusive: bool = False, on_complete=None) -> Request:
         """Asynchronous MPI_Win_sync: queue a selective dirty-page flush.
 
@@ -741,7 +761,21 @@ class Window:
         the flush to the intersection ``host_dirty AND mask``: clean pages
         are skipped without host compares, and dirty pages outside the mask
         stay dirty for a later sync (narrowing, never skipping).  Requires a
-        specific ``rank`` on a non-dynamic window.
+        specific ``rank`` on a non-dynamic window and must cover the rank's
+        block count exactly.
+
+        ``spans`` (``(offset, bytes)`` pairs; requires ``mask``) is the
+        masked span-write path: the flush task first applies the spans to
+        the target's page cache through the transport's
+        ``write_spans_masked`` primitive -- one control-channel round trip
+        per rank on remote transports -- and then the masked flush runs
+        owner-side.  This is how ``sync_from_device`` and the checkpoint
+        manager's snapshot-diff staging ship only changed pages.  Like an
+        ``rput``, the spans reach the page cache only when the queued task
+        executes (FIFO-ordered after pending requests to the rank): a
+        blocking ``put`` issued while the request is in flight follows the
+        same rule as mixing ``put`` with rputs -- interpose a
+        ``flush(rank)``, or the older span payload may overwrite it.
 
         ``exclusive`` wraps each rank's flush in its exclusive lock (paper
         Listing 4's consistent checkpoint).  ``on_complete(total_bytes)``
@@ -749,11 +783,13 @@ class Window:
         success -- and its errors surface at ``wait()``.
 
         With backpressure configured the submission charges the rank's
-        (masked) dirty-byte estimate and may block past the high watermark.
+        (masked) dirty-byte estimate plus the span payload and may block
+        past the high watermark.
         """
         if self.freed:
             raise WindowError("window has been freed")
         mask = self._validate_mask(rank, mask)
+        spans = self._validate_spans(spans, mask)
         ranks = list(range(self.comm.size)) if rank is None else [rank]
         for r in ranks:
             if r < 0 or r >= self.comm.size:
@@ -777,7 +813,7 @@ class Window:
                     t0 = time.monotonic()
                     try:
                         n = self._sync_rank_segs(r, full, mask,
-                                                 mirror=False)
+                                                 mirror=False, spans=spans)
                     finally:
                         dt = time.monotonic() - t0
                         pool.end_flush_sample(
@@ -805,8 +841,10 @@ class Window:
         force = self._caller_in_lock_epoch()
         # the task times its own I/O via begin/end_flush_sample (excluding
         # lock waits), so the ticket itself is not worker-sampled
+        span_bytes = sum(d.nbytes for _, d in spans) if spans else 0
         tickets = [pool.submit(make_task(r), key=r,
                                nbytes=(self._flush_charge(r, full, mask)
+                                       + span_bytes
                                        if pool.bounded else 0),
                                force=force)
                    for r in ranks]
@@ -943,7 +981,8 @@ class Window:
             self.flush(rank)
 
     def sync(self, rank: int | None = None, full: bool = False,
-             *, blocking: bool = True, mask: np.ndarray | None = None):
+             *, blocking: bool = True, mask: np.ndarray | None = None,
+             spans: list | None = None):
         """MPI_Win_sync: flush dirty pages of the rank's storage segment(s).
 
         Returns bytes flushed (0 for memory windows / already-clean storage:
@@ -951,23 +990,51 @@ class Window:
         synchronized' -- the selective synchronization of the paper).
 
         ``mask`` restricts the flush to ``host_dirty AND mask`` blocks (see
-        :meth:`flush_async` for the intersection rules).
+        :meth:`flush_async` for the intersection rules and the exact-length
+        requirement); ``spans`` additionally applies the given
+        ``(offset, bytes)`` spans through the transport's masked span-write
+        primitive before the flush (one round trip per rank on remote
+        transports -- see :meth:`flush_async`).
 
         ``blocking=False`` queues the flush on the background write-back
         pool and returns a :class:`Request` whose ``wait()`` yields the
         bytes flushed (equivalent to ``flush_async``).
         """
         if not blocking:
-            return self.flush_async(rank, full=full, mask=mask)
+            return self.flush_async(rank, full=full, mask=mask, spans=spans)
         if self.freed:
             raise WindowError("window has been freed")
         mask = self._validate_mask(rank, mask)
+        spans = self._validate_spans(spans, mask)
         ranks = range(self.comm.size) if rank is None else [rank]
-        return sum(self._sync_rank_segs(r, full, mask) for r in ranks)
+        return sum(self._sync_rank_segs(r, full, mask, spans=spans)
+                   for r in ranks)
 
-    def _validate_mask(self, rank: int | None, mask):
+    def _mask_blocks(self, rank: int) -> int | None:
+        """Expected mask length for ``rank``: its window-block count, or
+        None when the segment has no page geometry to validate against
+        (memory windows, where a masked sync is a no-op anyway)."""
+        seg = self.segments[rank]
+        tracker = getattr(seg, "tracker", None)
+        ps = (tracker.page_size if tracker is not None
+              else getattr(seg, "page_size", None))
+        if ps is None:
+            return None
+        return -(-seg.size // ps)
+
+    def _validate_mask(self, rank: int | None, mask, *, pad: bool = False):
         """Shared mask preconditions for sync/flush_async; returns the
-        normalized boolean mask (masks are per-segment block coordinates)."""
+        normalized boolean mask (masks are per-segment block coordinates).
+
+        The mask must cover the rank's block count *exactly*: a short mask
+        would silently leave a dirty tail unselected (the tail blocks fall
+        outside every intersection), a long one is a geometry bug at the
+        call site -- both raise ``WindowError``.  Multi-dimensional masks
+        are accepted when their raveled length matches.  ``pad=True`` (the
+        internal device-diff path only) keeps the tolerant normalization:
+        short masks are False-padded and trailing extra blocks -- a device
+        bitmap padded past the last page -- are ignored.
+        """
         if mask is None:
             return None
         if rank is None:
@@ -975,14 +1042,54 @@ class Window:
                               "per-segment block coordinates)")
         if self.dynamic:
             raise WindowError("mask is not supported on dynamic windows")
-        return np.asarray(mask, dtype=bool).ravel()
+        if rank < 0 or rank >= self.comm.size:
+            raise WindowError(
+                f"rank {rank} outside communicator of size {self.comm.size}")
+        m = np.asarray(mask, dtype=bool).ravel()
+        expected = self._mask_blocks(rank)
+        if expected is None or len(m) == expected:
+            return m
+        if not pad:
+            raise WindowError(
+                f"mask covers {len(m)} blocks but rank {rank}'s window has "
+                f"{expected} (a short mask would silently skip a dirty "
+                f"tail; pass exactly one flag per page_size block)")
+        out = np.zeros(expected, dtype=bool)
+        n = min(len(m), expected)
+        out[:n] = m[:n]
+        return out
+
+    def _validate_spans(self, spans, mask):
+        """Normalize masked span-write payloads to (int offset, uint8
+        array) pairs; spans always travel with their mask (one primitive)."""
+        if spans is None:
+            return None
+        if mask is None:
+            raise WindowError(
+                "spans require a mask (the masked span-write primitive "
+                "ships the changed spans and the block mask together)")
+        out = []
+        for offset, data in spans:
+            data = np.ascontiguousarray(
+                np.asarray(data, dtype=np.uint8).ravel())
+            if data.nbytes:
+                out.append((int(offset), data))
+        return out or None
 
     def _sync_rank_segs(self, rank: int, full: bool, mask,
-                        mirror: bool = True) -> int:
+                        mirror: bool = True, spans: list | None = None) -> int:
         """Sync every segment of one rank.  The mask kw is only forwarded
         when set: dynamically attached segments may be third-party objects
         whose sync() predates the mask parameter (mask is already rejected
         for dynamic windows).
+
+        ``spans`` switches to the masked span-write primitive: the spans
+        and the mask go through ``Transport.write_spans_masked`` against
+        the partition's acting holder (one round trip per rank on remote
+        transports), routed with the same failover-and-retry as ``put`` --
+        a ``TransportError`` marks the holder dead and replays the whole
+        span set on the next replica (never a partial epoch).  The written
+        spans are then recorded for mirroring.
 
         Replicated windows sync the partition's *acting* holder (failing
         over on a death discovered right here) and then piggyback the
@@ -994,6 +1101,16 @@ class Window:
         *outside* its throughput-sample window (mirror seconds with only
         primary bytes would deflate the adaptive-watermark EWMA by ~k x).
         """
+        if spans:
+            total = self._failover(
+                rank,
+                lambda seg: self.comm.transport.write_spans_masked(
+                    seg, spans, mask))
+            for offset, data in spans:
+                self._note_write(rank, offset, data.nbytes)
+            if mirror and self.placement is not None:
+                self._mirror_rank(rank)
+            return total
         if self.dynamic or self.placement is None:
             segs = (self.segments[rank] if self.dynamic
                     else [self.segments[rank]])
@@ -1074,14 +1191,21 @@ class Window:
 
     # -- device-side selective sync -----------------------------------------
     def _device_page_geometry(self, rank: int, dtype) -> tuple[int, int, int]:
-        """(page_size, block_elems, window_blocks) for the rank's segment."""
+        """(page_size, block_elems, window_blocks) for the rank's segment.
+
+        Works against local segments (tracker in this process) and remote
+        proxies alike -- remote handles carry the owner's ``page_size`` in
+        their metadata, which is all the origin needs to compute the block
+        mask; the dirty bitmap itself stays with the owner.
+        """
         seg = self._seg(rank)
         tracker = getattr(seg, "tracker", None)
-        if tracker is None:
+        ps = (tracker.page_size if tracker is not None
+              else getattr(seg, "page_size", None))
+        if ps is None:
             raise WindowError(
-                "device-mask sync requires a storage-backed segment owned "
-                "by this process (in-process transport)")
-        ps = tracker.page_size
+                "device-mask sync requires a storage-backed segment "
+                "(memory windows have no pages to flush)")
         itemsize = np.dtype(dtype).itemsize
         if ps % itemsize:
             raise WindowError(
@@ -1094,6 +1218,8 @@ class Window:
         from repro.kernels.ops import dirty_blocks  # lazy: jax-free core
         if np.shape(cur) != np.shape(snap):
             raise WindowError("cur/snap shape mismatch")
+        if np.dtype(cur.dtype) != np.dtype(snap.dtype):
+            raise WindowError("cur/snap dtype mismatch")
         _, block_elems, _ = self._device_page_geometry(rank, cur.dtype)
         return np.asarray(dirty_blocks(cur, snap, block_elems=block_elems,
                                        tile_elems=tile_elems, impl=impl),
@@ -1142,36 +1268,75 @@ class Window:
         the window region starting at ``target_disp``: ``snap`` is the state
         the window already holds (last synced), ``cur`` the new state.  The
         Pallas ``dirty_diff`` kernel reduces them to a per-page bitmap
-        on-device; only the changed spans are copied device->host into the
-        page cache, and the write-back is queued with ``mask`` set to those
-        pages -- so both PCIe traffic and storage writes scale with the
-        *changed* bytes, not the window size.
+        on-device; only the changed element spans leave the device, and the
+        spans travel *with* the mask through the transport's masked
+        span-write primitive to the rank's page cache -- a single
+        control-channel round trip per target rank under a remote-owner
+        transport, the acting holder (with failover) on a replicated
+        window.  PCIe traffic, fabric traffic and storage writes all scale
+        with the *changed* bytes, not the window size.
+
+        Returns the flush's :class:`Request` (``wait()`` -> bytes flushed),
+        or the bytes directly with ``blocking=True``.  With
+        ``blocking=False`` the spans reach the page cache only when the
+        queued request executes (rput semantics: FIFO with other requests
+        to the rank; mixing in a blocking ``put`` needs ``flush(rank)``).
+        """
+        return self.sync_shards_from_device(
+            rank, [(cur, snap, target_disp)], blocking=blocking, impl=impl,
+            tile_elems=tile_elems)
+
+    def sync_shards_from_device(self, rank: int, shards, *,
+                                blocking: bool = False,
+                                impl: str | None = None,
+                                tile_elems: int | None = None):
+        """Sharded :meth:`sync_from_device`: one merged mask, one flush.
+
+        ``shards`` is an iterable of ``(cur, snap, target_disp)`` regions
+        of the rank's window (sharded device state: per-parameter slots,
+        per-device partitions).  Each shard's Pallas ``dirty_diff`` bitmap
+        is translated by its displacement and OR-merged into a single
+        window-block mask; all shards' changed spans are gathered and
+        shipped together with that mask in one masked span-write -- still
+        one round trip per target rank, however many shards contributed.
+        Shard regions must not overlap (the merged flush applies them in
+        list order).
 
         Returns the flush's :class:`Request` (``wait()`` -> bytes flushed),
         or the bytes directly with ``blocking=True``.
         """
-        flags = self._device_flags(rank, cur, snap, impl=impl,
-                                   tile_elems=tile_elems)
-        _, block_elems, _ = self._device_page_geometry(rank, cur.dtype)
-        itemsize = np.dtype(cur.dtype).itemsize
-        byte_off = target_disp * self.disp_unit
-        nelems = int(np.prod(np.shape(cur), dtype=np.int64))
-        mask = self._flags_to_window_mask(rank, flags, cur.dtype, nelems,
-                                          target_disp)
-        # ship only the changed element spans device->host into the page
-        # cache (a jax slice transfers just that span)
-        seg = self._seg(rank)
-        cur_flat = cur.reshape(-1)
-        for b0, b1 in dirty_runs(flags):
-            lo_e = b0 * block_elems
-            hi_e = min(b1 * block_elems, nelems)
-            chunk = np.ascontiguousarray(np.asarray(cur_flat[lo_e:hi_e]))
-            seg.write(byte_off + lo_e * itemsize,
-                      chunk.view(np.uint8).ravel())
-            self._note_write(rank, byte_off + lo_e * itemsize, chunk.nbytes)
+        from repro.kernels.dirty_diff import changed_elem_spans
+        shards = list(shards)
+        if not shards:
+            raise WindowError(
+                "sync_shards_from_device requires at least one shard")
+        spans: list[tuple[int, np.ndarray]] = []
+        mask: np.ndarray | None = None
+        for cur, snap, target_disp in shards:
+            flags = self._device_flags(rank, cur, snap, impl=impl,
+                                       tile_elems=tile_elems)
+            _, block_elems, _ = self._device_page_geometry(rank, cur.dtype)
+            itemsize = np.dtype(cur.dtype).itemsize
+            byte_off = target_disp * self.disp_unit
+            nelems = int(np.prod(np.shape(cur), dtype=np.int64))
+            m = self._flags_to_window_mask(rank, flags, cur.dtype, nelems,
+                                           target_disp)
+            mask = m if mask is None else mask | m
+            # only the changed element spans cross the device->host
+            # boundary (a jax slice transfers just that span)
+            cur_flat = cur.reshape(-1)
+            for lo_e, hi_e in changed_elem_spans(flags, block_elems, nelems):
+                chunk = np.ascontiguousarray(np.asarray(cur_flat[lo_e:hi_e]))
+                spans.append((byte_off + lo_e * itemsize,
+                              chunk.view(np.uint8).ravel()))
+        # normalize here with the tolerant device-diff rule (a device bitmap
+        # may pad past the last page); sync/flush_async then see an
+        # exact-length mask and keep their strict validation for everyone
+        # else -- user-supplied masks never get the padding leniency
+        mask = self._validate_mask(rank, mask, pad=True)
         if blocking:
-            return self.sync(rank, mask=mask)
-        return self.flush_async(rank, mask=mask)
+            return self.sync(rank, mask=mask, spans=spans)
+        return self.flush_async(rank, mask=mask, spans=spans)
 
     # -- resilience: live rebuild -------------------------------------------
     def rebuild_rank(self, rank: int, *, mark_alive: bool = True) -> int:

@@ -27,12 +27,33 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["dirty_diff_tpu", "DEFAULT_TILE_ELEMS"]
+__all__ = ["dirty_diff_tpu", "changed_elem_spans", "DEFAULT_TILE_ELEMS"]
 
 # Default tile: multiple of every dtype's minimum lane tiling (8*128 f32,
 # 16*128 bf16, 32*128 int8) and small enough that two resident input tiles
 # stay well under VMEM at any supported itemsize.
 DEFAULT_TILE_ELEMS = 4096
+
+
+def changed_elem_spans(flags, block_elems: int,
+                       nelems: int) -> list[tuple[int, int]]:
+    """Geometry helper: changed-flag bitmap -> coalesced element spans.
+
+    Translates the kernel's per-block flags into contiguous
+    ``[lo_elem, hi_elem)`` runs clipped to ``nelems`` (the last block may
+    be partial).  These are exactly the spans that must cross the
+    device->host boundary -- and, under a remote-owner transport, ride the
+    masked span-write message -- so every consumer of the bitmap shares
+    one clipping rule.
+    """
+    from repro.core.storage import dirty_runs  # host-side, jax-free
+    out = []
+    for b0, b1 in dirty_runs(flags):
+        lo = b0 * block_elems
+        hi = min(b1 * block_elems, nelems)
+        if lo < hi:
+            out.append((lo, hi))
+    return out
 
 
 def _kernel(cur_ref, snap_ref, flag_ref):

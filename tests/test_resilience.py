@@ -165,6 +165,78 @@ def test_failover_reads_writes_and_rebuild(tmp_path):
     comm.close()
 
 
+def test_sync_from_device_failover_inproc(tmp_path):
+    """The device-mask path routes through the acting holder like put():
+    with the primary (simulated) dead, the changed spans and the masked
+    flush land on the replica -- no TransportError, no full-window I/O."""
+    pytest.importorskip("jax.numpy")
+    PAGE = 4096
+    comm = Communicator(2)
+    win = Window.allocate(comm, 16 * PAGE, info=rep_info(tmp_path, k=2))
+    elems = 16 * PAGE // 4
+    state = np.arange(elems, dtype=np.float32)
+    win.put(state, 0, 0)
+    win.sync(0)  # k durable copies of the baseline
+    comm.mark_dead(0)
+    cur = state.copy()
+    cur[(PAGE // 4) * 4 + 2] += 1.0   # page 4
+    flushed = win.sync_from_device(0, cur, state, blocking=True)
+    assert flushed == PAGE
+    # the acting replica holds (and persisted) the change...
+    assert (win.get(0, 0, elems, np.float32) == cur).all()
+    rep = np.fromfile(str(tmp_path / "w.bin.rep1.0"), np.float32)
+    assert (rep == cur).all()
+    # ...and the primary's file stayed at the old epoch (it is dead)
+    prim = np.fromfile(str(tmp_path / "w.bin.0"), np.float32)
+    assert (prim == state).all()
+    # the nonblocking variant takes the same route
+    cur2 = cur.copy()
+    cur2[(PAGE // 4) * 9] += 1.0      # page 9
+    assert win.sync_from_device(0, cur2, cur).wait(timeout=30.0) == PAGE
+    rep = np.fromfile(str(tmp_path / "w.bin.rep1.0"), np.float32)
+    assert (rep == cur2).all()
+    comm.mark_alive(0)
+    win.rebuild_rank(0)  # reconcile the stale primary before teardown
+    win.free()
+    comm.close()
+
+
+@needs_shm
+def test_mp_sync_from_device_failover_survives_sigkill(tmp_path):
+    """ISSUE regression: SIGKILL the primary's worker, then run
+    sync_from_device against it -- the TransportError surfaces *inside*
+    the op, fails over to the replica holder, and the masked span write
+    completes there (replay of the whole span set, never a partial
+    epoch)."""
+    pytest.importorskip("jax.numpy")
+    PAGE = 4096
+    comm = Communicator(2, transport="mp")
+    try:
+        win = Window.allocate(comm, 16 * PAGE, info=rep_info(tmp_path, k=2))
+        elems = 16 * PAGE // 4
+        state = np.random.default_rng(7).standard_normal(elems).astype(
+            np.float32)
+        win.put(state, 0, 0)
+        win.sync(0)  # baseline durable on both holders
+
+        comm.transport._procs[0].kill()
+        comm.transport._procs[0].join(timeout=10)
+        assert 0 not in comm.dead_ranks  # death not yet observed
+
+        cur = state.copy()
+        cur[(PAGE // 4) * 2 + 1] += 1.0   # page 2
+        cur[(PAGE // 4) * 9 + 5] += 1.0   # page 9
+        flushed = win.sync_from_device(0, cur, state, blocking=True)
+        assert flushed == 2 * PAGE
+        assert 0 in comm.dead_ranks  # the op discovered the death itself
+        assert (win.get(0, 0, elems, np.float32) == cur).all()
+        rep = np.fromfile(str(tmp_path / "w.bin.rep1.0"), np.float32)
+        assert (rep == cur).all()
+        win.free()  # survivable teardown: every partition has a live holder
+    finally:
+        comm.close()
+
+
 def test_failover_exhausted_raises(tmp_path):
     comm = Communicator(4)
     win = Window.allocate(comm, 1024, info=rep_info(tmp_path, k=2))

@@ -87,6 +87,48 @@ def test_mask_on_memory_window_is_noop():
     win.free()
 
 
+def test_mask_wrong_length_raises(tmp_path):
+    """A short mask would silently leave a dirty tail unselected (the old
+    DirtyTracker truncation); the window now validates the block count and
+    raises instead.  2-D masks of the right total size ravel cleanly."""
+    from repro.core import WindowError
+    comm = Communicator(1)
+    win = Window.allocate(comm, PAGES * PAGE, info=storage_info(tmp_path))
+    win.put(np.full(16, 1, np.uint8), 0, (PAGES - 1) * PAGE)  # dirty tail
+    with pytest.raises(WindowError, match="blocks"):
+        win.sync(0, mask=np.ones(PAGES - 1, bool))   # short
+    with pytest.raises(WindowError, match="blocks"):
+        win.sync(0, mask=np.ones(PAGES + 3, bool))   # long
+    with pytest.raises(WindowError, match="blocks"):
+        win.flush_async(0, mask=np.ones(2, bool))
+    # the spans kwarg gets no padding leniency either (only the internal
+    # device-diff path may pad, and it normalizes before reaching here)
+    with pytest.raises(WindowError, match="blocks"):
+        win.sync(0, mask=np.ones(2, bool),
+                 spans=[(15 * PAGE, np.ones(16, np.uint8))])
+    assert win.dirty_bytes(0) == PAGE  # nothing was taken by the rejects
+    m2 = np.zeros((4, PAGES // 4), bool)
+    m2[3, 3] = True  # ravels to block 15 -- the dirty tail page
+    assert win.sync(0, mask=m2) == PAGE
+    assert win.dirty_bytes(0) == 0
+    win.free()
+
+
+def test_mask_wrong_length_raises_combined(tmp_path):
+    """Combined windows validate against the *window* block count, not the
+    storage subrange's: a storage-coordinate mask is a geometry bug."""
+    from repro.core import WindowError
+    comm = Communicator(1)
+    info = {**storage_info(tmp_path, "c.bin"), "storage_alloc_factor": "0.5"}
+    win = Window.allocate(comm, PAGES * PAGE, info=info)
+    assert win.flavor == "combined"
+    win.put(np.full(16, 2, np.uint8), 0, 10 * PAGE)
+    with pytest.raises(WindowError, match="blocks"):
+        win.sync(0, mask=np.ones(8, bool))  # storage blocks, not window
+    assert win.sync(0, mask=np.ones(PAGES, bool)) == PAGE
+    win.free()
+
+
 # -- sync_from_device ---------------------------------------------------------
 
 def test_sync_from_device_ships_and_flushes_only_changed_pages(tmp_path):
@@ -157,6 +199,84 @@ def test_device_dirty_mask_feeds_flush(tmp_path):
     win.free()
 
 
+# -- sharded device state: merged masks, one flush ----------------------------
+
+def test_sync_shards_from_device_merges_masks(tmp_path):
+    jnp = pytest.importorskip("jax.numpy")
+    comm = Communicator(1)
+    win = Window.allocate(comm, PAGES * PAGE, info=storage_info(tmp_path))
+    a_snap = np.zeros(3 * PAGE // 4, np.float32)   # pages 0-2
+    b_snap = np.ones(4 * PAGE // 4, np.float32)    # pages 8-11
+    win.put(a_snap, 0, 0)
+    win.put(b_snap, 0, 8 * PAGE)
+    win.sync(0)
+    backing = win.segments[0].backing
+    base_flushed = backing.bytes_flushed
+    a_cur = a_snap.copy()
+    a_cur[(PAGE // 4) + 1] = 5.0                   # page 1
+    b_cur = b_snap.copy()
+    b_cur[0] = 6.0                                 # page 8
+    b_cur[-1] = 7.0                                # page 11
+    req = win.sync_shards_from_device(
+        0, [(jnp.asarray(a_cur), jnp.asarray(a_snap), 0),
+            (jnp.asarray(b_cur), jnp.asarray(b_snap), 8 * PAGE)])
+    assert req.wait(timeout=30.0) == 3 * PAGE
+    assert backing.bytes_flushed - base_flushed == 3 * PAGE
+    disk = np.fromfile(tmp_path / "w.bin", np.float32)
+    assert (disk[: a_cur.size] == a_cur).all()
+    assert (disk[8 * PAGE // 4: 12 * PAGE // 4] == b_cur).all()
+    assert win.dirty_bytes(0) == 0
+    win.free()
+
+
+def test_sync_shards_validation(tmp_path):
+    from repro.core import WindowError
+    comm = Communicator(1)
+    win = Window.allocate(comm, PAGES * PAGE, info=storage_info(tmp_path))
+    with pytest.raises(WindowError, match="at least one shard"):
+        win.sync_shards_from_device(0, [], blocking=True)
+    a = np.zeros(PAGE // 4, np.float32)
+    with pytest.raises(WindowError, match="dtype mismatch"):
+        win.sync_shards_from_device(
+            0, [(a, a.astype(np.float64), 0)], blocking=True)
+    with pytest.raises(WindowError, match="shape mismatch"):
+        win.sync_shards_from_device(0, [(a, a[:-1], 0)], blocking=True)
+    win.free()
+
+
+def test_offload_opt_sync_masters_from_device(tmp_path):
+    """Device-resident master weights persist through the merged shard
+    mask: only the changed pages of the changed tensors flush."""
+    pytest.importorskip("jax.numpy")
+    from repro.train.offload_opt import OutOfCoreAdamW
+    from repro.train.optimizer import AdamWConfig
+
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=10,
+                      clip_norm=0.0, weight_decay=0.0)
+    shapes = {"w": ((2 * PAGE // 4,), np.float32),
+              "b": ((PAGE // 4,), np.float32)}
+    params = {k: np.arange(int(np.prod(s[0])), dtype=np.float32)
+              for k, s in shapes.items()}
+    oo = OutOfCoreAdamW(Communicator(1), shapes, str(tmp_path), cfg)
+    oo.initialize(params)
+    oo.state.sync()  # clean baseline
+    old = oo.masters()
+    new = {k: v.copy() for k, v in old.items()}
+    new["w"][(PAGE // 4) + 3] += 1.0   # one page of w; b untouched
+    flushed = oo.sync_masters_from_device(new, old)
+    assert flushed == PAGE
+    assert (oo.state.get("master/w") == new["w"]).all()
+    assert (oo.state.get("master/b") == old["b"]).all()
+    assert oo.state.win.dirty_bytes(0) == 0
+    # sparse update: a name absent from masters is skipped outright
+    assert oo.sync_masters_from_device({}, {}) == 0
+    with pytest.raises(ValueError, match="window layout"):
+        oo.sync_masters_from_device(
+            {"w": new["w"].astype(np.float64)},
+            {"w": old["w"].astype(np.float64)})
+    oo.free()
+
+
 # -- combined windows: mask offsets respect the memory/storage split ----------
 
 def test_combined_mask_offset_translation(tmp_path):
@@ -213,6 +333,54 @@ def test_ckpt_snapshot_diff_async_roundtrip(tmp_path):
     assert cm.saves == 3
     r = cm.restore()
     assert r.step == 3 and (r.tree["w"] == w).all()
+    cm.close()
+
+
+def _per_byte_model_pages(wt, t_old, t_new, ps) -> int:
+    """Independent per-byte model of the snapshot diff: lay both trees out
+    at their slot offsets and count pages holding any differing byte."""
+    size = wt.win.segments[0].size
+    bufs = []
+    for tree in (t_old, t_new):
+        buf = np.zeros(size, np.uint8)
+        for k, slot in wt.slots.items():
+            raw = np.ascontiguousarray(tree[k], slot.dtype).view(
+                np.uint8).ravel()
+            buf[slot.offset: slot.offset + raw.nbytes] = raw
+        bufs.append(buf)
+    old, new = bufs
+    changed = 0
+    for lo in range(0, size, ps):
+        if not np.array_equal(old[lo: lo + ps], new[lo: lo + ps]):
+            changed += 1
+    return changed
+
+
+def test_ckpt_sharded_merged_mask_matches_per_byte_model(tmp_path):
+    """Each slot stages as a shard; the merged mask's flush must equal the
+    per-byte model's changed-page count exactly -- across slots, scattered
+    changes, and an untouched tensor."""
+    comm = Communicator(1)
+    specs = {"a": ((4 * PAGE // 4,), np.float32),
+             "b": ((6 * PAGE // 4,), np.float32),
+             "c": ((8,), np.float32)}
+    cm = CheckpointManager(str(tmp_path), comm, specs, double_buffer=False)
+    rng = np.random.default_rng(11)
+    t1 = {k: rng.standard_normal(int(np.prod(s[0]))).astype(np.float32)
+          for k, s in specs.items()}
+    cm.save(1, t1)
+    t2 = {k: v.copy() for k, v in t1.items()}
+    t2["a"][PAGE // 4 + 5] += 1.0        # one page of a
+    t2["b"][0] += 1.0                    # first page of b
+    t2["b"][-1] += 1.0                   # last (partial) page of b
+    wt = cm.windows["a"]
+    expected = _per_byte_model_pages(wt, t1, t2, PAGE)
+    f2 = cm.save(2, t2)
+    assert f2 == expected * PAGE == 3 * PAGE
+    r = cm.restore()
+    assert r.step == 2
+    for k in specs:
+        assert (r.tree[k] == t2[k]).all(), k
     cm.close()
 
 
@@ -363,10 +531,11 @@ def test_offload_opt_touched_mask_survives_flush_failure(tmp_path):
     oo.free()
 
 
-def test_ckpt_stage_failure_invalidates_snapshot(tmp_path):
-    """A failure during staging itself (put dies mid-way) leaves a mixed
-    page cache; the snapshot must be dropped so the next save replays a
-    full put + unmasked flush and the checkpoint CRC-validates."""
+def test_ckpt_span_apply_failure_invalidates_snapshot(tmp_path):
+    """A failure while the masked span-write applies the staged spans (a
+    cache write dying mid-way) leaves a mixed page cache; the snapshot must
+    be dropped so the next save replays a full put + unmasked flush and the
+    checkpoint CRC-validates."""
     comm = Communicator(1)
     specs = {"w": ((1 << 14,), np.float32)}
     cm = CheckpointManager(str(tmp_path), comm, specs, double_buffer=False)
@@ -376,20 +545,22 @@ def test_ckpt_stage_failure_invalidates_snapshot(tmp_path):
 
     w2 = w1.copy()
     w2[: PAGE // 4] += 1.0
-    w2[-(PAGE // 4):] += 1.0  # two scattered changed regions -> two puts
-    orig_put = wt.win.put
+    w2[-(PAGE // 4):] += 1.0  # two scattered changed regions -> two spans
+    seg = wt.win.segments[0]
+    orig_write = seg.write
     calls = {"n": 0}
 
-    def dying_put(data, rank, disp=0, **kw):
+    def dying_write(offset, data):
         calls["n"] += 1
         if calls["n"] > 1:
-            raise _DiskDies("cache eviction hit a dead disk")
-        return orig_put(data, rank, disp, **kw)
+            raise _DiskDies("cache write hit a dead disk")
+        return orig_write(offset, data)
 
-    wt.win.put = dying_put
+    seg.write = dying_write
     with pytest.raises(_DiskDies):
         cm.save(2, {"w": w2})
-    wt.win.put = orig_put
+    seg.write = orig_write
+    assert calls["n"] == 2  # died genuinely mid-apply
     assert "a" not in cm._snapshots  # stale snapshot dropped
     assert _manifest_step(tmp_path) == 1
 
@@ -499,13 +670,15 @@ def test_crash_replay_mp_worker_death_never_commits_manifest(tmp_path):
     cm.save(5, {"w": w1})
     assert _manifest_step(tmp_path) == 5
 
-    # SIGKILL the page-cache-owning worker: the next save dies before any
-    # of step 6's bytes can reach storage, so no manifest may name step 6
+    # SIGKILL the page-cache-owning worker: the next save's span apply
+    # (flush task) dies before any of step 6's bytes can reach storage, so
+    # no manifest may name step 6 -- the error surfaces at wait()
     comm.transport._procs[0].kill()
     comm.transport._procs[0].join(timeout=10)
     from repro.core import TransportError
+    req = cm.save_async(6, {"w": w1 * 2})
     with pytest.raises(TransportError):
-        cm.save_async(6, {"w": w1 * 2})
+        req.wait(timeout=30.0)
     assert _manifest_step(tmp_path) == 5
     with pytest.raises(TransportError):
         cm.close()

@@ -224,6 +224,159 @@ def test_mapreduce_results_match_reference(comm4, tmp_path):
     mr.free()
 
 
+# -- masked selective sync: same bytes flushed over both backends -------------
+
+PAGE = 4096
+
+
+def _page_mask(*blocks, n=16):
+    m = np.zeros(n, dtype=bool)
+    for b in blocks:
+        m[b] = True
+    return m
+
+
+def _masked_sync_case(comm, base, *, blocking):
+    """Dirty pages 1/3/5 of rank 2, flush {3,7} masked, then the rest."""
+    win = Window.allocate(comm, 16 * PAGE, info=storage_info(base, "m.bin"))
+    try:
+        for pg in (1, 3, 5):
+            win.put(np.full(32, pg + 1, np.uint8), 2, pg * PAGE)
+        if blocking:
+            masked = win.sync(2, mask=_page_mask(3, 7))
+        else:
+            masked = win.flush_async(2, mask=_page_mask(3, 7)).wait(
+                timeout=30.0)
+        rest = win.sync(2)
+        disk = np.fromfile(str(base / "m.bin.2"), np.uint8)
+        return masked, rest, int(disk[3 * PAGE]), int(disk[5 * PAGE])
+    finally:
+        win.free()
+
+
+@pytest.mark.parametrize("blocking", [True, False], ids=["sync", "flush_async"])
+def test_masked_sync_bytes_parity(comm4, tmp_path, blocking):
+    """sync(mask=)/flush_async(mask=) flush the same intersection bytes on
+    every backend: the owner's DirtyTracker does the narrowing, wherever
+    the page cache lives."""
+    ref_comm = Communicator(4, transport="inproc")  # pinned reference
+    ref = _masked_sync_case(ref_comm, tmp_path / "ref", blocking=blocking)
+    ref_comm.close()
+    got = _masked_sync_case(comm4, tmp_path / "run", blocking=blocking)
+    assert got == ref == (PAGE, 2 * PAGE, 4, 6)
+
+
+def test_mask_length_validated_on_both_backends(comm4, tmp_path):
+    from repro.core import WindowError
+    with Window.allocate(comm4, 16 * PAGE,
+                         info=storage_info(tmp_path, "v.bin")) as win:
+        with pytest.raises(WindowError, match="blocks"):
+            win.sync(1, mask=np.ones(15, bool))  # short: would skip the tail
+        with pytest.raises(WindowError, match="blocks"):
+            win.flush_async(1, mask=np.ones(17, bool))
+
+
+def _device_sync_case(comm, base, jnp, *, blocking):
+    win = Window.allocate(comm, 16 * PAGE, info=storage_info(base, "d.bin"))
+    try:
+        elems = 16 * PAGE // 4
+        snap = np.arange(elems, dtype=np.float32)
+        win.put(snap, 1, 0)
+        win.sync(1)
+        cur = snap.copy()
+        cur[(PAGE // 4) * 4 + 1] += 1.0   # page 4
+        cur[(PAGE // 4) * 11] += 2.0      # page 11
+        res = win.sync_from_device(1, jnp.asarray(cur), jnp.asarray(snap),
+                                   blocking=blocking)
+        flushed = res if blocking else res.wait(timeout=30.0)
+        disk = np.fromfile(str(base / "d.bin.1"), np.float32)
+        return flushed, bool((disk == cur).all()), win.dirty_bytes(1)
+    finally:
+        win.free()
+
+
+@pytest.mark.parametrize("blocking", [True, False], ids=["sync", "flush_async"])
+def test_sync_from_device_remote_owner_parity(comm4, tmp_path, blocking):
+    """The device-mask pipeline is transport-native: changed spans + mask
+    reach the owner's page cache and DirtyTracker wherever the rank lives,
+    flushing exactly the changed pages on both backends."""
+    jnp = pytest.importorskip("jax.numpy")
+    ref_comm = Communicator(4, transport="inproc")
+    ref = _device_sync_case(ref_comm, tmp_path / "ref", jnp,
+                            blocking=blocking)
+    ref_comm.close()
+    got = _device_sync_case(comm4, tmp_path / "run", jnp, blocking=blocking)
+    assert got == ref == (2 * PAGE, True, 0)
+
+
+def test_sync_from_device_one_round_trip_mp(comm4, tmp_path):
+    """Under mp the whole device-sync epilogue -- spans, mask, masked flush
+    -- is a single ``wsync`` control-channel message to the target rank."""
+    pytest.importorskip("jax.numpy")
+    if comm4.transport.kind != "mp":
+        pytest.skip("round-trip accounting is mp-specific")
+    win = Window.allocate(comm4, 16 * PAGE, info=storage_info(tmp_path))
+    try:
+        elems = 16 * PAGE // 4
+        snap = np.arange(elems, dtype=np.float32)
+        win.put(snap, 3, 0)
+        win.sync(3)
+        cur = snap.copy()
+        cur[0] += 1.0
+        cur[-1] += 1.0
+        ops = []
+        orig_call = comm4.transport._call
+
+        def counting_call(rank, msg):
+            ops.append((rank, msg[0]))
+            return orig_call(rank, msg)
+
+        comm4.transport._call = counting_call
+        try:
+            assert win.sync_from_device(3, cur, snap, blocking=True) \
+                == 2 * PAGE
+        finally:
+            comm4.transport._call = orig_call
+        assert ops == [(3, "wsync")]  # one message carried everything
+    finally:
+        win.free()
+
+
+def test_sync_shards_merged_mask_parity(comm4, tmp_path):
+    """Two shard regions at different displacements merge into one mask
+    and one flush; per-shard bytes land byte-exact on every backend."""
+    jnp = pytest.importorskip("jax.numpy")
+
+    def case(comm, base):
+        win = Window.allocate(comm, 16 * PAGE,
+                              info=storage_info(base, "s.bin"))
+        try:
+            a_snap = np.zeros(2 * PAGE // 4, np.float32)       # pages 0-1
+            b_snap = np.ones(4 * PAGE // 4, np.float32)        # pages 8-11
+            win.put(a_snap, 0, 0)
+            win.put(b_snap, 0, 8 * PAGE)
+            win.sync(0)
+            a_cur = a_snap.copy()
+            a_cur[3] = 7.0                                     # page 0
+            b_cur = b_snap.copy()
+            b_cur[-1] = -1.0                                   # page 11
+            flushed = win.sync_shards_from_device(
+                0, [(jnp.asarray(a_cur), jnp.asarray(a_snap), 0),
+                    (jnp.asarray(b_cur), jnp.asarray(b_snap), 8 * PAGE)],
+                blocking=True)
+            disk = np.fromfile(str(base / "s.bin.0"), np.float32)
+            return (flushed, float(disk[3]),
+                    float(disk[12 * PAGE // 4 - 1]), win.dirty_bytes(0))
+        finally:
+            win.free()
+
+    ref_comm = Communicator(4, transport="inproc")
+    ref = case(ref_comm, tmp_path / "ref")
+    ref_comm.close()
+    got = case(comm4, tmp_path / "run")
+    assert got == ref == (2 * PAGE, 7.0, -1.0, 0)
+
+
 # -- multiprocess-only behavior ----------------------------------------------
 
 needs_shm = pytest.mark.skipif(not HAVE_SHM,
