@@ -20,19 +20,46 @@ def timer():
 
 
 class Bench:
-    """Collects rows and prints the ``name,us_per_call,derived`` CSV."""
+    """Collects rows and prints the ``name,us_per_call,derived`` CSV.
+
+    Rows are measurements; *gates* are enforced thresholds recorded
+    alongside them (``gate()``), so ``--json`` output carries both the
+    numbers and whether each suite's contract held.
+    """
 
     def __init__(self, name: str):
         self.name = name
         self.rows: list[tuple[str, float, str]] = []
+        self.gates: list[dict] = []
 
     def add(self, label: str, seconds: float, calls: int = 1, derived: str = ""):
         us = seconds / max(1, calls) * 1e6
         self.rows.append((f"{self.name}/{label}", us, derived))
 
+    def gate(self, label: str, value: float, threshold: float, *,
+             unit: str = "us") -> bool:
+        """Record an enforced ``value <= threshold`` check; returns pass."""
+        passed = value <= threshold
+        self.gates.append({"label": f"{self.name}/{label}", "value": value,
+                           "threshold": threshold, "unit": unit,
+                           "passed": passed})
+        self.rows.append((f"{self.name}/gate/{label}", value,
+                          f"{'PASS' if passed else 'FAIL'}"
+                          f"<= {threshold}{unit}"))
+        return passed
+
     def emit(self) -> None:
         for label, us, derived in self.rows:
             print(f"{label},{us:.2f},{derived}")
+
+    def to_dict(self) -> dict:
+        return {
+            "suite": self.name,
+            "results": [{"metric": label, "value_us": round(us, 3),
+                         "derived": derived}
+                        for label, us, derived in self.rows],
+            "gates": list(self.gates),
+        }
 
 
 @contextlib.contextmanager

@@ -5,10 +5,15 @@ memory vs storage allocation, *without* storage synchronization -- the
 paper's claim is that the page cache makes the two indistinguishable for
 RMA traffic (<=1% difference).  Transfer sizes 256 KiB..4 MiB, non-aggregate
 (one op per epoch), like the paper's configuration.
+
+Also enforces a small-op latency gate: 8-byte put/get must stay under
+``REPRO_SMALLOP_GATE_US`` (default 2000 us/op) on both allocation kinds;
+the run fails past it, and the outcome rides in ``run.py --json`` output.
 """
 
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -18,6 +23,12 @@ from repro.core import Communicator, Window
 
 SIZES = [256 << 10, 1 << 20, 4 << 20]
 ITERS = 40
+
+#: enforced ceiling on 8-byte put/get latency (us/op).  Small ops are the
+#: paper's worst case for storage windows -- per-op overhead can't hide
+#: under transfer time -- so this is where a control-path regression
+#: (locking, tracker bookkeeping, proxy hops) shows up first.
+SMALLOP_GATE_US = float(os.environ.get("REPRO_SMALLOP_GATE_US", "2000"))
 
 
 def _win(comm, size, tmp, storage: bool):
@@ -34,6 +45,7 @@ def _bw(nbytes, secs):
 
 def run(bench: Bench) -> None:
     comm = Communicator(2)
+    gates_ok = True
     with workdir("imb") as tmp:
         for storage in (False, True):
             kind = "storage" if storage else "memory"
@@ -100,6 +112,22 @@ def run(bench: Bench) -> None:
                 win.compare_and_swap(i + 1, i, 1, 8)
             dt = time.perf_counter() - t0
             bench.add(f"cas/{kind}", dt, ITERS * 10)
+
+            # enforced small-op latency gate: 8-byte put/get round trips
+            small = np.arange(8, dtype=np.uint8)
+            n = ITERS * 10
+            t0 = time.perf_counter()
+            for _ in range(n):
+                win.lock(1); win.put(small, 1, 0); win.unlock(1)
+            put_us = (time.perf_counter() - t0) / n * 1e6
+            t0 = time.perf_counter()
+            for _ in range(n):
+                win.lock(1); win.get(1, 0, 8); win.unlock(1)
+            get_us = (time.perf_counter() - t0) / n * 1e6
+            gates_ok &= bench.gate(f"smallop_put/{kind}", put_us,
+                                   SMALLOP_GATE_US)
+            gates_ok &= bench.gate(f"smallop_get/{kind}", get_us,
+                                   SMALLOP_GATE_US)
             win.free()
 
         # paper's conclusion quantified: storage/memory put ratio at 1 MiB
@@ -107,3 +135,9 @@ def run(bench: Bench) -> None:
         sto = next(us for l, us, _ in bench.rows if l.endswith("uni_put/storage/1024KiB"))
         bench.add("put_overhead_storage_vs_memory", sto / mem / 1e6, 1,
                   f"ratio={sto / mem:.3f}")
+    if not gates_ok:
+        worst = max(bench.gates, key=lambda g: g["value"] / g["threshold"])
+        raise RuntimeError(
+            f"imb_rma small-op gate: {worst['label']} = "
+            f"{worst['value']:.1f}us exceeds {worst['threshold']:.0f}us "
+            "(tune REPRO_SMALLOP_GATE_US to re-baseline)")

@@ -1,8 +1,11 @@
 """Benchmark driver: one suite per paper table/figure + the roofline report.
 
-Prints ``name,us_per_call,derived`` CSV rows (deliverable d).
+Prints ``name,us_per_call,derived`` CSV rows (deliverable d); ``--json
+PATH`` additionally writes a machine-readable report (per-suite metrics,
+transport, and every enforced gate's value/threshold/outcome).
 Suites:
-  imb_rma          -- paper Fig. 5/6  (RMA throughput, memory vs storage)
+  imb_rma          -- paper Fig. 5/6  (RMA throughput, memory vs storage;
+                      enforced 8-byte put/get latency gate)
   mstream          -- paper Fig. 7/8  (large streaming ops + flush fraction)
   dht              -- paper Fig. 9/10 (DHT inserts, out-of-core, combined)
   hacc_io          -- paper Fig. 11   (checkpoint/restart vs POSIX baseline)
@@ -25,6 +28,8 @@ backend, the SIGKILL recovery half to mp.)
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
 
@@ -46,8 +51,13 @@ def main() -> None:
                     help="transport for the transport-aware suites "
                          f"{TRANSPORT_AWARE} (default: $REPRO_TRANSPORT "
                          "or inproc)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write machine-readable results (per-suite "
+                         "metrics, transport, gate outcomes) to PATH")
     args = ap.parse_args()
+    transport = args.transport or os.environ.get("REPRO_TRANSPORT", "inproc")
     failures = []
+    report = []
     for name in SUITES:
         if args.only and name != args.only:
             continue
@@ -78,10 +88,28 @@ def main() -> None:
             else:
                 m.run(bench)
             bench.emit()
-        except Exception:
+            error = None
+        except Exception as e:
             failures.append(name)
+            error = f"{type(e).__name__}: {e}"
             print(f"{name},ERROR,", file=sys.stderr)
             traceback.print_exc()
+        entry = bench.to_dict()
+        entry["transport"] = (transport if name in TRANSPORT_AWARE
+                              else "pinned" if name == "replication"
+                              else "inproc")
+        entry["error"] = error
+        entry["gates_passed"] = (error is None
+                                 and all(g["passed"] for g in bench.gates))
+        report.append(entry)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"transport": transport,
+                       "gates_passed": all(s["gates_passed"]
+                                           for s in report),
+                       "suites": report}, f, indent=1)
+            f.write("\n")
+        print(f"json report: {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(f"benchmark suites failed: {failures}")
 

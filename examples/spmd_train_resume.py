@@ -1,0 +1,93 @@
+"""SPMD training with mid-run rank death and exact resume.
+
+Drives the same path as ``python -m repro.launch.train --spmd``: N worker
+ranks each run the Trainer themselves (their own device diffs, their own
+mirrored writes, their own checkpoint manifests) while this process is
+only a launcher/monitor.  Two failures are exercised:
+
+1. **Rank death**: one rank is SIGKILLed after its first checkpoint
+   commits; ``rebuild_rank`` respawns it, and the respawn re-enters the
+   application entry point, restores from its *own* manifest, and resumes
+   from a nonzero step -- survivors never restart.
+2. **Whole-job death**: a second launcher over the same checkpoint
+   directory must resume every rank exactly at the last committed step.
+
+Exits nonzero if any rank restarted from scratch or the launcher issued
+any data-path operation.  Used by scripts/tier1.sh's SPMD smoke lane.
+"""
+
+import os
+import signal
+import sys
+import tempfile
+import time
+
+NRANKS = 2
+STEPS_1 = 6   # first job: killed partway, finishes after respawn
+STEPS_2 = 10  # second job: must resume at step 6, not step 0
+
+
+def _opts(steps: int, ckpt_dir: str) -> dict:
+    return {"arch": "internlm2-1.8b", "smoke": True, "steps": steps,
+            "batch": 2, "seq": 32, "microbatches": 1, "lr": 3e-4,
+            "ckpt_dir": ckpt_dir, "ckpt_every": 2, "mode": "fused",
+            "compression": False, "probe_interval": 0.3}
+
+
+def main() -> None:
+    from repro.core.transport.spmd import SpmdLauncher
+    from repro.launch.train import _spmd_entry
+
+    d = tempfile.mkdtemp(prefix="spmd-train-")
+    victim = 1
+
+    # -- phase 1: kill one rank after its first checkpoint, respawn -------
+    launcher = SpmdLauncher(NRANKS, _spmd_entry, (_opts(STEPS_1, d),))
+    try:
+        marker = os.path.join(d, f"manifest.r{victim}.json")
+        deadline = time.monotonic() + 180
+        while not os.path.exists(marker):
+            if time.monotonic() > deadline:
+                raise SystemExit("victim rank never committed a checkpoint")
+            time.sleep(0.1)
+        os.kill(launcher._procs[victim].pid, signal.SIGKILL)
+        print(f"killed rank {victim} after its first checkpoint",
+              flush=True)
+        while launcher.probe(victim):
+            time.sleep(0.05)
+        launcher.rebuild_rank(victim)
+        results = sorted(launcher.wait(timeout=240),
+                         key=lambda r: r["rank"])
+        resumed = results[victim]["resumed_from"]
+        assert resumed is not None and resumed > 0, \
+            f"respawned rank restarted from scratch: {results[victim]}"
+        assert launcher.data_ops() == 0, "launcher issued data-path ops"
+        print(f"rank {victim} resumed from step {resumed} after SIGKILL",
+              flush=True)
+    finally:
+        launcher.shutdown()
+
+    # -- phase 2: whole-job restart resumes every rank exactly ------------
+    launcher = SpmdLauncher(NRANKS, _spmd_entry, (_opts(STEPS_2, d),))
+    try:
+        results = sorted(launcher.wait(timeout=240),
+                         key=lambda r: r["rank"])
+        for res in results:
+            assert res["resumed_from"] == STEPS_1, \
+                f"rank {res['rank']} resumed at {res['resumed_from']}, " \
+                f"expected {STEPS_1}"
+        assert launcher.data_ops() == 0, "launcher issued data-path ops"
+        print(f"whole-job restart: all {NRANKS} ranks resumed exactly at "
+              f"step {STEPS_1}", flush=True)
+    finally:
+        launcher.shutdown()
+    print("spmd_train_resume: PASS", flush=True)
+
+
+if __name__ == "__main__":
+    try:
+        import multiprocessing.shared_memory  # noqa: F401
+    except ImportError:
+        print("spmd_train_resume: SKIP (no multiprocessing.shared_memory)")
+        sys.exit(0)
+    main()

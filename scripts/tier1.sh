@@ -13,6 +13,12 @@
 # start method (safe under threaded parents), bounded by a timeout, and
 # skipped gracefully where multiprocessing.shared_memory is unavailable.
 #
+# An SPMD smoke lane then runs real training with every rank as its own
+# origin (the repro.launch.train --spmd path): one rank is SIGKILLed
+# mid-run and must resume exactly from its own checkpoint after respawn,
+# and a whole-job restart must resume every rank at the last committed
+# step.  Skipped gracefully without shared_memory or jax.
+#
 # Usage: scripts/tier1.sh [extra pytest args...]
 #   TIER1_QUICK=1 scripts/tier1.sh    # exclude @pytest.mark.slow stress tests
 #   TIER1_NO_MP=1 scripts/tier1.sh    # skip the multiprocess smoke lane
@@ -69,4 +75,20 @@ else
     # replica-holding worker mid-traffic, assert continued DHT service via
     # failover (zero lost synced data) and a bit-exact respawn+rebuild
     timeout 300 "${MP_ENV[@]}" python examples/replicated_failover.py
+fi
+
+# -- SPMD smoke lane ----------------------------------------------------------
+if [[ "${TIER1_NO_MP:-0}" == "1" ]]; then
+    echo "tier1: TIER1_NO_MP=1 -- skipping SPMD smoke lane" >&2
+elif ! python -c "import multiprocessing.shared_memory" >/dev/null 2>&1; then
+    echo "tier1: multiprocessing.shared_memory unavailable --" \
+         "skipping SPMD smoke lane" >&2
+elif ! python -c "import jax" >/dev/null 2>&1; then
+    echo "tier1: jax unavailable -- skipping SPMD smoke lane" >&2
+else
+    echo "tier1: SPMD smoke lane (2 application ranks, mid-run SIGKILL," \
+         "exact resume)" >&2
+    timeout 500 env JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}" \
+        PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python examples/spmd_train_resume.py
 fi

@@ -130,7 +130,17 @@ class CheckpointManager:
 
     # -- manifest -------------------------------------------------------------
     def _manifest_path(self, prev: bool = False) -> str:
-        return os.path.join(self.directory, _MANIFEST_PREV if prev else _MANIFEST)
+        """Rank 0 keeps the historical names (``manifest.json``), so a
+        driver-origin checkpoint restores unchanged; SPMD ranks > 0 each
+        commit their own ``manifest.r<rank>.json`` beside it -- per-rank
+        save cadences stay independent and the union of files is identical
+        whether the same workload ran driver-origin or SPMD."""
+        if self.rank == 0:
+            name = _MANIFEST_PREV if prev else _MANIFEST
+        else:
+            name = (f"manifest.r{self.rank}.prev.json" if prev
+                    else f"manifest.r{self.rank}.json")
+        return os.path.join(self.directory, name)
 
     def _write_manifest(self, step: int, target: str,
                         crcs: dict[str, int]) -> None:

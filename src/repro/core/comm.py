@@ -66,6 +66,13 @@ class Communicator:
         size and ``REPRO_RANK`` this process's identity; explicit arguments
         win over the environment.  With nothing set this is simply
         ``Communicator(default_size)``.
+
+        Rank-symmetric: a nonzero ``REPRO_RANK`` never assumes driver
+        identity -- the returned communicator is this worker rank's
+        rank-local view (see ``repro.core.transport.RankLocalTransport``),
+        materializing only its own window partitions with the shared
+        on-disk naming.  Requesting the (driver-only, world-spawning)
+        ``mp`` transport from a nonzero rank raises.
         """
         size = nranks if nranks is not None else env_nranks(default_size)
         return cls(size, rank=env_rank(0), transport=transport)

@@ -3,19 +3,52 @@
 ``Window``/``Communicator`` never talk to segments or processes directly --
 they go through a :class:`Transport`:
 
-===========  ==================================================================
-``inproc``   every rank in this process (single-controller; the default).
-             Zero behavior change vs. the pre-transport code.
-``mp``       one spawned worker process per rank.  Memory windows ride
-             ``multiprocessing.shared_memory``; storage windows reuse the
-             file backings (already cross-process); atomics and storage
-             access are serviced by the owner's progress thread over a
-             socketpair control channel (passive-target progress).
-===========  ==================================================================
+=============  ================================================================
+``inproc``     every rank in this process (single-controller; the default).
+               Zero behavior change vs. the pre-transport code.
+``mp``         one spawned worker process per rank.  Memory windows ride
+               ``multiprocessing.shared_memory``; storage windows reuse the
+               file backings (already cross-process); atomics and storage
+               access are serviced by the owner's progress thread over a
+               socketpair control channel (passive-target progress).  Two
+               origin modes share this transport: *driver-origin* (the
+               spawning process issues all application ops; workers are
+               passive targets) and *SPMD program execution*
+               (:class:`~repro.core.transport.spmd.SpmdLauncher` ships an
+               entry point and every rank becomes an origin over its own
+               rank-local transport view; the driver shrinks to a
+               launcher/monitor issuing zero data-path ops).
+``ranklocal``  one externally-launched process *is* one rank: windows
+               materialize only this rank's partition (peers are ``None``),
+               collectives are rank-local no-ops, but file naming matches
+               the other transports exactly, so n such processes produce
+               one driver-origin-identical on-disk layout.
+=============  ================================================================
 
-Selection: explicit ``Communicator(n, transport=...)`` beats the
-``REPRO_TRANSPORT`` env var, which beats the ``inproc`` default.  Rank
-bootstrap for SPMD launches reads ``REPRO_NRANKS`` / ``REPRO_RANK``.
+Rank-symmetric bootstrap contract
+---------------------------------
+Every process -- driver or worker -- resolves its identity the same way:
+
+* ``REPRO_TRANSPORT`` picks the transport kind (``inproc`` default),
+  ``REPRO_NRANKS`` the world size, ``REPRO_RANK`` this process's rank.
+  Explicit arguments (``Communicator(n, transport=...)``,
+  ``make_transport(kind=...)``) always beat the environment.
+* ``REPRO_RANK=0`` (or unset) may assume driver identity: it is the only
+  rank allowed to *spawn* (the mp transport's workers, or an
+  :class:`~repro.core.transport.spmd.SpmdLauncher` fleet under
+  ``python -m repro.launch.train --spmd``).
+* ``REPRO_RANK>0`` means some external launcher already placed this
+  process as a worker rank: ``Communicator.from_env`` then returns a
+  rank-local view (``ranklocal``) instead of assuming driver identity --
+  requesting ``mp`` with a nonzero rank is an error, since that transport
+  spawns a fresh world instead of joining one.
+* Under ``--spmd`` the launcher ships the entry point to spawned ranks,
+  which build their own :class:`Communicator` over an internal per-rank
+  transport; application code sees the same API in every mode.
+
+The on-disk layout (``<file>.<rank>`` naming, offsets, replica naming) is
+byte-identical across all of the above, so a job that crashes under one
+bootstrap mode recovers under any other.
 """
 
 from __future__ import annotations
@@ -23,19 +56,22 @@ from __future__ import annotations
 import os
 
 from .base import Transport, TransportError
-from .local import InprocTransport
+from .local import InprocTransport, RankLocalTransport
 
 __all__ = ["Transport", "TransportError", "InprocTransport",
-           "MultiprocessTransport", "make_transport", "env_transport_kind",
-           "env_nranks", "env_rank"]
+           "RankLocalTransport", "MultiprocessTransport", "SpmdLauncher",
+           "make_transport", "env_transport_kind", "env_nranks", "env_rank"]
 
 
 def __getattr__(name):
-    # lazy: importing the mp backend pulls in multiprocessing machinery the
-    # common in-process path never needs
+    # lazy: importing the mp/spmd backends pulls in multiprocessing
+    # machinery the common in-process path never needs
     if name == "MultiprocessTransport":
         from .multiproc import MultiprocessTransport
         return MultiprocessTransport
+    if name == "SpmdLauncher":
+        from .spmd import SpmdLauncher
+        return SpmdLauncher
     raise AttributeError(name)
 
 
@@ -55,11 +91,29 @@ def env_rank(default: int = 0) -> int:
 
 def make_transport(size: int, rank: int = 0,
                    kind: str | None = None) -> Transport:
-    """Build a transport: ``kind`` or ``$REPRO_TRANSPORT`` or ``inproc``."""
+    """Build a transport: ``kind`` or ``$REPRO_TRANSPORT`` or ``inproc``.
+
+    Enforces the rank-symmetric bootstrap contract: a nonzero ``rank``
+    never assumes driver identity -- ``inproc``/``mp`` requests from a
+    worker-placed process resolve to (or reject toward) the rank-local
+    view instead of spawning a second world.
+    """
     kind = (kind or env_transport_kind()).strip().lower()
     if kind == "inproc":
+        if rank != 0:
+            # an externally-launched worker rank: its "in-process world"
+            # is just its own partition of the shared file layout
+            return RankLocalTransport(size, rank)
         return InprocTransport(size, rank)
+    if kind == "ranklocal":
+        return RankLocalTransport(size, rank)
     if kind == "mp":
+        if rank != 0:
+            raise ValueError(
+                "the mp transport spawns a fresh worker world and is "
+                "driver-only (REPRO_RANK=0); externally-launched worker "
+                "ranks use 'ranklocal', SPMD jobs use --spmd")
         from .multiproc import MultiprocessTransport
         return MultiprocessTransport(size, rank)
-    raise ValueError(f"unknown transport {kind!r} (expected 'inproc' or 'mp')")
+    raise ValueError(f"unknown transport {kind!r} "
+                     "(expected 'inproc', 'mp' or 'ranklocal')")

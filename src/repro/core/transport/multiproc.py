@@ -24,8 +24,11 @@ control channel -- a ``multiprocessing.Pipe(duplex=True)``, which on Unix
 is a ``socket.socketpair()``.  The target application never has to enter
 MPI calls for an origin to make progress, the property Schuchart et al.
 ("Quo Vadis MPI RMA?") identify as the precondition for one-sided
-semantics to pay off.  The worker's main thread only joins the progress
-thread, leaving room for SPMD application code to run beside it.
+semantics to pay off.  In the default driver-origin mode the worker's
+main thread only joins the progress thread; in *program-execution* mode
+(:mod:`repro.core.transport.spmd`) the main thread runs the application
+itself while the same :class:`_SegmentService` answers peer origins
+beside it -- every rank both issues and services one-sided traffic.
 
 Failure semantics match the paper's storage-window story: a killed worker
 loses its page cache (un-synced data is gone, exactly like a crashed MPI
@@ -264,16 +267,118 @@ def _seg_meta(seg) -> dict:
     }
 
 
-def _serve(conn, rank: int) -> None:
-    """The progress loop: service passive-target RMA until shutdown.
+class _SegmentService:
+    """A rank's segment registry plus the target-side op interpreter.
 
-    One request at a time, in channel FIFO order -- which is what makes the
-    target-side atomics atomic and keeps a rank's operations ordered the
-    way the window layer's per-rank request FIFO expects.
+    Driver mode wraps it in :func:`_serve` -- one progress thread, one
+    channel, requests interpreted in FIFO order.  SPMD mode shares one
+    service across several server threads (the driver control channel plus
+    one per connected peer origin), so :meth:`execute` serializes on the
+    service lock: target-side atomics stay atomic with respect to *every*
+    origin process, exactly as the single progress thread guaranteed.
     """
-    segments: dict[int, object] = {}
-    try:
-        conn.send(("ready", rank))
+
+    def __init__(self, rank: int):
+        self.rank = rank
+        self.segments: dict[object, object] = {}
+        self.lock = threading.RLock()
+
+    def execute(self, msg):
+        """Interpret one transport op; returns the reply payload (raises to
+        signal an error back to the origin)."""
+        op = msg[0]
+        with self.lock:
+            if op == "alloc":
+                _, win_id, size, hints_kw, name_rank, name_nranks, spec = msg
+                if win_id in self.segments:
+                    # idempotent: under SPMD every origin rank requests the
+                    # same deterministic win_id for a shared (e.g. replica)
+                    # segment -- the holder materializes it exactly once
+                    return _seg_meta(self.segments[win_id])
+                hints = WindowHints(**hints_kw)
+                if not hints.is_storage:
+                    seg = _ShmBuf(size, create=True)
+                else:
+                    seg = _make_segment(size, hints, name_rank,
+                                        name_nranks, **spec)
+                self.segments[win_id] = seg
+                return _seg_meta(seg)
+            if op == "put":
+                _, win_id, offset, raw = msg
+                self.segments[win_id].write(offset,
+                                            np.frombuffer(raw, np.uint8))
+                return None
+            if op == "get":
+                _, win_id, offset, nbytes = msg
+                return self.segments[win_id].read(offset, nbytes).tobytes()
+            if op == "acc":
+                _, win_id, offset, data, aop = msg
+                apply_accumulate(self.segments[win_id], offset, data, aop)
+                return None
+            if op == "gacc":
+                _, win_id, offset, data, aop = msg
+                return apply_get_accumulate(self.segments[win_id], offset,
+                                            data, aop)
+            if op == "cas":
+                _, win_id, offset, value, compare, dtype = msg
+                return apply_compare_and_swap(self.segments[win_id], offset,
+                                              value, compare, dtype)
+            if op == "sync":
+                _, win_id, full, mask = msg
+                # reply carries the owner-side I/O time so the origin's
+                # throughput estimate excludes channel queueing
+                t0 = time.monotonic()
+                n = self.segments[win_id].sync(full=full, mask=mask)
+                return (n, time.monotonic() - t0)
+            if op == "wsync":
+                # masked span write + flush (the device-diff primitive):
+                # spans land in this owner's page cache, the mask ORs
+                # into its DirtyTracker, and the masked flush runs here
+                # -- one round trip carried everything
+                _, win_id, spans, mask = msg
+                seg = self.segments[win_id]
+                for offset, raw in spans:
+                    seg.write(offset, np.frombuffer(raw, np.uint8))
+                mark = getattr(seg, "mark_blocks", None)
+                if mask is not None and mark is not None:
+                    mark(mask)
+                t0 = time.monotonic()  # time only the storage I/O
+                n = seg.sync(mask=mask)
+                return (n, time.monotonic() - t0)
+            if op == "dirty":
+                _, win_id, mask = msg
+                seg = self.segments[win_id]
+                return (seg.dirty_bytes(mask=mask)
+                        if hasattr(seg, "dirty_bytes") else 0)
+            if op == "free":
+                _, win_id, unlink, discard = msg
+                seg = self.segments.pop(win_id, None)
+                if seg is not None:
+                    seg.close(unlink=unlink, discard=discard)
+                return None
+            if op == "barrier":
+                return None
+            if op == "reduce_part":
+                # echo the rank's contribution through the process
+                # boundary (the driver reduces the gathered parts)
+                return np.asarray(msg[1])
+            if op == "bcast":
+                # driver-origin delivery: ack with the value -- the round
+                # trip through the rank's process is the delivery.  SPMD
+                # ranks never see this op; their collectives run through
+                # the launcher's coordinator (see transport/spmd.py).
+                return msg[1]
+            raise TransportError(f"unknown transport op {op!r}")
+
+    def serve_conn(self, conn, *, ready=None) -> None:
+        """Service one origin's control channel until shutdown or EOF.
+
+        ``ping`` is answered without taking the service lock: a probe must
+        report "alive" even while another origin (or the local application
+        thread, under SPMD) holds the lock through a long storage sync.
+        """
+        if ready is not None:
+            conn.send(ready)
         while True:
             try:
                 msg = conn.recv()
@@ -286,112 +391,71 @@ def _serve(conn, rank: int) -> None:
                 except (OSError, BrokenPipeError):
                     pass
                 break
+            if op == "ping":
+                # liveness probe: any reply at all proves this server
+                # thread is servicing its channel
+                try:
+                    conn.send(("ok", self.rank))
+                except (OSError, BrokenPipeError):
+                    break
+                continue
             try:
-                if op == "alloc":
-                    _, win_id, size, hints_kw, name_rank, name_nranks, spec = msg
-                    hints = WindowHints(**hints_kw)
-                    if not hints.is_storage:
-                        seg = _ShmBuf(size, create=True)
-                    else:
-                        seg = _make_segment(size, hints, name_rank,
-                                            name_nranks, **spec)
-                    segments[win_id] = seg
-                    reply = _seg_meta(seg)
-                elif op == "put":
-                    _, win_id, offset, raw = msg
-                    segments[win_id].write(offset, np.frombuffer(raw, np.uint8))
-                    reply = None
-                elif op == "get":
-                    _, win_id, offset, nbytes = msg
-                    reply = segments[win_id].read(offset, nbytes).tobytes()
-                elif op == "acc":
-                    _, win_id, offset, data, aop = msg
-                    apply_accumulate(segments[win_id], offset, data, aop)
-                    reply = None
-                elif op == "gacc":
-                    _, win_id, offset, data, aop = msg
-                    reply = apply_get_accumulate(segments[win_id], offset,
-                                                 data, aop)
-                elif op == "cas":
-                    _, win_id, offset, value, compare, dtype = msg
-                    reply = apply_compare_and_swap(segments[win_id], offset,
-                                                   value, compare, dtype)
-                elif op == "sync":
-                    _, win_id, full, mask = msg
-                    # reply carries the owner-side I/O time so the driver's
-                    # throughput estimate excludes channel queueing
-                    t0 = time.monotonic()
-                    n = segments[win_id].sync(full=full, mask=mask)
-                    reply = (n, time.monotonic() - t0)
-                elif op == "wsync":
-                    # masked span write + flush (the device-diff primitive):
-                    # spans land in this owner's page cache, the mask ORs
-                    # into its DirtyTracker, and the masked flush runs here
-                    # -- one round trip carried everything
-                    _, win_id, spans, mask = msg
-                    seg = segments[win_id]
-                    for offset, raw in spans:
-                        seg.write(offset, np.frombuffer(raw, np.uint8))
-                    mark = getattr(seg, "mark_blocks", None)
-                    if mask is not None and mark is not None:
-                        mark(mask)
-                    t0 = time.monotonic()  # time only the storage I/O
-                    n = seg.sync(mask=mask)
-                    reply = (n, time.monotonic() - t0)
-                elif op == "dirty":
-                    _, win_id, mask = msg
-                    seg = segments[win_id]
-                    reply = (seg.dirty_bytes(mask=mask)
-                             if hasattr(seg, "dirty_bytes") else 0)
-                elif op == "free":
-                    _, win_id, unlink, discard = msg
-                    seg = segments.pop(win_id, None)
-                    if seg is not None:
-                        seg.close(unlink=unlink, discard=discard)
-                    reply = None
-                elif op == "barrier":
-                    reply = None
-                elif op == "ping":
-                    # liveness probe: any reply at all proves the progress
-                    # thread is servicing its channel
-                    reply = rank
-                elif op == "reduce_part":
-                    # echo the rank's contribution through the process
-                    # boundary (the driver reduces the gathered parts)
-                    reply = np.asarray(msg[1])
-                elif op == "bcast":
-                    # ack with the value: the round trip through the rank's
-                    # process is the delivery (workers run no app code yet)
-                    reply = msg[1]
-                else:
-                    raise TransportError(f"unknown transport op {op!r}")
+                reply = self.execute(msg)
             except BaseException as e:  # surfaced at the origin's call site
                 try:
                     conn.send(("err", e))
                 except Exception:
                     conn.send(("err", TransportError(
-                        f"rank {rank}: {type(e).__name__}: {e}")))
+                        f"rank {self.rank}: {type(e).__name__}: {e}")))
                 continue
             conn.send(("ok", reply))
-    finally:
-        for seg in segments.values():
+
+    def close_all(self) -> None:
+        with self.lock:
+            segs, self.segments = list(self.segments.values()), {}
+        for seg in segs:
             try:
                 seg.close()
             except Exception:
                 pass
+
+
+def _serve(conn, rank: int) -> None:
+    """The progress loop: service passive-target RMA until shutdown.
+
+    One request at a time, in channel FIFO order -- which is what makes the
+    target-side atomics atomic and keeps a rank's operations ordered the
+    way the window layer's per-rank request FIFO expects.
+    """
+    service = _SegmentService(rank)
+    try:
+        service.serve_conn(conn, ready=("ready", rank))
+    finally:
+        service.close_all()
         try:
             conn.close()
         except Exception:
             pass
 
 
-def _worker_main(conn, rank: int) -> None:
+def _worker_main(conn, rank: int, spmd: dict | None = None) -> None:
     """Entry point of one rank's worker process.
 
-    All servicing happens on the *progress thread*; the main thread merely
+    Passive-target mode (``spmd=None``, the driver-origin transport): all
+    servicing happens on the *progress thread*; the main thread merely
     joins it, mirroring an MPI implementation's asynchronous progress
     engine running beside the application.
+
+    Program-execution mode (``spmd`` carries the launcher's config): the
+    progress engine still runs beside the application -- but now there *is*
+    an application.  The main thread builds a rank-local transport +
+    ``Communicator`` view and calls the shipped entry point; see
+    :mod:`repro.core.transport.spmd`.
     """
+    if spmd is not None:
+        from .spmd import _run_spmd_worker
+        _run_spmd_worker(conn, rank, spmd)
+        return
     t = threading.Thread(target=_serve, args=(conn, rank),
                          name=f"repro-progress-{rank}", daemon=True)
     t.start()

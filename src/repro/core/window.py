@@ -391,6 +391,10 @@ class Window:
         k = (hints.replication
              if hints.is_storage and not hints.is_combined else 1)
         k = max(1, min(k, comm.size))
+        if getattr(comm.transport, "single_rank_view", False):
+            # rank-local transports materialize only this rank's
+            # partition: there is no peer to host a replica on
+            k = 1
         placement = ReplicaPlacement(comm.size, k) if k > 1 else None
         replica_segs: dict = {}
         if placement is not None:

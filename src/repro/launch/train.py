@@ -5,18 +5,38 @@ config executes locally; on a TPU slice the full config shards over the
 production mesh (the dry-run in launch/dryrun.py proves every cell's
 sharding compiles before you burn pod-hours on it).
 
-Rank bootstrap: the trainer's :class:`~repro.core.comm.Communicator` is
-built from the environment -- ``REPRO_TRANSPORT`` selects the window
-transport (``inproc`` default, ``mp`` for real per-rank worker processes),
-``REPRO_NRANKS`` the world size and ``REPRO_RANK`` this process's identity
--- or explicitly via ``--transport``/``--nranks``.  Checkpoint windows
-(and the out-of-core optimizer state) then ride whichever transport was
-picked, with an on-disk layout that is identical across backends.
+Rank-symmetric bootstrap
+------------------------
+This module never assumes it is "the driver" -- identity comes from the
+environment/flags, and every mode runs the *same* training code:
+
+* **Single-controller** (default): ``REPRO_RANK`` unset/0, no ``--spmd``.
+  The process runs the Trainer over ``REPRO_TRANSPORT`` (``inproc``
+  default; ``mp`` spawns passive-target worker processes that host the
+  window partitions while this process issues all operations).
+* **SPMD** (``--spmd``): this process becomes a pure launcher/monitor.
+  An :class:`~repro.core.transport.spmd.SpmdLauncher` spawns
+  ``REPRO_NRANKS``/``--nranks`` worker processes, ships them
+  :func:`_spmd_entry`, and each rank runs the Trainer itself -- diffing
+  its own device state, issuing its own puts and mirrored writes,
+  committing its own checkpoint manifest.  The launcher only heartbeats
+  and respawns dead ranks (``rebuild_rank`` re-enters ``_spmd_entry`` on
+  the fresh process, which restores from its own checkpoint); it issues
+  zero data-path operations, and says so on exit.
+* **Externally-launched worker** (``REPRO_RANK>0``, no ``--spmd``): some
+  scheduler already placed N copies of this command.  The communicator
+  bootstraps a rank-local view (``ranklocal`` transport): this process
+  materializes only its own window partitions, with file naming identical
+  to every other mode, and runs the same Trainer code path as rank 0.
+
+On-disk checkpoint layout is byte-identical across all three modes, so a
+job may crash under one bootstrap and resume under another.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 
 import jax
 
@@ -26,6 +46,77 @@ from repro.data import SyntheticLM, make_batch_iter
 from repro.launch.mesh import make_production_mesh
 from repro.runtime.sharding import train_rules, use_rules
 from repro.train import AdamWConfig, TrainConfig, Trainer
+
+
+def _train_opts(args) -> dict:
+    """The picklable subset of CLI options an SPMD rank needs."""
+    return {
+        "arch": args.arch, "smoke": args.smoke, "steps": args.steps,
+        "batch": args.batch, "seq": args.seq,
+        "microbatches": args.microbatches, "lr": args.lr,
+        "ckpt_dir": args.ckpt_dir, "ckpt_every": args.ckpt_every,
+        "mode": args.mode, "compression": args.compression,
+        "probe_interval": args.probe_interval,
+    }
+
+
+def _build_trainer(opts: dict, comm: Communicator) -> tuple[Trainer, object]:
+    cfg = get_config(opts["arch"], smoke=opts["smoke"])
+    mode = opts["mode"] or ("offload" if opts["arch"] in OFFLOAD_ARCHS
+                            and not opts["smoke"] else "fused")
+    opt = AdamWConfig(lr=opts["lr"],
+                      warmup_steps=max(1, opts["steps"] // 10),
+                      total_steps=opts["steps"])
+    tc = TrainConfig(steps=opts["steps"], microbatches=opts["microbatches"],
+                     mode=mode, ckpt_dir=opts["ckpt_dir"],
+                     ckpt_every=opts["ckpt_every"],
+                     compression=opts["compression"],
+                     log_every=5 if comm.rank == 0 else 0,
+                     probe_interval_s=opts["probe_interval"])
+    ds = SyntheticLM(cfg, batch=opts["batch"], seq=opts["seq"],
+                     microbatches=opts["microbatches"])
+    return Trainer(cfg, opt, tc, comm=comm), ds
+
+
+def _spmd_entry(comm: Communicator, opts: dict) -> dict:
+    """What every SPMD rank runs -- and re-enters after ``rebuild_rank``.
+
+    The rank builds its own Trainer over the communicator view the worker
+    bootstrap handed it, restores from its own manifest if one exists
+    (exact resume after a mid-run kill), trains, and reports a summary.
+    """
+    tr, ds = _build_trainer(opts, comm)
+    tr.run(make_batch_iter(iter(ds)))
+    log = tr.metrics_log
+    summary = {
+        "rank": comm.rank,
+        "steps_run": len(log),
+        "first_step": log[0]["step"] if log else None,
+        "resumed_from": tr.restored_step,
+        "final_loss": log[-1]["loss"] if log else None,
+    }
+    tr.close()
+    return summary
+
+
+def _run_spmd(args) -> None:
+    from repro.core.transport.spmd import SpmdLauncher
+    nranks = args.nranks or int(os.environ.get("REPRO_NRANKS", "0") or 2)
+    launcher = SpmdLauncher(nranks, _spmd_entry, (_train_opts(args),))
+    try:
+        results = launcher.monitor_until_done(
+            interval_s=max(0.1, args.probe_interval))
+        for res in results:
+            loss = res["final_loss"]
+            print(f"rank {res['rank']}: {res['steps_run']} step(s) from "
+                  f"step {res['first_step']}, final loss "
+                  + (f"{loss:.4f}" if loss is not None else "n/a"),
+                  flush=True)
+        assert launcher.data_ops() == 0, "launcher issued data-path ops"
+        print(f"spmd done: {nranks} rank(s), launcher data ops: "
+              f"{launcher.data_ops()}", flush=True)
+    finally:
+        launcher.shutdown()
 
 
 def main() -> None:
@@ -45,36 +136,45 @@ def main() -> None:
     ap.add_argument("--mesh", action="store_true",
                     help="shard over the production mesh (TPU slice)")
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--transport", choices=("inproc", "mp"), default=None,
-                    help="window transport (default: $REPRO_TRANSPORT or inproc)")
+    ap.add_argument("--spmd", action="store_true",
+                    help="launch REPRO_NRANKS/--nranks application ranks; "
+                         "this process only monitors and respawns")
+    ap.add_argument("--transport", choices=("inproc", "mp", "ranklocal"),
+                    default=None,
+                    help="window transport (default: $REPRO_TRANSPORT or "
+                         "inproc; ignored under --spmd)")
     ap.add_argument("--nranks", type=int, default=None,
                     help="communicator size (default: $REPRO_NRANKS or 1)")
+    ap.add_argument("--probe-interval", type=float, default=1.0,
+                    help="failure-detector probe interval in seconds")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, smoke=args.smoke)
-    mode = args.mode or ("offload" if args.arch in OFFLOAD_ARCHS
-                         and not args.smoke else "fused")
-    opt = AdamWConfig(lr=args.lr, warmup_steps=max(1, args.steps // 10),
-                      total_steps=args.steps)
-    tc = TrainConfig(steps=args.steps, microbatches=args.microbatches,
-                     mode=mode, ckpt_dir=args.ckpt_dir,
-                     ckpt_every=args.ckpt_every,
-                     compression=args.compression, log_every=5)
+    if args.spmd:
+        if int(os.environ.get("REPRO_RANK", "0") or 0) != 0:
+            raise SystemExit("--spmd is driver-only: worker ranks are "
+                             "spawned by the launcher, not self-started")
+        _run_spmd(args)
+        return
+
+    # single-controller or externally-launched worker rank: from_env
+    # resolves the identity (a nonzero REPRO_RANK gets a rank-local view)
+    comm = Communicator.from_env(transport=args.transport,
+                                 nranks=args.nranks)
     mesh = rules = None
     if args.mesh:
         mesh = make_production_mesh(multi_pod=args.multi_pod)
         rules = train_rules(args.multi_pod)
-    ds = SyntheticLM(cfg, batch=args.batch, seq=args.seq,
-                     microbatches=args.microbatches)
-    comm = Communicator.from_env(transport=args.transport,
-                                 nranks=args.nranks)
-    tr = Trainer(cfg, opt, tc, mesh=mesh, rules=rules, comm=comm)
+    tr, ds = _build_trainer(_train_opts(args), comm)
+    tr.mesh, tr.rules = mesh, rules
     with use_rules(rules, mesh):
         tr.run(make_batch_iter(iter(ds)))
     losses = [m["loss"] for m in tr.metrics_log]
-    print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
-          f"({len(losses)} steps on {jax.device_count()} device(s), "
-          f"transport={comm.transport.kind} x{comm.size})")
+    first = tr.metrics_log[0]["step"] if tr.metrics_log else 0
+    print(f"rank {comm.rank}/{comm.size} done: "
+          f"{len(losses)} step(s) from step {first}"
+          + (f", loss {losses[0]:.4f} -> {losses[-1]:.4f}" if losses else "")
+          + f" ({jax.device_count()} device(s), "
+            f"transport={comm.transport.kind})", flush=True)
     tr.close()
     comm.close()
 

@@ -50,6 +50,10 @@ class TrainConfig:
     log_every: int = 10
     seed: int = 0
     offload_memory_budget: int | None = None
+    # FailureDetector probe rate-limit (seconds): SPMD smoke lanes and
+    # tests tighten it to catch rank death quickly; 1s keeps probing off
+    # the hot path in production
+    probe_interval_s: float = 1.0
 
 
 class Trainer:
@@ -71,11 +75,15 @@ class Trainer:
         # death -- self-reported beats would keep every rank but our own
         # permanently silent on the monitor.  interval rate-limits the
         # actual probing so the per-step poll() stays off the hot path
-        self.detector = FailureDetector(self.comm, self.hb, interval=1.0)
+        self.detector = FailureDetector(self.comm, self.hb,
+                                        interval=tcfg.probe_interval_s)
         self.straggler = StragglerDetector(self.comm.size)
         self._build_steps()
         self._ckpt: CheckpointManager | None = None
         self._oo_opt: OutOfCoreAdamW | None = None
+        # step of the manifest run() restored from (None = fresh start);
+        # resume tests read this rather than inferring it from metrics
+        self.restored_step: int | None = None
 
     # -- step builders --------------------------------------------------------
     def _grad_fn(self):
@@ -168,6 +176,7 @@ class Trainer:
                 res = self._ckpt.restore()
                 if res is not None:
                     start_step = res.step
+                    self.restored_step = res.step
                     params = {k: jnp.asarray(res.tree[k])
                               for k in self.specs}
                     if tcfg.mode == "fused":

@@ -68,8 +68,11 @@ class OutOfCoreAdamW:
         }
         if memory_budget is not None:
             info["storage_alloc_factor"] = "auto"
+        # rank-local: each rank walks (and checkpoints) its own partition
+        # of the optimizer window -- under SPMD every rank runs this same
+        # code against its own segment, not rank 0's
         self.state = WindowedPyTree.allocate(
-            comm, specs, info, memory_budget=memory_budget,
+            comm, specs, info, rank=comm.rank, memory_budget=memory_budget,
             block_bytes=block_bytes, writeback_interval=writeback_interval)
         self.param_keys = sorted(param_shapes)
         self._initialized = False

@@ -1,0 +1,184 @@
+"""SPMD origin conformance (the rank-symmetric contract).
+
+Three guarantees, each load-bearing for the multi-origin refactor:
+
+* **Parity**: the same checkpoint workload run driver-origin (inproc,
+  rank-0 identity) and SPMD (every rank its own origin) leaves
+  byte-identical rank-0 window files and an identical ``manifest.json``
+  -- and the SPMD ranks' extra partitions restore under *driver-style*
+  rank-local communicators, so a crashed SPMD job recovers under either
+  bootstrap mode.
+* **Accounting**: under SPMD each rank issues its own data-path
+  operations (local puts observed per rank) while the launcher issues
+  zero -- the driver really did shrink to a launcher/monitor.
+* **Resilience**: SIGKILL one SPMD rank mid-run; ``rebuild_rank``
+  re-enters the application function on the respawn, which restores from
+  its own manifest and resumes exactly (no step replayed from scratch).
+
+Workload functions are module-level so the spawn start method can pickle
+them by reference.
+"""
+
+from __future__ import annotations
+
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Communicator
+
+try:
+    import multiprocessing.shared_memory  # noqa: F401
+    HAVE_SHM = True
+except ImportError:  # pragma: no cover - exotic platforms
+    HAVE_SHM = False
+
+pytestmark = pytest.mark.skipif(
+    not HAVE_SHM, reason="multiprocessing.shared_memory unavailable")
+
+_N = 3
+_STEPS = (1, 2, 3)
+_SPECS = {"w": ((64,), np.float32), "b": ((8,), np.float32)}
+
+
+def _tree(rank: int, step: int) -> dict[str, np.ndarray]:
+    """Deterministic per-(rank, step) state: parity must come from the
+    machinery, not from luck with rng seeding."""
+    return {"w": np.arange(64, dtype=np.float32) + 100.0 * rank + step,
+            "b": np.full(8, 10.0 * rank + step, np.float32)}
+
+
+def _parity_workload(comm: Communicator, directory: str) -> dict:
+    from repro.ckpt import CheckpointManager
+    mgr = CheckpointManager(directory, comm, _SPECS)
+    for step in _STEPS:
+        mgr.save(step, _tree(comm.rank, step))
+    mgr.close()
+    snap = getattr(comm.transport, "stats_snapshot", None)
+    return {"rank": comm.rank, "stats": snap() if snap else None}
+
+
+def _resume_workload(comm: Communicator, directory: str,
+                     steps: int = 8) -> dict:
+    from repro.ckpt import CheckpointManager
+    mgr = CheckpointManager(directory, comm, _SPECS)
+    res = mgr.restore()
+    start = res.step if res is not None else 0
+    for step in range(start + 1, steps + 1):
+        mgr.save(step, _tree(comm.rank, step))
+        time.sleep(0.15)  # give the driver a window to SIGKILL mid-run
+    mgr.close()
+    return {"rank": comm.rank, "resumed_from": start}
+
+
+def _run_spmd(workload, directory: str, **kw):
+    from repro.core.transport.spmd import SpmdLauncher
+    launcher = SpmdLauncher(_N, workload, (directory,))
+    try:
+        results = launcher.wait(timeout=120)
+        return launcher, sorted(results, key=lambda r: r["rank"])
+    finally:
+        launcher.shutdown()
+
+
+@pytest.fixture(scope="module")
+def spmd_parity(tmp_path_factory):
+    """One SPMD parity run shared by the parity + accounting tests."""
+    d = str(tmp_path_factory.mktemp("spmd"))
+    launcher, results = _run_spmd(_parity_workload, d)
+    return d, launcher, results
+
+
+def test_parity_with_driver_origin(spmd_parity, tmp_path):
+    d_spmd, _, _ = spmd_parity
+    d_drv = str(tmp_path / "drv")
+    comm = Communicator(_N, transport="inproc")
+    _parity_workload(comm, d_drv)
+    comm.close()
+
+    # rank 0's window files: byte-identical across origin modes
+    for name in ("ckpt_a.bin.0", "ckpt_b.bin.0"):
+        a = open(os.path.join(d_drv, name), "rb").read()
+        b = open(os.path.join(d_spmd, name), "rb").read()
+        assert a == b, f"{name} differs between driver-origin and SPMD"
+    # and the committed manifests match exactly (step, target, layout,
+    # crc, nranks -- nothing in them may depend on who issued the ops)
+    for name in ("manifest.json", "manifest.prev.json"):
+        a = open(os.path.join(d_drv, name)).read()
+        b = open(os.path.join(d_spmd, name)).read()
+        assert a == b, f"{name} differs between driver-origin and SPMD"
+    # SPMD ranks > 0 commit their own manifests beside rank 0's
+    for r in range(1, _N):
+        assert os.path.exists(os.path.join(d_spmd, f"manifest.r{r}.json"))
+
+
+def test_spmd_partitions_restore_under_driver_mode(spmd_parity):
+    """Cross-mode recovery: every SPMD rank's checkpoint restores under a
+    driver-style rank-local communicator reading the same directory."""
+    from repro.ckpt import CheckpointManager
+    d_spmd, _, _ = spmd_parity
+    last = _STEPS[-1]
+    for r in range(_N):
+        comm = Communicator(_N, rank=r,
+                            transport="inproc" if r == 0 else "ranklocal")
+        mgr = CheckpointManager(d_spmd, comm, _SPECS)
+        res = mgr.restore()
+        assert res is not None and res.step == last
+        want = _tree(r, last)
+        for k in _SPECS:
+            np.testing.assert_array_equal(res.tree[k], want[k])
+        mgr.close()
+        comm.close()
+
+
+def test_per_rank_accounting(spmd_parity):
+    """Each rank is a real origin: its own data-path ops, its own window
+    partition -- and the launcher issued zero data-path operations."""
+    _, launcher, results = spmd_parity
+    assert [r["rank"] for r in results] == list(range(_N))
+    for r in results:
+        stats = r["stats"]
+        assert stats is not None
+        # every rank allocated and wrote its own partition locally
+        assert stats["local"]["alloc"] > 0
+        assert stats["local"]["put"] > 0
+        # and took part in the collective rounds (alloc gather, barriers)
+        assert stats["rounds"] > 0
+    assert launcher.data_ops() == 0
+    assert set(launcher.op_counts) <= {"ping", "shutdown"}
+
+
+def test_kill_one_rank_resumes_exactly(tmp_path):
+    from repro.core.transport.spmd import SpmdLauncher
+    d = str(tmp_path / "resume")
+    os.makedirs(d)
+    launcher = SpmdLauncher(_N, _resume_workload, (d,))
+    victim = 1
+    try:
+        # wait for the victim to commit at least one manifest, then kill
+        marker = os.path.join(d, f"manifest.r{victim}.json")
+        deadline = time.monotonic() + 60
+        while not os.path.exists(marker):
+            assert time.monotonic() < deadline, "victim never checkpointed"
+            time.sleep(0.05)
+        os.kill(launcher._procs[victim].pid, signal.SIGKILL)
+        deadline = time.monotonic() + 30
+        while launcher.probe(victim):
+            assert time.monotonic() < deadline, "victim still probes live"
+            time.sleep(0.05)
+        launcher.rebuild_rank(victim)
+        results = sorted(launcher.wait(timeout=120),
+                         key=lambda r: r["rank"])
+        # the respawn re-entered the application, restored its own
+        # manifest, and resumed from a nonzero step
+        assert results[victim]["resumed_from"] > 0
+        # survivors never restarted
+        for r in range(_N):
+            if r != victim:
+                assert results[r]["resumed_from"] == 0
+        assert launcher.data_ops() == 0
+    finally:
+        launcher.shutdown()

@@ -464,12 +464,19 @@ def test_mp_worker_kill_detected_and_recovery(tmp_path):
 
 @needs_shm
 def test_mp_transport_env_bootstrap(monkeypatch):
+    """Rank-symmetric contract: mp spawns a fresh worker world, so it is
+    driver-only -- a worker rank (REPRO_RANK>0) must never spawn a second
+    world.  Asking for mp from a nonzero rank raises; the worker instead
+    bootstraps a rank-local view over its own partition."""
     monkeypatch.setenv("REPRO_TRANSPORT", "mp")
     monkeypatch.setenv("REPRO_NRANKS", "2")
     monkeypatch.setenv("REPRO_RANK", "1")
+    with pytest.raises(ValueError, match="driver-only"):
+        Communicator.from_env()
+    monkeypatch.setenv("REPRO_TRANSPORT", "inproc")
     comm = Communicator.from_env()
     try:
-        assert comm.transport.kind == "mp"
+        assert comm.transport.kind == "ranklocal"
         assert comm.size == 2
         assert comm.rank == 1
     finally:
