@@ -17,7 +17,7 @@ Suites:
   roofline         -- this task's §Roofline (from dry-run artifacts)
 
 ``--transport {inproc,mp}`` is passed through to the suites that take one
-(hacc_io, async_win, selective_sync): their windows then run over real
+(imb_rma, hacc_io, async_win, selective_sync): their windows then run over real
 worker processes, reproducing the paper's figures with genuine
 process-boundary traffic -- selective_sync's <=15%-of-full-sync-bytes gate
 then measures the masked span-write primitive across the control channel.
@@ -41,7 +41,7 @@ SUITES = ("imb_rma", "mstream", "dht", "hacc_io", "mapreduce",
 
 #: suites whose run() accepts a transport passthrough (replication is NOT
 #: one: its gate is pinned to the local backend, its recovery half to mp)
-TRANSPORT_AWARE = ("hacc_io", "async_win", "selective_sync")
+TRANSPORT_AWARE = ("imb_rma", "hacc_io", "async_win", "selective_sync")
 
 
 def main() -> None:

@@ -60,6 +60,12 @@ else
     # below the ratio)
     timeout 300 "${MP_ENV[@]}" python -m benchmarks.async_win \
         --transport mp --min-speedup 1.5
+    # small-op latency lane, cross-process (enforced: 8-byte put/get under
+    # the us/op ceiling on both allocation kinds, and the aggregated rput
+    # train must beat the blocking path by the configured speedup on
+    # storage windows -- request aggregation amortizing round trips)
+    timeout 300 "${MP_ENV[@]}" python -m benchmarks.imb_rma \
+        --transport mp --smallop-only
     # masked device-sync gate, cross-process: at 8% dirty blocks the
     # selective path (one masked span-write message per rank) must write
     # <=15% of the full-sync bytes (the suite's assert enforces: exit 1).

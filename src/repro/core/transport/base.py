@@ -13,12 +13,45 @@ module defines that boundary: a :class:`Transport` owns
 * **target-side atomics** -- ``accumulate``/``get_accumulate``/
   ``compare_and_swap`` execute *at the target rank* so they are atomic with
   respect to every origin, not just threads of one process.
+* **request aggregation** -- :meth:`Transport.op_batch` ships N small
+  puts/gets/accumulates for ONE target in ONE control-channel message; the
+  owner applies the whole train under a single service-lock acquisition
+  with byte-contiguous put runs coalesced into single span writes
+  (:func:`apply_op_batch`).  The hot-path cost of N 8-byte ops drops from
+  N round trips to one.
+* **notified-access completion** -- ``op_batch(..., defer=True)`` may
+  *post* a result-free batch with no reply at all; the owner counts
+  applied batches per (origin channel, window) and the origin later reads
+  that counter ONCE via :meth:`Transport.op_complete`.  Because each
+  origin->owner channel is FIFO, a single counter read confirms every
+  previously posted batch, and any deferred error surfaces there -- MPI's
+  "errors are reported at flush" rule.
 * **collectives** -- ``barrier``, ``allreduce``, ``bcast``, ``split``.
 
 :class:`~repro.core.window.Window` programs exclusively against this
 interface; swapping ``InprocTransport`` for ``MultiprocessTransport`` (or a
 future DCN/NCCL backend, see ROADMAP) changes no window, DHT, MapReduce or
 checkpoint code.
+
+Batched op wire form
+--------------------
+A batch is a list of tuples, applied strictly in list order (the origin's
+issue order -- FIFO per target is the windows-on-storage ordering
+contract):
+
+==========  ===========================================  ================
+kind        tuple                                        result slot
+==========  ===========================================  ================
+``put``     ``("put", offset, uint8-bytes-or-array)``    ``None``
+``get``     ``("get", offset, nbytes)``                  ``uint8 array``
+``acc``     ``("acc", offset, typed array, op)``         ``None``
+``gacc``    ``("gacc", offset, typed array, op)``        old typed array
+``cas``     ``("cas", offset, value, compare, dtype)``   old scalar
+==========  ===========================================  ================
+
+Only result-free kinds (``put``/``acc`` -- :data:`DEFERRABLE_OPS`) may be
+posted notified; a batch containing any reading op always takes the
+reply form so its results travel back on the same round trip.
 """
 
 from __future__ import annotations
@@ -27,9 +60,10 @@ import abc
 
 import numpy as np
 
-__all__ = ["Transport", "TransportError", "ACC_OPS", "apply_accumulate",
-           "apply_get_accumulate", "apply_compare_and_swap",
-           "apply_masked_spans", "reduce_values"]
+__all__ = ["Transport", "TransportError", "ACC_OPS", "BATCH_OPS",
+           "DEFERRABLE_OPS", "apply_accumulate", "apply_get_accumulate",
+           "apply_compare_and_swap", "apply_masked_spans", "apply_op_batch",
+           "reduce_values"]
 
 
 class TransportError(RuntimeError):
@@ -45,6 +79,13 @@ ACC_OPS = {
 }
 
 _REDUCE_OPS = {"sum": "sum", "max": "max", "min": "min"}
+
+#: Sub-op kinds a batched request may carry (see module docstring).
+BATCH_OPS = frozenset({"put", "get", "acc", "gacc", "cas"})
+
+#: Result-free sub-ops: the only kinds eligible for notified (no-reply)
+#: posting.  Anything that reads must ride the reply form.
+DEFERRABLE_OPS = frozenset({"put", "acc"})
 
 
 def apply_accumulate(seg, offset: int, data: np.ndarray, op: str) -> None:
@@ -104,6 +145,101 @@ def apply_masked_spans(seg, spans, mask) -> int:
     if mask is not None and mark is not None:
         mark(mask)
     return seg.sync(mask=mask)
+
+
+def _as_u8(data) -> np.ndarray:
+    """Normalize a put payload (bytes or any array) to a flat uint8 array."""
+    if isinstance(data, (bytes, bytearray, memoryview)):
+        return np.frombuffer(data, dtype=np.uint8)
+    return np.ascontiguousarray(np.asarray(data)).view(np.uint8).ravel()
+
+
+def _coalesce_put_runs(run):
+    """Merge byte-contiguous successive ``(offset, uint8 array)`` spans.
+
+    This is the owner-side *vectorized span application*: a train of small
+    adjacent puts becomes one segment write (one memcpy + one dirty-tracker
+    mark) instead of N.  Only exactly-adjacent successors merge, so
+    rewrites of the same range keep their issue order.  Returns
+    ``(offset, [spans])`` groups; the caller concatenates (keeping the
+    constituent spans lets it fall back to per-span application on error).
+    """
+    groups: list[list] = []
+    for off, data in run:
+        if groups and groups[-1][0] + groups[-1][1] == off and data.nbytes:
+            groups[-1][1] += data.nbytes
+            groups[-1][2].append(data)
+        else:
+            groups.append([off, data.nbytes, [data]])
+    return [(off, parts) for off, _nbytes, parts in groups]
+
+
+def apply_op_batch(seg, ops) -> list:
+    """Target-side half of request aggregation: apply a batched op train.
+
+    ``ops`` is a list in the wire form of the module docstring, applied in
+    list order under whatever atomicity the caller provides (the window's
+    target lock in-process, the owner's service lock remotely) -- the whole
+    batch is ONE critical section, which is what makes aggregation cheaper
+    than N independent ops even before the round trips are counted.
+    Contiguous put runs are coalesced into single span writes.  Returns one
+    result slot per op (``None`` for result-free kinds).
+
+    The sub-ops stay as INDEPENDENT as the MPI calls they batch: a failing
+    op does not abort its successors -- its exception object fills the op's
+    result slot (the origin re-raises it at that op's request, or at the
+    flush boundary for a notified train) and application continues.
+    """
+    results: list = []
+    i, n = 0, len(ops)
+    while i < n:
+        kind = ops[i][0]
+        if kind == "put":
+            j = i
+            while j < n and ops[j][0] == "put":
+                j += 1
+            run = [(int(off), _as_u8(data)) for _, off, data in ops[i:j]]
+            for off, parts in _coalesce_put_runs(run):
+                data = parts[0] if len(parts) == 1 else np.concatenate(parts)
+                try:
+                    seg.write(off, data)
+                    results.extend([None] * len(parts))
+                except Exception as exc:
+                    if len(parts) == 1:
+                        results.append(exc)
+                        continue
+                    # degrade to per-span application: an out-of-range
+                    # straggler must not take out its valid neighbors
+                    for p in parts:
+                        try:
+                            seg.write(off, p)
+                            results.append(None)
+                        except Exception as e:
+                            results.append(e)
+                        off += p.nbytes
+            i = j
+            continue
+        op = ops[i]
+        try:
+            if kind == "get":
+                raw = seg.read(int(op[1]), int(op[2]))
+                results.append(np.asarray(raw, dtype=np.uint8).copy())
+            elif kind == "acc":
+                apply_accumulate(seg, int(op[1]), op[2], op[3])
+                results.append(None)
+            elif kind == "gacc":
+                results.append(
+                    apply_get_accumulate(seg, int(op[1]), op[2], op[3]))
+            elif kind == "cas":
+                results.append(
+                    apply_compare_and_swap(seg, int(op[1]), op[2], op[3],
+                                           op[4]))
+            else:
+                raise TransportError(f"unknown batched op kind {kind!r}")
+        except Exception as e:
+            results.append(e)
+        i += 1
+    return results
 
 
 def reduce_values(contribs, op: str):
@@ -204,6 +340,37 @@ class Transport(abc.ABC):
         zero behavior change).
         """
         return apply_masked_spans(seg, spans, mask)
+
+    def op_batch(self, seg, ops, defer: bool = False):
+        """Aggregated one-sided ops: N small puts/gets/accumulates to one
+        target in ONE control-channel message.
+
+        ``ops`` uses the wire form of the module docstring and is applied
+        at the target in list order under one service-lock acquisition
+        (FIFO per target preserved).  Returns the per-op result list.
+
+        ``defer=True`` requests *notified-access* posting: when every op
+        is result-free (:data:`DEFERRABLE_OPS`) a remote backend may send
+        the batch with NO reply and return ``None``; the caller learns
+        completion -- and any deferred error -- from one later
+        :meth:`op_complete` read on the same target.  Backends where the
+        batch completes synchronously (this base implementation: segment
+        handles with local ``read``/``write``) ignore ``defer`` and always
+        return results.
+        """
+        return apply_op_batch(seg, ops)
+
+    def op_complete(self, seg) -> int:
+        """Notified-access completion boundary for ``seg``'s target.
+
+        One read of the target-side applied-batch counter: on return,
+        every batch this origin posted with ``op_batch(..., defer=True)``
+        has been applied at the target, and the first error any of them
+        raised is re-raised here (MPI flush-reports-errors semantics).
+        Returns the number of posted batches confirmed -- 0 on transports
+        where batches complete synchronously (this base implementation).
+        """
+        return 0
 
     @abc.abstractmethod
     def accumulate(self, seg, offset: int, data: np.ndarray, op: str) -> None:

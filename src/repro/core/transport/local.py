@@ -236,6 +236,12 @@ class RankLocalTransport(InprocTransport):
         return apply_compare_and_swap(self._own(seg, "compare_and_swap"),
                                       offset, value, compare, dtype)
 
+    def op_batch(self, seg, ops, defer: bool = False):
+        return super().op_batch(self._own(seg, "op_batch"), ops, defer=defer)
+
+    def op_complete(self, seg) -> int:
+        return super().op_complete(self._own(seg, "op_complete"))
+
     def split(self, color: int, ranks: list[int]) -> "RankLocalTransport":
         sub = RankLocalTransport(len(ranks),
                                  ranks.index(self.rank)

@@ -30,6 +30,14 @@ main thread only joins the progress thread; in *program-execution* mode
 itself while the same :class:`_SegmentService` answers peer origins
 beside it -- every rank both issues and services one-sided traffic.
 
+Small-op hot path: the control channel also speaks the *aggregated* form
+(``opbatch``: N puts/gets/atomics applied under one service-lock
+acquisition, one round trip) and its *notified* variant (``opbatch_nb``:
+no reply at all; each server thread counts applied batches per window and
+the origin confirms a whole train of posts with one later ``notify_read``)
+-- the Quo Vadis MPI RMA prescription of request aggregation plus
+notified-access completion, which turns N small-op round trips into one.
+
 Failure semantics match the paper's storage-window story: a killed worker
 loses its page cache (un-synced data is gone, exactly like a crashed MPI
 rank), subsequent operations against it raise :class:`TransportError`, and
@@ -52,9 +60,10 @@ import time
 import numpy as np
 
 from ..hints import WindowHints
-from .base import (Transport, TransportError, apply_accumulate,
-                   apply_compare_and_swap, apply_get_accumulate,
-                   apply_masked_spans, reduce_values)
+from .base import (DEFERRABLE_OPS, Transport, TransportError,
+                   apply_accumulate, apply_compare_and_swap,
+                   apply_get_accumulate, apply_masked_spans, apply_op_batch,
+                   reduce_values)
 from .local import _make_segment, _MemorySegment
 
 __all__ = ["MultiprocessTransport"]
@@ -158,6 +167,34 @@ class _DriverShmBuf(_ShmBuf):
         self._t._call(self._rank, ("free", self._win_id, unlink, discard))
 
 
+def _encode_ops(ops) -> list:
+    """Batched ops in channel wire form: put payloads as raw bytes (cheap
+    to pickle), typed accumulate operands as contiguous arrays."""
+    out = []
+    for o in ops:
+        kind = o[0]
+        if kind == "put":
+            out.append(("put", int(o[1]),
+                        np.ascontiguousarray(np.asarray(o[2], np.uint8)
+                                             .ravel()).tobytes()))
+        elif kind in ("acc", "gacc"):
+            out.append((kind, int(o[1]), np.ascontiguousarray(o[2]), o[3]))
+        else:
+            out.append(o)
+    return out
+
+
+def _encoded_write_bytes(payload) -> int:
+    """Bytes a wire-form batch will write into the target's page cache."""
+    total = 0
+    for o in payload:
+        if o[0] == "put":
+            total += len(o[2])
+        elif o[0] == "acc":
+            total += o[2].nbytes
+    return total
+
+
 class _RemoteSegment:
     """Driver-side handle for a segment owned by a worker process.
 
@@ -190,6 +227,9 @@ class _RemoteSegment:
         # would serialize behind an in-flight sync on this rank's channel.
         self._approx_dirty = 0
         self._approx_lock = threading.Lock()
+        # batches posted notified (no reply yet) since the last
+        # op_complete boundary on this segment's channel
+        self._posted = 0
         #: owner-measured seconds of the last sync's storage I/O (excludes
         #: the channel round trip / queueing this driver observed)
         self.last_sync_io: float | None = None
@@ -205,9 +245,52 @@ class _RemoteSegment:
     def write(self, offset: int, data) -> None:
         data = np.ascontiguousarray(np.asarray(data, dtype=np.uint8).ravel())
         self._t._call(self._rank, ("put", self._win_id, offset, data.tobytes()))
+        # only storage-backed segments have a sync that ever drains this
+        # estimate; charging a pure-memory segment would inflate the
+        # backpressure charge forever
+        if self.has_storage:
+            with self._approx_lock:
+                self._approx_dirty = min(self.size,
+                                         self._approx_dirty + data.nbytes)
+
+    def op_batch(self, ops, defer: bool = False):
+        """Aggregated op train against this owner, one channel message.
+
+        Reply form (``opbatch``) round-trips once and returns per-op
+        results.  With ``defer=True`` and a result-free train, the batch
+        is *posted* (``opbatch_nb``, no reply): returns ``None`` and the
+        owner-side application is confirmed by :meth:`op_complete`.
+        """
+        payload = _encode_ops(ops)
+        written = _encoded_write_bytes(payload)
+        if defer and all(o[0] in DEFERRABLE_OPS for o in payload):
+            self._t._post(self._rank, ("opbatch_nb", self._win_id, payload))
+            with self._approx_lock:
+                self._posted += 1
+                if self.has_storage:
+                    self._approx_dirty = min(self.size,
+                                             self._approx_dirty + written)
+            return None
+        res = self._t._call(self._rank, ("opbatch", self._win_id, payload))
+        if self.has_storage and written:
+            with self._approx_lock:
+                self._approx_dirty = min(self.size,
+                                         self._approx_dirty + written)
+        return res
+
+    def op_complete(self) -> int:
+        """One ``notify_read`` round trip: the owner's applied-batch count
+        for this window (channel FIFO => it covers every batch posted
+        before this call) plus the first deferred error, re-raised here."""
         with self._approx_lock:
-            self._approx_dirty = min(self.size,
-                                     self._approx_dirty + data.nbytes)
+            posted, self._posted = self._posted, 0
+        if not posted:
+            return 0
+        _count, err = self._t._call(self._rank,
+                                    ("notify_read", self._win_id))
+        if err is not None:
+            raise err
+        return posted
 
     def sync(self, full: bool = False, mask: np.ndarray | None = None) -> int:
         n, io_s = self._t._call(self._rank,
@@ -255,13 +338,20 @@ class _RemoteSegment:
 def _seg_meta(seg) -> dict:
     """Describe a worker-side segment for the driver's handle."""
     tracker = getattr(seg, "tracker", None)
+    kind = getattr(seg, "kind", None) or (
+        "combined" if hasattr(seg, "mem_bytes") else
+        "storage" if tracker is not None else "memory")
+    sto = getattr(seg, "sto_bytes", None)
+    if sto is None:
+        # a tracker-less memory segment has NO storage tier: advertising
+        # seg.size here made remote handles report has_storage=True and
+        # charge backpressure for bytes no sync ever drains
+        sto = 0 if (tracker is None and kind == "memory") else seg.size
     return {
-        "kind": getattr(seg, "kind", None) or (
-            "combined" if hasattr(seg, "mem_bytes") else
-            "storage" if tracker is not None else "memory"),
+        "kind": kind,
         "size": seg.size,
         "mem_bytes": getattr(seg, "mem_bytes", 0),
-        "sto_bytes": getattr(seg, "sto_bytes", seg.size),
+        "sto_bytes": sto,
         "page_size": tracker.page_size if tracker is not None else None,
         "shm": seg.name if isinstance(seg, _ShmBuf) else None,
     }
@@ -282,6 +372,16 @@ class _SegmentService:
         self.rank = rank
         self.segments: dict[object, object] = {}
         self.lock = threading.RLock()
+
+    def _require_sync(self, seg, op: str) -> None:
+        """A sync-less segment must fail with a message that names the op
+        and the window kind, not leak an AttributeError through the
+        channel."""
+        if not callable(getattr(seg, "sync", None)):
+            kind = getattr(seg, "kind", None) or type(seg).__name__
+            raise TransportError(
+                f"rank {self.rank}: {op!r} is unsupported on a {kind} "
+                "window segment with no sync method")
 
     def execute(self, msg):
         """Interpret one transport op; returns the reply payload (raises to
@@ -323,12 +423,20 @@ class _SegmentService:
                 _, win_id, offset, value, compare, dtype = msg
                 return apply_compare_and_swap(self.segments[win_id], offset,
                                               value, compare, dtype)
+            if op == "opbatch":
+                # request aggregation: the whole op train under this ONE
+                # lock acquisition, contiguous put runs coalesced into
+                # single span writes (apply_op_batch)
+                _, win_id, ops = msg
+                return apply_op_batch(self.segments[win_id], ops)
             if op == "sync":
                 _, win_id, full, mask = msg
+                seg = self.segments[win_id]
+                self._require_sync(seg, "sync")
                 # reply carries the owner-side I/O time so the origin's
                 # throughput estimate excludes channel queueing
                 t0 = time.monotonic()
-                n = self.segments[win_id].sync(full=full, mask=mask)
+                n = seg.sync(full=full, mask=mask)
                 return (n, time.monotonic() - t0)
             if op == "wsync":
                 # masked span write + flush (the device-diff primitive):
@@ -337,6 +445,7 @@ class _SegmentService:
                 # -- one round trip carried everything
                 _, win_id, spans, mask = msg
                 seg = self.segments[win_id]
+                self._require_sync(seg, "wsync")
                 for offset, raw in spans:
                     seg.write(offset, np.frombuffer(raw, np.uint8))
                 mark = getattr(seg, "mark_blocks", None)
@@ -376,7 +485,16 @@ class _SegmentService:
         ``ping`` is answered without taking the service lock: a probe must
         report "alive" even while another origin (or the local application
         thread, under SPMD) holds the lock through a long storage sync.
+
+        Notified access lives here, per connection: ``opbatch_nb`` applies
+        a batch and sends NO reply, bumping a per-window applied counter
+        (first error retained); ``notify_read`` hands that counter + error
+        back in one reply.  The state is per origin channel, so each
+        origin reads exactly the completions -- and errors -- of its own
+        posts.
         """
+        nb_count: dict[object, int] = {}
+        nb_err: dict[object, BaseException] = {}
         if ready is not None:
             conn.send(ready)
         while True:
@@ -398,6 +516,32 @@ class _SegmentService:
                     conn.send(("ok", self.rank))
                 except (OSError, BrokenPipeError):
                     break
+                continue
+            if op == "opbatch_nb":
+                _, win_id, ops = msg
+                try:
+                    # per-op errors come back slot-captured (sub-ops are
+                    # independent); retain the first for the notify reply
+                    for r in self.execute(("opbatch", win_id, ops)):
+                        if isinstance(r, BaseException):
+                            nb_err.setdefault(win_id, r)
+                            break
+                except BaseException as e:
+                    nb_err.setdefault(win_id, e)
+                nb_count[win_id] = nb_count.get(win_id, 0) + 1
+                continue  # notified: no reply message at all
+            if op == "notify_read":
+                _, win_id = msg
+                payload = (nb_count.pop(win_id, 0), nb_err.pop(win_id, None))
+                try:
+                    conn.send(("ok", payload))
+                except (OSError, BrokenPipeError):
+                    break
+                except Exception:
+                    # unpicklable deferred error: degrade to a description
+                    conn.send(("ok", (payload[0], TransportError(
+                        f"rank {self.rank}: {type(payload[1]).__name__}: "
+                        f"{payload[1]}"))))
                 continue
             try:
                 reply = self.execute(msg)
@@ -538,6 +682,20 @@ class MultiprocessTransport(Transport):
             raise payload
         return payload
 
+    def _post(self, rank: int, msg) -> None:
+        """Fire-and-forget send (notified access): no reply is consumed, so
+        the request/reply stream stays aligned for the next ``_call``."""
+        conn = self._conns[rank]
+        with self._chan_locks[rank]:
+            try:
+                conn.send(msg)
+            except (EOFError, OSError, BrokenPipeError) as e:
+                alive = self._procs[rank].is_alive()
+                raise TransportError(
+                    f"rank {rank} worker is unreachable"
+                    f" ({'hung channel' if alive else 'process died'})"
+                ) from e
+
     def _next_win_id(self) -> int:
         with self._id_lock:
             return next(self._win_ids)
@@ -663,6 +821,28 @@ class MultiprocessTransport(Transport):
             return apply_masked_spans(seg, spans, mask)
         return seg.write_spans_sync(spans, mask)
 
+    def op_batch(self, seg, ops, defer: bool = False):
+        """Aggregated op train: one channel message however many ops.
+
+        Shared-memory handles (memory windows) apply puts/gets as direct
+        load/stores; a batch containing any atomic still ships whole to
+        the owner so the entire train runs under one service-lock
+        acquisition.  Remote segments speak ``opbatch``/``opbatch_nb``
+        (see :meth:`_RemoteSegment.op_batch`).
+        """
+        if isinstance(seg, _ShmBuf):
+            if any(o[0] in ("acc", "gacc", "cas") for o in ops):
+                rank, win_id = self._addr(seg)
+                return self._call(rank,
+                                  ("opbatch", win_id, _encode_ops(ops)))
+            return apply_op_batch(seg, ops)
+        return seg.op_batch(ops, defer=defer)
+
+    def op_complete(self, seg) -> int:
+        if isinstance(seg, _ShmBuf):
+            return 0  # load/stores (and reply-form atomics) are complete
+        return seg.op_complete()
+
     # -- collectives -------------------------------------------------------
     def _barrier_on(self, ranks) -> None:
         # channel FIFO: by the time each worker acks, it has serviced every
@@ -775,6 +955,12 @@ class _MpSubTransport(Transport):
 
     def write_spans_masked(self, seg, spans, mask):
         return self.parent.write_spans_masked(seg, spans, mask)
+
+    def op_batch(self, seg, ops, defer: bool = False):
+        return self.parent.op_batch(seg, ops, defer=defer)
+
+    def op_complete(self, seg) -> int:
+        return self.parent.op_complete(seg)
 
     def barrier(self) -> None:
         self.parent._barrier_on(self.ranks)

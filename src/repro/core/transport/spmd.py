@@ -62,16 +62,18 @@ import numpy as np
 
 from .base import (Transport, TransportError, apply_accumulate,
                    apply_compare_and_swap, apply_get_accumulate,
-                   apply_masked_spans, reduce_values)
-from .multiproc import (_DriverShmBuf, _READY_TIMEOUT_S, _RemoteSegment,
-                        _SegmentService, _ShmBuf, _SHUTDOWN_JOIN_S,
-                        _call_timeout_s, _probe_timeout_s, _worker_main)
+                   apply_masked_spans, apply_op_batch, reduce_values)
+from .multiproc import (_DriverShmBuf, _encode_ops, _READY_TIMEOUT_S,
+                        _RemoteSegment, _SegmentService, _ShmBuf,
+                        _SHUTDOWN_JOIN_S, _call_timeout_s, _probe_timeout_s,
+                        _worker_main)
 
 __all__ = ["SpmdLauncher"]
 
 #: ops that move or manage window data -- the launcher must issue none
 DATA_OPS = frozenset({"alloc", "put", "get", "acc", "gacc", "cas", "sync",
-                      "wsync", "dirty", "free"})
+                      "wsync", "dirty", "free", "opbatch", "opbatch_nb",
+                      "notify_read"})
 
 
 # -- rank-local segment view ------------------------------------------------
@@ -143,6 +145,7 @@ class _DeadSegment:
                              "partition was published")
 
     read = write = sync = dirty_bytes = write_spans_sync = _dead
+    op_batch = op_complete = _dead
 
     def close(self, unlink: bool = False, discard: bool = False) -> None:
         self.closed = True
@@ -204,6 +207,26 @@ class _PeerChannel:
                 if status == "err":
                     raise payload
                 return payload
+
+    def post(self, msg, timeout: float) -> None:
+        """Notified-access send: ship ``msg`` with NO reply read, keeping
+        the request/reply stream aligned for the next :meth:`call`.  A
+        broken cached socket redials once, like :meth:`call`."""
+        with self._lock:
+            for attempt in (0, 1):
+                try:
+                    if self._conn is None:
+                        self._conn = mpc.Client(self._address,
+                                                family="AF_UNIX",
+                                                authkey=self._authkey)
+                    self._conn.send(msg)
+                    return
+                except (EOFError, OSError, BrokenPipeError,
+                        mpc.AuthenticationError) as e:
+                    self._drop()
+                    if attempt:
+                        raise TransportError(
+                            f"rank {self.rank} peer is unreachable") from e
 
     def ping(self, timeout: float) -> bool:
         if not self._lock.acquire(blocking=False):
@@ -448,6 +471,36 @@ class _WorkerTransport(Transport):
             return apply_masked_spans(seg, spans, mask)
         return seg.write_spans_sync(spans, mask)
 
+    def _post(self, rank: int, msg) -> None:
+        """Fire-and-forget peer send (notified access): no reply consumed."""
+        self.stats["remote"][msg[0]] += 1
+        self.stats["targets"][rank] += 1
+        self._chan(rank).post(msg, _call_timeout_s())
+
+    def op_batch(self, seg, ops, defer: bool = False):
+        """Aggregated op train, routed like every other data op: own-rank
+        partitions execute through the shared service (one lock
+        acquisition for the whole train), attached shm applies load/stores
+        directly (atomic-carrying batches still ship whole to the owner),
+        peer storage partitions speak ``opbatch``/``opbatch_nb``."""
+        if isinstance(seg, _LocalSeg):
+            self.stats["local"]["opbatch"] += 1
+            return self.service.execute(
+                ("opbatch", object.__getattribute__(seg, "_win_id"),
+                 list(ops)))
+        if isinstance(seg, _ShmBuf):
+            if any(o[0] in ("acc", "gacc", "cas") for o in ops):
+                return self._call(seg._rank,
+                                  ("opbatch", seg._win_id, _encode_ops(ops)))
+            self._note(seg, "opbatch")
+            return apply_op_batch(seg, ops)
+        return seg.op_batch(ops, defer=defer)
+
+    def op_complete(self, seg) -> int:
+        if isinstance(seg, (_LocalSeg, _ShmBuf)):
+            return 0  # local/shm batches complete synchronously
+        return seg.op_complete()
+
     # -- target-side atomics ----------------------------------------------
     def _atomic(self, seg, msg_builder, local_apply):
         if isinstance(seg, _LocalSeg):
@@ -596,6 +649,12 @@ class _WorkerSubTransport(Transport):
 
     def write_spans_masked(self, seg, spans, mask):
         return self.parent.write_spans_masked(seg, spans, mask)
+
+    def op_batch(self, seg, ops, defer: bool = False):
+        return self.parent.op_batch(seg, ops, defer=defer)
+
+    def op_complete(self, seg) -> int:
+        return self.parent.op_complete(seg)
 
     def barrier(self) -> None:
         self._require_member()

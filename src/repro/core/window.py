@@ -51,13 +51,35 @@ Nonblocking I/O (request-based RMA + async flush pipeline)
 Completion/durability semantics:
 
 * ``rput``/``raccumulate`` snapshot the origin buffer eagerly, so the caller
-  may reuse it immediately; the *target memory copy* is updated only once
-  the request completes.  ``rget`` materializes its value at completion
-  (``wait()`` returns the array).
+  may reuse it immediately.  Request completion is MPI *local* completion:
+  the op is applied -- or irrevocably in flight through the target's
+  ordered channel (a notified-access posted batch, see below) -- and the
+  target's memory copy is guaranteed updated by the next ``flush(rank)``.
+  ``rget`` materializes its value at completion (``wait()`` returns the
+  array).
 * Requests aimed at the same target rank complete in issue order (FIFO per
   rank); requests to different ranks may complete in any order.  Blocking
   ``put``/``get`` bypass the request queue -- mixing them with in-flight
   requests to the same rank requires an intervening ``flush(rank)``.
+
+Request aggregation + notified access (small-op hot path)
+---------------------------------------------------------
+
+``rput``/``rget``/``raccumulate`` on a non-dynamic window do not submit one
+pool task per op: each op lands in a per-target *aggregation buffer* and is
+dispatched as ONE ``Transport.op_batch`` train -- at a ``flush(rank)`` /
+``sync`` boundary, when a caller waits its request, or when the buffer tops
+out (``AGG_MAX_OPS`` ops / ``AGG_MAX_BYTES`` payload).  The batch is
+applied at the target in issue order under one service-lock acquisition
+(FIFO per target preserved; conformance-asserted against the inproc
+reference), so N 8-byte puts cost one control-channel round trip instead
+of N.  A batch of only result-free ops (puts/accumulates) is *posted*
+notified-access style -- no reply message at all; ``flush(rank)`` /
+``flush_async`` / blocking ``sync`` then confirm every posted batch with a
+single read of the target-side applied counter (``Transport.op_complete``),
+where any deferred error also surfaces (MPI's errors-at-flush rule).  On a
+replicated window a holder found dead at that boundary has its posted
+batches replayed on the next live holder (replay-never-skip).
 * Request completion is *not* durability: like blocking put, a completed
   rput lives in the page cache only.  Persistence still requires
   ``sync``/``flush_async`` -- un-flushed data is lost on failure, exactly
@@ -161,6 +183,7 @@ See ``repro.core.resilience`` for the failure-model matrix.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
 import time
 from typing import Any
@@ -171,7 +194,7 @@ from .hints import Info, WindowHints
 from .resilience.placement import ReplicaPlacement
 from .storage import (DEFAULT_PAGE_SIZE, DirtyTracker, WritebackPool,
                       dirty_runs, mark_span)
-from .transport.base import ACC_OPS, TransportError
+from .transport.base import ACC_OPS, DEFERRABLE_OPS, TransportError
 from .transport.local import _make_segment, _MemorySegment, _StorageSegment  # noqa: F401  (re-exported for compat)
 
 __all__ = ["Window", "WindowError", "Request", "LOCK_SHARED",
@@ -290,6 +313,45 @@ class Request:
         return all(r.test() for r in requests)
 
 
+class _AggTicket:
+    """Completion ticket of ONE op riding a per-target aggregation batch.
+
+    Duck-types the WritebackPool ticket surface :class:`Request` consumes
+    (``done``/``wait``/``result``/``exception``).  ``wait()`` first kicks
+    the target rank's buffered batch out for dispatch (idempotent) so a
+    caller blocking on its own request cannot deadlock on an op still
+    sitting in the aggregation buffer; the batch's pool task completes all
+    its tickets when the train is applied (reply form) or posted
+    (notified form -- MPI local completion; target-side completion is the
+    window's next ``flush``/``sync`` boundary).
+    """
+
+    __slots__ = ("_win", "_rank", "_ev", "result", "exception")
+
+    def __init__(self, win: "Window", rank: int):
+        self._win = win
+        self._rank = rank
+        self._ev = threading.Event()
+        self.result = None
+        self.exception: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+    def wait(self, timeout: float | None = None) -> bool:
+        if not self._ev.is_set():
+            self._win._agg_dispatch(self._rank)
+        return self._ev.wait(timeout)
+
+    def complete(self, result) -> None:
+        self.result = result
+        self._ev.set()
+
+    def fail(self, exc: BaseException) -> None:
+        self.exception = exc
+        self._ev.set()
+
+
 class Window:
     """An MPI-style window: per-rank segments + one-sided access."""
 
@@ -339,6 +401,24 @@ class Window:
         self._pool_lock = threading.Lock()
         self._req_lock = threading.Lock()
         self._pending_reqs: dict[int, list[Request]] = {}
+        # request aggregation (hot-path small ops): per-target-rank buffers
+        # of (wire_op, ticket) coalesced until a dispatch boundary, plus the
+        # notified-access ledger of already-POSTED batches awaiting their
+        # target-side completion read at the next flush/sync boundary
+        self._agg_lock = threading.Lock()
+        self._agg_ops: dict[int, list] = {}
+        self._agg_nbytes: dict[int, int] = {}
+        self._agg_posted: dict[int, list] = {}
+        # per-rank dispatch serialization: pool submission order (= key-FIFO
+        # execution order) must match buffer drain order, and pool.submit may
+        # block on backpressure so _agg_lock cannot be held across it
+        self._agg_dispatch_locks = [threading.Lock() for _ in range(comm.size)]
+        # replica read balancing: rotate reads across live holders (only
+        # when no mirror-pending writes -- read-your-writes stickiness);
+        # _mirror_inflight pins reads to the acting holder while a mirror
+        # pass is copying already-cleared spans out to the replicas
+        self._read_rr = itertools.count()
+        self._mirror_inflight: dict[int, int] = {}
         # MPI attribute caching (paper: metadata on the window object)
         self.attrs: dict[str, Any] = {
             "alloc_type": hints.alloc_type,
@@ -533,6 +613,44 @@ class Window:
                     raise
                 self.comm.mark_dead(holder)
 
+    def _read_holder_of(self, rank: int) -> int:
+        """Holder to serve a READ of ``rank``'s partition.
+
+        Writes always land on the acting holder (:meth:`_holder_of`), but
+        every synced copy holds the same bytes -- so reads rotate across
+        the k live holders to spread traffic, *except* while the rank has
+        mirror-pending spans: those exist only on the acting holder until
+        the next sync, so reads stick there (read-your-writes).  The
+        rotation seeds from the origin's rank so distinct origins start on
+        distinct copies, and advances per read so even a single-origin
+        driver exercises every live holder.
+        """
+        if self.placement is None:
+            return rank
+        dead = self.comm.dead_ranks
+        live = [h for h in self.placement.holders(rank) if h not in dead]
+        if not live:
+            raise WindowError(
+                f"no live holder for rank {rank}'s partition "
+                f"(k={self.replication}, dead={sorted(dead)})")
+        if (len(live) == 1 or self._mirror_pending[rank].dirty_count
+                or self._mirror_inflight.get(rank, 0)):
+            return live[0]
+        return live[(self.comm.rank + next(self._read_rr)) % len(live)]
+
+    def _failover_read(self, rank: int, fn, *, handle: int | None = None):
+        """:meth:`_failover` for reads: routes via :meth:`_read_holder_of`
+        (load-spread across replicas) instead of the acting holder."""
+        while True:
+            seg = self._seg(rank, handle)  # freed/rank/handle validation
+            if self.placement is None:  # incl. dynamic: handle addressing
+                return fn(seg)
+            holder = self._read_holder_of(rank)
+            try:
+                return fn(self._seg_at(rank, holder))
+            except TransportError:
+                self.comm.mark_dead(holder)
+
     def _note_write(self, rank: int, offset: int, nbytes: int) -> None:
         """Record a written span for mirroring at the next sync/flush."""
         if self.placement is not None and nbytes > 0:
@@ -557,11 +675,15 @@ class Window:
 
     def get(self, target_rank: int, target_disp: int, count: int,
             dtype=np.uint8, *, handle: int | None = None) -> np.ndarray:
-        """MPI_Get: read ``count`` items of ``dtype`` from the target (the
-        acting holder, on a replicated window)."""
+        """MPI_Get: read ``count`` items of ``dtype`` from the target.
+
+        On a replicated window the read is served by any live holder of the
+        synced partition -- rotated per-origin to spread load -- falling
+        back to the acting holder while un-mirrored writes are pending
+        (read-your-writes); see :meth:`_read_holder_of`."""
         dt = np.dtype(dtype)
         off = target_disp * self.disp_unit
-        raw = self._failover(
+        raw = self._failover_read(
             target_rank,
             lambda seg: self.comm.transport.get(seg, off, count * dt.itemsize),
             handle=handle)
@@ -661,6 +783,12 @@ class Window:
         """Write-back pool counters (None until first nonblocking use)."""
         return self._pool.stats() if self._pool is not None else None
 
+    #: pending-list length that triggers a prune pass in _register --
+    #: amortizes the scan (pruning on EVERY submit made registering a train
+    #: of N small ops O(N^2) Event checks, which dominated the aggregated
+    #: hot path's per-op cost)
+    _PRUNE_THRESHOLD = 64
+
     def _register(self, req: Request, ranks) -> Request:
         with self._req_lock:
             for r in ranks:
@@ -668,8 +796,10 @@ class Window:
                 # prune completed requests -- but keep ones that failed
                 # without anyone waiting, so flush()/free() still surface
                 # fire-and-forget errors instead of silently dropping them
-                pend[:] = [p for p in pend
-                           if not p.test() or (p._failed() and not p._observed)]
+                if len(pend) >= self._PRUNE_THRESHOLD:
+                    pend[:] = [p for p in pend
+                               if not p.test()
+                               or (p._failed() and not p._observed)]
                 pend.append(req)
         return req
 
@@ -695,16 +825,186 @@ class Window:
                                 force=self._caller_in_lock_epoch())),
             [rank])
 
+    # -- request aggregation (hot-path small ops) ---------------------------
+    #: dispatch a target's buffered ops once either bound is hit (a flush/
+    #: sync boundary or a waiting ticket dispatches earlier regardless)
+    AGG_MAX_OPS = 128
+    AGG_MAX_BYTES = 1 << 20
+
+    @staticmethod
+    def _op_write_span(op) -> tuple[int, int]:
+        """(offset, nbytes) a batch sub-op writes (0 for reads)."""
+        kind = op[0]
+        if kind == "put":
+            data = op[2]
+            return op[1], (data.nbytes if hasattr(data, "nbytes")
+                           else len(data))
+        if kind in ("acc", "gacc"):
+            return op[1], np.ascontiguousarray(op[2]).nbytes
+        if kind == "cas":
+            return op[1], np.dtype(op[4]).itemsize
+        return op[1], 0  # get
+
+    def _agg_submit(self, rank: int, op: tuple, nbytes: int = 0) -> Request:
+        """Buffer one wire op for ``rank`` and return its Request.
+
+        The op rides the rank's next batch train; the pool is created
+        eagerly so ``free()`` drains buffered-but-never-dispatched ops.
+        """
+        ticket = _AggTicket(self, rank)
+        pool = self._get_pool()
+        # a bounded pool's high watermark also caps the train: one batch is
+        # ONE charged submission, so letting it grow past the watermark
+        # would defeat the backpressure bound the user configured
+        cap = self.AGG_MAX_BYTES
+        if pool.max_inflight_bytes is not None:
+            cap = min(cap, pool.max_inflight_bytes)
+        with self._agg_lock:
+            overflow = (self._agg_ops.get(rank)
+                        and self._agg_nbytes.get(rank, 0) + nbytes > cap)
+        if overflow:
+            self._agg_dispatch(rank)
+        with self._agg_lock:
+            buf = self._agg_ops.setdefault(rank, [])
+            buf.append((op, ticket))
+            self._agg_nbytes[rank] = self._agg_nbytes.get(rank, 0) + nbytes
+            full = (len(buf) >= self.AGG_MAX_OPS
+                    or self._agg_nbytes[rank] >= cap)
+        req = self._register(Request(ticket), [rank])
+        if full:
+            self._agg_dispatch(rank)
+        return req
+
+    def _agg_dispatch(self, rank: int) -> None:
+        """Drain ``rank``'s aggregation buffer into ONE batched pool task.
+
+        Idempotent (an empty buffer is a no-op).  The task applies the
+        whole train through ``transport.op_batch`` under a single
+        target-lock epoch: result-free trains are *posted* (notified
+        access -- no reply; target-side completion read at the next
+        flush/sync boundary), any train with a read replies inline.
+        """
+        with self._agg_dispatch_locks[rank]:
+            with self._agg_lock:
+                entries = self._agg_ops.pop(rank, None)
+                total = self._agg_nbytes.pop(rank, 0)
+            if not entries:
+                return
+            ops = [op for op, _ in entries]
+            tickets = [t for _, t in entries]
+            deferrable = all(op[0] in DEFERRABLE_OPS for op in ops)
+            exclusive = any(op[0] in ("acc", "gacc", "cas") for op in ops)
+
+            def task():
+                lock = self._locks[rank]
+                lock.acquire(exclusive=exclusive)
+                try:
+                    while True:
+                        seg, holder = self._route(rank)
+                        try:
+                            res = self.comm.transport.op_batch(
+                                seg, ops, defer=deferrable)
+                            break
+                        except TransportError:
+                            if self.placement is None:
+                                raise
+                            self.comm.mark_dead(holder)
+                except BaseException as e:
+                    for t in tickets:
+                        t.fail(e)
+                    return
+                finally:
+                    lock.release()
+                try:
+                    if res is None:
+                        # posted: MPI local completion -- tickets complete
+                        # now, target-side completion (and error surfacing)
+                        # at the next flush/sync boundary's notify read
+                        for op in ops:
+                            off, n = self._op_write_span(op)
+                            self._note_write(rank, off, n)
+                        with self._agg_lock:
+                            self._agg_posted.setdefault(rank, []).append(
+                                (holder, ops))
+                        for t in tickets:
+                            t.complete(None)
+                    else:
+                        # per-op results; a failed sub-op ships its
+                        # exception in its slot and fails only its ticket
+                        for op, t, r in zip(ops, tickets, res):
+                            if isinstance(r, BaseException):
+                                t.fail(r)
+                                continue
+                            off, n = self._op_write_span(op)
+                            self._note_write(rank, off, n)
+                            t.complete(r)
+                except BaseException as e:
+                    for t in tickets:
+                        if not t.done():
+                            t.fail(e)
+
+            self._get_pool().submit(task, key=rank, nbytes=total,
+                                    force=self._caller_in_lock_epoch())
+
+    def _agg_complete(self, rank: int) -> int:
+        """Notified-access completion: one ``op_complete`` read per holder
+        confirms every batch posted to it since the last boundary.  A dead
+        holder's unconfirmed trains are replayed (reply form) on the next
+        live replica -- safe because the replacement never saw the posted
+        originals (replay-never-skip).  Returns confirmed+replayed op count;
+        deferred application errors surface here, MPI-flush-style.
+        """
+        with self._agg_lock:
+            posted = self._agg_posted.pop(rank, None)
+        if not posted:
+            return 0
+        # consecutive same-holder trains share one completion read
+        groups: list[list] = []
+        for holder, ops in posted:
+            if groups and groups[-1][0] == holder:
+                groups[-1][1].extend(ops)
+            else:
+                groups.append([holder, list(ops)])
+        done = 0
+        replay: list = []
+        for holder, ops in groups:
+            try:
+                self.comm.transport.op_complete(self._seg_at(rank, holder))
+                done += len(ops)
+            except TransportError:
+                if self.placement is None:
+                    raise
+                self.comm.mark_dead(holder)
+                replay.extend(ops)
+        if replay:
+            res = self._failover(
+                rank, lambda seg: self.comm.transport.op_batch(seg, replay))
+            for op in replay:
+                off, n = self._op_write_span(op)
+                self._note_write(rank, off, n)
+            done += len(replay)
+            for r in res or ():
+                if isinstance(r, BaseException):
+                    raise r  # deferred op error: surface at the boundary
+        return done
+
     def rput(self, data: np.ndarray, target_rank: int, target_disp: int = 0,
              *, handle: int | None = None) -> Request:
         """MPI_Rput: nonblocking put; completion = target memory copy updated.
 
         The origin buffer is snapshotted eagerly, so the caller may reuse it
         immediately.  Storage persistence still requires sync/flush_async.
+
+        Non-dynamic windows ride the per-target aggregation buffer: the put
+        coalesces with neighboring small ops into one batched train (posted
+        with notified access when the train is result-free).
         """
         buf = np.ascontiguousarray(data).view(np.uint8).ravel().copy()
         self._seg(target_rank, handle)  # eager rank/handle validation
         off = target_disp * self.disp_unit
+        if not self.dynamic:
+            return self._agg_submit(target_rank, ("put", off, buf),
+                                    buf.nbytes)
 
         def task():
             lock = self._locks[target_rank]
@@ -722,8 +1022,19 @@ class Window:
 
     def rget(self, target_rank: int, target_disp: int, count: int,
              dtype=np.uint8, *, handle: int | None = None) -> Request:
-        """MPI_Rget: nonblocking get; ``wait()`` returns the fetched array."""
+        """MPI_Rget: nonblocking get; ``wait()`` returns the fetched array.
+
+        On a non-dynamic window the get joins the target's batched train
+        (its presence makes the train reply inline rather than post)."""
         self._seg(target_rank, handle)
+        if not self.dynamic:
+            dt = np.dtype(dtype)
+            off = target_disp * self.disp_unit
+            req = self._agg_submit(target_rank,
+                                   ("get", off, count * dt.itemsize))
+            return req.map(
+                lambda raw: np.asarray(raw, dtype=np.uint8)
+                .view(dt)[:count].copy())
 
         def task():
             lock = self._locks[target_rank]
@@ -739,11 +1050,24 @@ class Window:
     def raccumulate(self, data: np.ndarray, target_rank: int,
                     target_disp: int = 0, op: str = "sum",
                     *, handle: int | None = None) -> Request:
-        """MPI_Raccumulate: nonblocking accumulate (atomic at the target)."""
+        """MPI_Raccumulate: nonblocking accumulate (atomic at the target).
+
+        Non-dynamic windows batch it with neighboring ops; an accumulate in
+        a train makes the whole train apply under the target's exclusive
+        lock (one epoch for N ops), and an all-put/acc train still posts
+        notified."""
         if op not in self._ACC_OPS:
             raise WindowError(f"unknown accumulate op {op!r}")
         buf = np.ascontiguousarray(data).copy()
         self._seg(target_rank, handle)
+        if not self.dynamic:
+            if op == "no_op":
+                ticket = _AggTicket(self, target_rank)
+                ticket.complete(None)
+                return self._register(Request(ticket), [target_rank])
+            off = target_disp * self.disp_unit
+            return self._agg_submit(target_rank, ("acc", off, buf, op),
+                                    buf.nbytes)
 
         def task():
             self.accumulate(buf, target_rank, target_disp, op, handle=handle)
@@ -802,12 +1126,19 @@ class Window:
         state = {"remaining": len(ranks), "total": 0}
         state_lock = threading.Lock()
         pool = self._get_pool()
+        for r in ranks:
+            # aggregation boundary: buffered trains go out now; pool
+            # key-FIFO orders each rank's batch task before its flush task
+            self._agg_dispatch(r)
 
         def make_task(r: int):
             def task():
                 if exclusive:
                     self._locks[r].acquire(exclusive=True)
                 try:
+                    # notified-access boundary: confirm posted trains (and
+                    # replay a dead holder's) before measuring the sync
+                    self._agg_complete(r)
                     # time only the I/O (lock waits would deflate the
                     # adaptive-watermark throughput estimate); remote
                     # segments report the owner-measured I/O time, which
@@ -963,6 +1294,7 @@ class Window:
             raise WindowError("window has been freed")
         if rank < 0 or rank >= self.comm.size:
             raise WindowError(f"rank {rank} outside communicator of size {self.comm.size}")
+        self._agg_dispatch(rank)  # flush is an aggregation boundary
         with self._req_lock:
             reqs = list(self._pending_reqs.get(rank, ()))
             self._pending_reqs[rank] = []
@@ -976,6 +1308,14 @@ class Window:
                 # observed via wait() don't re-raise
                 if not seen and first is None:
                     first = e
+        try:
+            # notified-access boundary: ONE completion read per holder
+            # confirms every batch posted since the last flush/sync;
+            # deferred application errors surface here (MPI flush rule)
+            self._agg_complete(rank)
+        except BaseException as e:
+            if first is None:
+                first = e
         if first is not None:
             raise first
 
@@ -1011,8 +1351,15 @@ class Window:
         mask = self._validate_mask(rank, mask)
         spans = self._validate_spans(spans, mask)
         ranks = range(self.comm.size) if rank is None else [rank]
-        return sum(self._sync_rank_segs(r, full, mask, spans=spans)
-                   for r in ranks)
+        total = 0
+        for r in ranks:
+            # sync is an aggregation + notified-access boundary: buffered
+            # trains dispatch, already-posted ones are confirmed (dead
+            # holders replayed) before the storage flush
+            self._agg_dispatch(r)
+            self._agg_complete(r)
+            total += self._sync_rank_segs(r, full, mask, spans=spans)
+        return total
 
     def _mask_blocks(self, rank: int) -> int | None:
         """Expected mask length for ``rank``: its window-block count, or
@@ -1162,6 +1509,9 @@ class Window:
         ps = tracker.page_size
         partial = False
         mirrored = 0
+        with self._agg_lock:
+            self._mirror_inflight[rank] = \
+                self._mirror_inflight.get(rank, 0) + 1
         try:
             for b0, b1 in dirty_runs(take):
                 lo, hi = b0 * ps, min(b1 * ps, tracker.size)
@@ -1170,7 +1520,11 @@ class Window:
                     data = self.comm.transport.get(src, lo, n)
                     for h in list(live):
                         try:
-                            self.comm.transport.put(live[h], lo, data)
+                            # notified post: no per-chunk reply -- the
+                            # pre-sync op_complete below is the one
+                            # completion read for the whole mirror train
+                            self.comm.transport.op_batch(
+                                live[h], [("put", lo, data)], defer=True)
                         except TransportError:
                             self.comm.mark_dead(h)
                             live.pop(h)
@@ -1178,6 +1532,7 @@ class Window:
                     lo += n
             for h in list(live):
                 try:
+                    self.comm.transport.op_complete(live[h])
                     mirrored += live[h].sync()
                 except TransportError:
                     self.comm.mark_dead(h)
@@ -1189,6 +1544,9 @@ class Window:
             # and surface so the flush's caller sees it
             tracker.restore(take)
             raise
+        finally:
+            with self._agg_lock:
+                self._mirror_inflight[rank] -= 1
         if partial or not live:
             tracker.restore(take)
         return mirrored
@@ -1383,6 +1741,8 @@ class Window:
             # the surviving segments (and their files) shut down cleanly
             errors.append(e)
         if self._pool is not None:
+            for r in range(self.comm.size):
+                self._agg_dispatch(r)  # buffered trains must not be lost
             with self._req_lock:
                 pending = [r for rs in self._pending_reqs.values() for r in rs]
                 self._pending_reqs.clear()
@@ -1393,6 +1753,11 @@ class Window:
                 except BaseException as e:
                     if not seen:
                         errors.append(e)
+            for r in range(self.comm.size):
+                try:
+                    self._agg_complete(r)  # confirm/replay posted trains
+                except BaseException as e:
+                    errors.append(e)
             self._pool.shutdown()
             self._pool = None
         if self.placement is not None and not self.hints.discard:

@@ -403,3 +403,65 @@ def test_mp_window_failover_zero_lost_synced_bytes(tmp_path):
         win.free()
     finally:
         comm.close()
+
+
+def test_replica_reads_spread_across_live_holders(tmp_path):
+    """Reads of a synced replicated partition rotate across its live
+    holders (load spreading) instead of pinning the acting holder; an
+    un-mirrored write pins reads back to the acting holder until the next
+    sync (read-your-writes), and a single live holder serves alone."""
+    comm = Communicator(2)
+    win = Window.allocate(comm, 8192, info=rep_info(tmp_path, k=2))
+    try:
+        win.put(np.full(64, 5, np.uint8), 0, 0)
+        win.sync(0)  # mirrored: both holders now carry the bytes
+        served = []
+        orig = comm.transport.get
+
+        def counting(seg, off, n):
+            served.append(id(seg))
+            return orig(seg, off, n)
+
+        comm.transport.get = counting
+        try:
+            for _ in range(6):
+                assert (win.get(0, 0, 64) == 5).all()
+            assert len(set(served)) == 2  # both holders served traffic
+            # an un-mirrored write makes reads sticky to the acting holder
+            win.put(np.full(64, 6, np.uint8), 0, 0)
+            served.clear()
+            for _ in range(4):
+                assert (win.get(0, 0, 64) == 6).all()
+            assert len(set(served)) == 1
+            win.sync(0)  # mirror the 6s, then kill the primary
+            comm.mark_dead(0)
+            served.clear()
+            for _ in range(4):
+                assert (win.get(0, 0, 64) == 6).all()
+            assert len(set(served)) == 1  # only the replica is left
+        finally:
+            comm.transport.get = orig
+        win.free()
+    finally:
+        comm.close()
+
+
+@needs_shm
+def test_mp_notified_completion_failover_replay(tmp_path):
+    """A posted (notified) train whose holder is SIGKILLed before the
+    completion read is replayed on the next live replica at the flush
+    boundary -- replay-never-skip for the aggregation hot path."""
+    comm = Communicator(4, transport="mp")
+    try:
+        win = Window.allocate(comm, 8192, info=rep_info(tmp_path, k=2))
+        data = np.full(64, 42, np.uint8)
+        req = win.rput(data, 0, 0)
+        req.wait()  # train posted to rank 0 (optimistic local completion)
+        comm.transport._procs[0].kill()
+        comm.transport._procs[0].join(timeout=10)
+        win.flush(0)  # completion read fails -> mark dead -> replay on 1
+        assert 0 in comm.dead_ranks
+        assert (win.get(0, 0, 64) == data).all()  # replica serves them
+        win.free()
+    finally:
+        comm.close()

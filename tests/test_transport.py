@@ -516,3 +516,198 @@ def test_mp_free_after_worker_death_idempotent(tmp_path):
     comm.close()  # no window left -> shuts the workers down cleanly
     for p in comm.transport._procs:
         assert not p.is_alive()
+
+
+# -- request aggregation / notified access ------------------------------------
+
+def test_batched_ops_fifo_parity(comm4, tmp_path):
+    """An interleaved rput/raccumulate/rget train against one target keeps
+    per-target FIFO order on both backends, byte-identical to a pinned
+    in-process reference executing the same program op by op.  The rget in
+    the middle must observe the pre-overwrite value (issue order, not
+    completion batching, decides what a read sees)."""
+    ref_comm = Communicator(4, transport="inproc")
+
+    def program(comm, base, name):
+        win = Window.allocate(comm, 4096,
+                              info=storage_info(base, name))
+        try:
+            reqs = []
+            reqs.append(win.rput(np.full(64, 1, np.uint8), 2, 0))
+            reqs.append(win.raccumulate(np.full(8, 2, np.int64), 2, 0))
+            mid = win.rget(2, 0, 64)  # sees put+acc, NOT the overwrite
+            reqs.append(win.rput(np.full(64, 9, np.uint8), 2, 0))
+            win.flush(2)
+            mid_val = mid.wait()
+            final = win.get(2, 0, 64)
+            win.sync(2)
+            disk = np.fromfile(str(base / f"{name}.2"),
+                               dtype=np.uint8)[:64].copy()
+            for r in reqs:
+                r.wait()
+            return mid_val, final, disk
+        finally:
+            win.free()
+
+    got = program(comm4, tmp_path, "agg.bin")
+    want = program(ref_comm, tmp_path, "ref.bin")
+    ref_comm.close()
+    for g, w in zip(got, want):
+        assert (g == w).all()
+    # the mid-train read really saw the accumulated (pre-overwrite) bytes:
+    # 64 bytes of 0x01, each int64 lane bumped by the accumulate's +2
+    assert (got[0].view(np.int64) == 0x0101010101010101 + 2).all()
+    assert (got[1] == 9).all()
+
+
+def test_batched_ops_one_round_trip_mp(comm4, tmp_path):
+    """Round-trip accounting: N small rputs to one target cost exactly ONE
+    posted control-channel message, and their flush ONE completion read --
+    the aggregation + notified-access contract.  A train containing a get
+    instead ships as exactly one replying ``opbatch``."""
+    if comm4.transport.kind != "mp":
+        pytest.skip("round-trip accounting is mp-specific")
+    win = Window.allocate(comm4, 4096, info=storage_info(tmp_path))
+    try:
+        calls, posts = [], []
+        orig_call, orig_post = comm4.transport._call, comm4.transport._post
+
+        def counting_call(rank, msg):
+            calls.append((rank, msg[0]))
+            return orig_call(rank, msg)
+
+        def counting_post(rank, msg):
+            posts.append((rank, msg[0]))
+            return orig_post(rank, msg)
+
+        comm4.transport._call = counting_call
+        comm4.transport._post = counting_post
+        try:
+            reqs = [win.rput(np.full(8, i, np.uint8), 3, 8 * i)
+                    for i in range(32)]
+            win.flush(3)
+            assert all(r.test() for r in reqs)
+            assert posts == [(3, "opbatch_nb")]  # one posted train
+            assert calls == [(3, "notify_read")]  # one completion read
+            calls.clear(), posts.clear()
+            # a read in the train forces the replying form: one opbatch
+            win.rput(np.full(8, 7, np.uint8), 3, 0)
+            got = win.rget(3, 8, 8)
+            assert (got.wait() == 1).all()
+            assert posts == []
+            assert calls == [(3, "opbatch")]
+        finally:
+            comm4.transport._call = orig_call
+            comm4.transport._post = orig_post
+        win.flush(3)
+        assert (win.get(3, 0, 8) == 7).all()
+    finally:
+        win.free()
+
+
+def test_batched_put_runs_coalesce_owner_side():
+    """Adjacent puts in one train vectorize into a single segment write;
+    an out-of-range straggler fails alone (slot-captured), never its valid
+    neighbors -- sub-ops stay as independent as the MPI calls they batch."""
+    from repro.core.transport.base import apply_op_batch
+    from repro.core.transport.local import _MemorySegment
+
+    class CountingSeg(_MemorySegment):
+        def __init__(self, size):
+            super().__init__(size)
+            self.writes = 0
+
+        def write(self, offset, data):
+            self.writes += 1
+            super().write(offset, data)
+
+    seg = CountingSeg(256)
+    ops = [("put", i * 8, np.full(8, i + 1, np.uint8)) for i in range(4)]
+    ops.append(("put", 1024, np.ones(8, np.uint8)))  # out of range
+    ops.append(("get", 0, 32))
+    res = apply_op_batch(seg, ops)
+    assert seg.writes == 2  # 4 adjacent puts -> 1 write (+1 failed retry)
+    assert res[:4] == [None] * 4
+    assert isinstance(res[4], IndexError)
+    assert (res[5][:8] == 1).all() and (res[5][24:] == 4).all()
+
+
+def test_notified_post_error_surfaces_at_flush(comm4, tmp_path):
+    """A posted train completes optimistically (MPI local completion), so
+    a target-side failure surfaces at the flush boundary's completion
+    read -- the notified-access error contract -- and the window stays
+    usable afterwards."""
+    win = Window.allocate(comm4, 4096, info=storage_info(tmp_path))
+    try:
+        bad = win.rput(np.ones(16, np.uint8), 1, 4096)  # out of range
+        ok = win.rput(np.full(8, 5, np.uint8), 1, 0)
+        with pytest.raises(IndexError):
+            win.flush(1)
+        ok.wait(timeout=10.0)
+        assert bad.test()
+        assert (win.get(1, 0, 8) == 5).all()
+    finally:
+        win.free()
+
+
+# -- transport metadata bugfix regressions ------------------------------------
+
+def test_seg_meta_memory_reports_no_storage():
+    """A tracker-less memory segment advertises sto_bytes=0 (it has no
+    storage tier to sync); remote handles built from its meta must not
+    report has_storage=True nor charge dirty-byte backpressure."""
+    from repro.core.transport.local import _MemorySegment
+    from repro.core.transport.multiproc import _RemoteSegment, _seg_meta
+
+    meta = _seg_meta(_MemorySegment(256))
+    assert meta["kind"] == "memory"
+    assert meta["sto_bytes"] == 0
+
+    seg = _RemoteSegment(None, 0, 1, meta)
+    assert not seg.has_storage
+    # satellite: write() must not grow the dirty estimate on a
+    # memory-only segment -- there is no sync that could ever drain it
+    class _FakeTransport:
+        def _call(self, rank, msg):
+            return None
+    seg._t = _FakeTransport()
+    seg.write(0, np.ones(64, np.uint8))
+    assert seg.dirty_bytes_estimate() == 0
+
+
+def test_seg_meta_storage_still_reports_size(tmp_path):
+    from repro.core.hints import WindowHints
+    from repro.core.transport.local import _make_segment
+    from repro.core.transport.multiproc import _seg_meta
+
+    hints = WindowHints.from_info(storage_info(tmp_path, "meta.bin"))
+    seg = _make_segment(8192, hints, 0, 1, shared_file=False,
+                        memory_budget=None, mechanism="cached",
+                        page_size=4096, cache_bytes=None,
+                        writeback_interval=None)
+    try:
+        meta = _seg_meta(seg)
+        assert meta["kind"] == "storage"
+        assert meta["sto_bytes"] == 8192
+    finally:
+        seg.close(unlink=True)
+
+
+def test_service_sync_without_sync_method_raises_transport_error():
+    """sync/wsync against a segment with no sync() must name the op and
+    window kind in a TransportError, not leak an AttributeError."""
+    from repro.core.transport.multiproc import _SegmentService
+
+    class NoSync:
+        kind = "memory"
+        size = 64
+
+        def write(self, offset, data):
+            pass
+
+    svc = _SegmentService(0)
+    svc.segments[7] = NoSync()
+    with pytest.raises(TransportError, match="'sync'.*memory window"):
+        svc.execute(("sync", 7, False, None))
+    with pytest.raises(TransportError, match="'wsync'.*memory window"):
+        svc.execute(("wsync", 7, [], None))
