@@ -72,6 +72,7 @@ def run(bench: Bench, transport: str | None = None) -> float:
     try:
         return _run_pipelines(bench, comm)
     finally:
+        bench.record_wire(comm)
         comm.close()  # never leak mp workers, even on a failed pipeline
 
 

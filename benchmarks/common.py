@@ -31,6 +31,16 @@ class Bench:
         self.name = name
         self.rows: list[tuple[str, float, str]] = []
         self.gates: list[dict] = []
+        #: transport logical-vs-wire byte snapshot (encoding transports
+        #: only); suites fill it via record_wire() before closing their
+        #: communicator, and ``--json`` reports it per suite
+        self.wire: dict | None = None
+
+    def record_wire(self, comm) -> None:
+        """Capture the communicator transport's wire-byte counters."""
+        snap = getattr(comm.transport, "wire_stats_snapshot", lambda: None)()
+        if snap is not None:
+            self.wire = snap
 
     def add(self, label: str, seconds: float, calls: int = 1, derived: str = ""):
         us = seconds / max(1, calls) * 1e6
@@ -59,6 +69,7 @@ class Bench:
                          "derived": derived}
                         for label, us, derived in self.rows],
             "gates": list(self.gates),
+            "wire_bytes": self.wire,
         }
 
 

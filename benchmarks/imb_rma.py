@@ -73,6 +73,7 @@ def run(bench: Bench, transport: str | None = None,
     try:
         _run(bench, comm, transport, iters, smallop_only)
     finally:
+        bench.record_wire(comm)
         comm.close()  # never leak mp workers
 
 
@@ -194,6 +195,40 @@ def _run(bench: Bench, comm, transport: str, iters: int,
                     put_us / SMALLOP_BATCH_SPEEDUP)
                 bench.add(f"smallop_batch_speedup_ratio/{kind}",
                           0.0, derived=f"{put_us / batched_us:.2f}x")
+
+            # compressed op-train lane (encoding transports, storage only):
+            # the same aggregated rput train with the span-wire codec forced
+            # off then on.  Compressible put payloads must cross the control
+            # channel at <=50% of the raw train's wire bytes.
+            policy = getattr(comm.transport, "codec_policy", None)
+            if storage and policy is not None:
+                stats = comm.transport.wire_stats
+                blk = np.full(512, 7, np.uint8)   # compressible payload
+                saved_mode = policy.mode
+
+                def _train(mode: str):
+                    policy.mode = mode
+                    before = stats.snapshot()
+                    t0 = time.perf_counter()
+                    for _ in range(reps):
+                        for i in range(8):
+                            win.rput(blk, 1, 512 * i)
+                        win.flush(1)
+                    dt = time.perf_counter() - t0
+                    after = stats.snapshot()
+                    return (after["ops_wire_bytes"]
+                            - before["ops_wire_bytes"], dt)
+
+                try:
+                    raw_w, raw_t = _train("off")
+                    enc_w, enc_t = _train("force")
+                finally:
+                    policy.mode = saved_mode
+                ratio = enc_w / max(1, raw_w)
+                bench.add(f"opbatch_codec/{kind}", enc_t, reps * 8,
+                          derived=f"{enc_w}B vs {raw_w}B raw wire")
+                gates_ok &= bench.gate(f"opbatch_codec_ratio/{kind}",
+                                       ratio, 0.5, unit="x")
             win.free()
 
         if not smallop_only:

@@ -66,11 +66,19 @@ else
     # storage windows -- request aggregation amortizing round trips)
     timeout 300 "${MP_ENV[@]}" python -m benchmarks.imb_rma \
         --transport mp --smallop-only
+    # compressed-sync wire lane (enforced: the staged-span flush with the
+    # codec forced on must cross the control channel at <=50% of the raw
+    # path's bytes on compressible dirty pages, and incompressible noise
+    # must take the raw fallback at <=1.05x logical) -- jax-free
+    timeout 300 "${MP_ENV[@]}" python -m benchmarks.selective_sync \
+        --transport mp --codec-only
     # masked device-sync gate, cross-process: at 8% dirty blocks the
     # selective path (one masked span-write message per rank) must write
-    # <=15% of the full-sync bytes (the suite's assert enforces: exit 1).
-    # The device diff needs jax (repro.kernels); skip gracefully without it
-    # -- every other lane stays jax-free.
+    # <=15% of the full-sync bytes, and the fused diff+pack path must move
+    # all changed bytes in ONE device->host transfer per shard set (the
+    # suite's asserts enforce: exit 1).  The device diff needs jax
+    # (repro.kernels); skip gracefully without it -- the codec lane above
+    # keeps the wire gate enforced either way.
     if python -c "import jax" >/dev/null 2>&1; then
         timeout 300 "${MP_ENV[@]}" python -m benchmarks.selective_sync \
             --transport mp

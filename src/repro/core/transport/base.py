@@ -52,6 +52,15 @@ kind        tuple                                        result slot
 Only result-free kinds (``put``/``acc`` -- :data:`DEFERRABLE_OPS`) may be
 posted notified; a batch containing any reading op always takes the
 reply form so its results travel back on the same round trip.
+
+On remote backends the batched train and the masked-span payload may
+additionally ride the lossless wire codec (:mod:`repro.core.codec`): the
+origin replaces the raw payload with a tagged
+``("encops1"|"enc1", codec_id, header, blob)`` tuple when the roofline
+policy predicts a win, and the owner decodes *before* applying -- segment
+state and on-disk layout are byte-identical either way.  In-process
+backends (this base implementation, ``inproc``, shared-memory handles)
+never see encoded payloads.
 """
 
 from __future__ import annotations
@@ -271,6 +280,18 @@ class Transport(abc.ABC):
             raise ValueError("transport size must be >= 1")
         self.size = size
         self.rank = rank
+        #: lossless wire-codec negotiation state
+        #: (:class:`repro.core.codec.CodecPolicy`); remote backends install
+        #: one, in-process backends leave ``None`` -- there is no wire to
+        #: save, so their payloads always ship (and apply) raw.
+        self.codec_policy = None
+        #: logical-vs-wire byte telemetry
+        #: (:class:`repro.core.codec.WireStats`) on encoding backends.
+        self.wire_stats = None
+
+    def wire_stats_snapshot(self) -> dict | None:
+        """Logical vs wire byte counters, or ``None`` on raw backends."""
+        return None if self.wire_stats is None else self.wire_stats.snapshot()
 
     # -- segment lifecycle -------------------------------------------------
     @abc.abstractmethod

@@ -59,6 +59,9 @@ import time
 
 import numpy as np
 
+from ..codec import (CodecPolicy, WireStats, decode_ops, decode_spans,
+                     encode_ops, encode_spans, is_encoded_ops,
+                     is_encoded_spans)
 from ..hints import WindowHints
 from .base import (DEFERRABLE_OPS, Transport, TransportError,
                    apply_accumulate, apply_compare_and_swap,
@@ -195,6 +198,28 @@ def _encoded_write_bytes(payload) -> int:
     return total
 
 
+def _codec_spans(transport, payload):
+    """Origin-side codec gate for a raw ``wsync`` span payload.
+
+    Consults the transport's :class:`~repro.core.codec.CodecPolicy`
+    (roofline threshold); returns the wire payload -- the encoded tuple
+    when the policy accepts, the raw list otherwise -- and tallies
+    logical/wire bytes into the transport's :class:`WireStats`.
+    """
+    enc, logical, wire = encode_spans(payload, transport.codec_policy)
+    if transport.wire_stats is not None:
+        transport.wire_stats.add("spans", logical, wire, enc is not None)
+    return payload if enc is None else enc
+
+
+def _codec_ops(transport, payload):
+    """Origin-side codec gate for a wire-form op train (put bytes only)."""
+    enc, logical, wire = encode_ops(payload, transport.codec_policy)
+    if transport.wire_stats is not None:
+        transport.wire_stats.add("ops", logical, wire, enc is not None)
+    return payload if enc is None else enc
+
+
 class _RemoteSegment:
     """Driver-side handle for a segment owned by a worker process.
 
@@ -263,15 +288,18 @@ class _RemoteSegment:
         """
         payload = _encode_ops(ops)
         written = _encoded_write_bytes(payload)
+        wire_payload = _codec_ops(self._t, payload)
         if defer and all(o[0] in DEFERRABLE_OPS for o in payload):
-            self._t._post(self._rank, ("opbatch_nb", self._win_id, payload))
+            self._t._post(self._rank,
+                          ("opbatch_nb", self._win_id, wire_payload))
             with self._approx_lock:
                 self._posted += 1
                 if self.has_storage:
                     self._approx_dirty = min(self.size,
                                              self._approx_dirty + written)
             return None
-        res = self._t._call(self._rank, ("opbatch", self._win_id, payload))
+        res = self._t._call(self._rank,
+                            ("opbatch", self._win_id, wire_payload))
         if self.has_storage and written:
             with self._approx_lock:
                 self._approx_dirty = min(self.size,
@@ -304,15 +332,19 @@ class _RemoteSegment:
         """Masked span write + flush, one control-channel round trip: the
         owner's progress thread applies the spans to its page cache, ORs
         the mask into its ``DirtyTracker`` and runs the masked flush --
-        the device-diff epilogue without per-span messages."""
+        the device-diff epilogue without per-span messages.  The span
+        payload rides the lossless wire codec when the transport's policy
+        accepts (the owner decodes before applying, so its page cache --
+        and the on-disk layout -- see exactly the raw bytes)."""
         payload = [(int(off),
                     np.ascontiguousarray(np.asarray(d, np.uint8).ravel())
                     .tobytes())
                    for off, d in spans]
-        n, io_s = self._t._call(self._rank,
-                                ("wsync", self._win_id, payload, mask))
-        self.last_sync_io = io_s
         written = sum(len(raw) for _, raw in payload)
+        wire_payload = _codec_spans(self._t, payload)
+        n, io_s = self._t._call(self._rank,
+                                ("wsync", self._win_id, wire_payload, mask))
+        self.last_sync_io = io_s
         with self._approx_lock:
             self._approx_dirty = max(
                 0, min(self.size, self._approx_dirty + written) - n)
@@ -426,8 +458,13 @@ class _SegmentService:
             if op == "opbatch":
                 # request aggregation: the whole op train under this ONE
                 # lock acquisition, contiguous put runs coalesced into
-                # single span writes (apply_op_batch)
+                # single span writes (apply_op_batch).  Codec-encoded
+                # trains (remote origins) are decoded here, before any
+                # byte touches the segment; raw trains (the SPMD
+                # _LocalSeg path) pass through untouched.
                 _, win_id, ops = msg
+                if is_encoded_ops(ops):
+                    ops = decode_ops(ops)
                 return apply_op_batch(self.segments[win_id], ops)
             if op == "sync":
                 _, win_id, full, mask = msg
@@ -446,8 +483,16 @@ class _SegmentService:
                 _, win_id, spans, mask = msg
                 seg = self.segments[win_id]
                 self._require_sync(seg, "wsync")
+                if is_encoded_spans(spans):
+                    # decode-before-apply: the page cache and the files
+                    # below it see raw bytes, byte-identical to the
+                    # uncompressed path (crash-recovery artifacts stay
+                    # cross-compatible whichever side encoded)
+                    spans = decode_spans(spans)
                 for offset, raw in spans:
-                    seg.write(offset, np.frombuffer(raw, np.uint8))
+                    seg.write(offset, np.frombuffer(raw, np.uint8)
+                              if isinstance(raw, (bytes, bytearray))
+                              else np.asarray(raw, np.uint8))
                 mark = getattr(seg, "mark_blocks", None)
                 if mask is not None and mark is not None:
                     mark(mask)
@@ -617,6 +662,11 @@ class MultiprocessTransport(Transport):
         method = (start_method or os.environ.get("REPRO_MP_START")
                   or "spawn")
         self._ctx = multiprocessing.get_context(method)
+        # lossless wire codec: spans/op trains crossing the control channel
+        # are encoded per the roofline policy; logical-vs-wire telemetry
+        # accumulates here (surfaced via wire_stats_snapshot / pool_stats)
+        self.codec_policy = CodecPolicy()
+        self.wire_stats = WireStats()
         self._procs = []
         self._conns = []
         self._chan_locks = [threading.Lock() for _ in range(size)]
@@ -833,8 +883,8 @@ class MultiprocessTransport(Transport):
         if isinstance(seg, _ShmBuf):
             if any(o[0] in ("acc", "gacc", "cas") for o in ops):
                 rank, win_id = self._addr(seg)
-                return self._call(rank,
-                                  ("opbatch", win_id, _encode_ops(ops)))
+                return self._call(rank, ("opbatch", win_id,
+                                         _codec_ops(self, _encode_ops(ops))))
             return apply_op_batch(seg, ops)
         return seg.op_batch(ops, defer=defer)
 

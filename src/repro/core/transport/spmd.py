@@ -60,13 +60,14 @@ from multiprocessing import connection as mpc
 
 import numpy as np
 
+from ..codec import CodecPolicy, WireStats
 from .base import (Transport, TransportError, apply_accumulate,
                    apply_compare_and_swap, apply_get_accumulate,
                    apply_masked_spans, apply_op_batch, reduce_values)
-from .multiproc import (_DriverShmBuf, _encode_ops, _READY_TIMEOUT_S,
-                        _RemoteSegment, _SegmentService, _ShmBuf,
-                        _SHUTDOWN_JOIN_S, _call_timeout_s, _probe_timeout_s,
-                        _worker_main)
+from .multiproc import (_codec_ops, _DriverShmBuf, _encode_ops,
+                        _READY_TIMEOUT_S, _RemoteSegment, _SegmentService,
+                        _ShmBuf, _SHUTDOWN_JOIN_S, _call_timeout_s,
+                        _probe_timeout_s, _worker_main)
 
 __all__ = ["SpmdLauncher"]
 
@@ -327,6 +328,11 @@ class _WorkerTransport(Transport):
         self._seq_lock = threading.Lock()
         self.stats = {"local": Counter(), "remote": Counter(),
                       "targets": Counter(), "rounds": 0}
+        # peer-bound spans/op trains ride the lossless wire codec exactly
+        # like driver-origin mp traffic (_RemoteSegment consults these);
+        # own-rank (_LocalSeg) and attached-shm paths stay raw -- no wire
+        self.codec_policy = CodecPolicy()
+        self.wire_stats = WireStats()
 
     # -- peer channels -----------------------------------------------------
     def _chan(self, rank: int) -> _PeerChannel:
@@ -491,7 +497,8 @@ class _WorkerTransport(Transport):
         if isinstance(seg, _ShmBuf):
             if any(o[0] in ("acc", "gacc", "cas") for o in ops):
                 return self._call(seg._rank,
-                                  ("opbatch", seg._win_id, _encode_ops(ops)))
+                                  ("opbatch", seg._win_id,
+                                   _codec_ops(self, _encode_ops(ops))))
             self._note(seg, "opbatch")
             return apply_op_batch(seg, ops)
         return seg.op_batch(ops, defer=defer)
@@ -586,7 +593,8 @@ class _WorkerTransport(Transport):
                 "remote": dict(self.stats["remote"]),
                 "targets": {int(k): v
                             for k, v in self.stats["targets"].items()},
-                "rounds": self.stats["rounds"]}
+                "rounds": self.stats["rounds"],
+                "wire": self.wire_stats.snapshot()}
 
     def shutdown(self) -> None:
         with self._chan_lock:

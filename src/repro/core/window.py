@@ -780,8 +780,44 @@ class Window:
         return self._pool
 
     def pool_stats(self) -> dict | None:
-        """Write-back pool counters (None until first nonblocking use)."""
-        return self._pool.stats() if self._pool is not None else None
+        """Write-back pool counters (None until first nonblocking use).
+
+        Alongside the pool's own counters, the snapshot reports both sides
+        of the compression ledger when they exist: ``"wire"`` (the
+        transport's logical-vs-wire byte counters -- encoding backends
+        only) and ``"device_sync"`` (device->host transfer accounting from
+        the fused diff+pack path).  Backpressure *charges* remain logical
+        bytes: the charge is taken before the flush runs, when the encoded
+        size is not yet known, and logical bytes are the safe upper bound.
+        """
+        if self._pool is None:
+            return None
+        st = self._pool.stats()
+        ws = self.comm.transport.wire_stats_snapshot()
+        if ws is not None:
+            st["wire"] = ws
+        dev = getattr(self, "_dev_sync_stats", None)
+        if dev is not None:
+            st["device_sync"] = dict(dev)
+        return st
+
+    def device_sync_stats(self) -> dict:
+        """Device->host transfer accounting for selective device sync.
+
+        ``syncs`` counts :meth:`sync_shards_from_device` calls;
+        ``payload_transfers`` counts device->host *data* fetches (the fused
+        diff+pack path does exactly ONE per shard set, however fragmented
+        the dirty set); ``bitmap_transfers`` the tiny per-set bitmap
+        fetches; ``span_transfers`` per-span slice fetches on the host
+        fallback path; ``payload_bytes``/``logical_bytes`` the packed bytes
+        fetched vs the changed bytes shipped.
+        """
+        st = getattr(self, "_dev_sync_stats", None)
+        if st is None:
+            st = self._dev_sync_stats = {
+                "syncs": 0, "payload_transfers": 0, "bitmap_transfers": 0,
+                "span_transfers": 0, "payload_bytes": 0, "logical_bytes": 0}
+        return st
 
     #: pending-list length that triggers a prune pass in _register --
     #: amortizes the scan (pruning on EVERY submit made registering a train
@@ -1574,14 +1610,18 @@ class Window:
                 f"page size {ps} is not a multiple of itemsize {itemsize}")
         return ps, ps // itemsize, -(-seg.size // ps)
 
-    def _device_flags(self, rank: int, cur, snap, *,
-                      impl: str | None, tile_elems: int | None) -> np.ndarray:
-        """Per-page-span changed flags from the Pallas dirty_diff kernel."""
-        from repro.kernels.ops import dirty_blocks  # lazy: jax-free core
+    @staticmethod
+    def _check_shard_pair(cur, snap) -> None:
         if np.shape(cur) != np.shape(snap):
             raise WindowError("cur/snap shape mismatch")
         if np.dtype(cur.dtype) != np.dtype(snap.dtype):
             raise WindowError("cur/snap dtype mismatch")
+
+    def _device_flags(self, rank: int, cur, snap, *,
+                      impl: str | None, tile_elems: int | None) -> np.ndarray:
+        """Per-page-span changed flags from the Pallas dirty_diff kernel."""
+        from repro.kernels.ops import dirty_blocks  # lazy: jax-free core
+        self._check_shard_pair(cur, snap)
         _, block_elems, _ = self._device_page_geometry(rank, cur.dtype)
         return np.asarray(dirty_blocks(cur, snap, block_elems=block_elems,
                                        tile_elems=tile_elems, impl=impl),
@@ -1629,14 +1669,19 @@ class Window:
         ``cur``/``snap`` are same-shape, same-dtype arrays (jax or numpy) of
         the window region starting at ``target_disp``: ``snap`` is the state
         the window already holds (last synced), ``cur`` the new state.  The
-        Pallas ``dirty_diff`` kernel reduces them to a per-page bitmap
-        on-device; only the changed element spans leave the device, and the
-        spans travel *with* the mask through the transport's masked
-        span-write primitive to the rank's page cache -- a single
-        control-channel round trip per target rank under a remote-owner
-        transport, the acting holder (with failover) on a replicated
-        window.  PCIe traffic, fabric traffic and storage writes all scale
-        with the *changed* bytes, not the window size.
+        fused Pallas ``diff_pack`` kernel reduces them to a per-page bitmap
+        *and* an on-device compacted buffer of the changed blocks in one
+        streaming pass; only the bitmap plus that packed buffer leave the
+        device (one contiguous payload transfer -- see
+        :meth:`device_sync_stats`), and the rebuilt spans travel *with* the
+        mask through the transport's masked span-write primitive to the
+        rank's page cache -- a single control-channel round trip per target
+        rank under a remote-owner transport (codec-encoded when the
+        transport's roofline policy accepts), the acting holder (with
+        failover) on a replicated window.  PCIe traffic, fabric traffic and
+        storage writes all scale with the *changed* bytes -- and on the
+        wire, with the *entropy* of the changed bytes -- not the window
+        size.
 
         Returns the flush's :class:`Request` (``wait()`` -> bytes flushed),
         or the bytes directly with ``blocking=True``.  With
@@ -1656,41 +1701,73 @@ class Window:
 
         ``shards`` is an iterable of ``(cur, snap, target_disp)`` regions
         of the rank's window (sharded device state: per-parameter slots,
-        per-device partitions).  Each shard's Pallas ``dirty_diff`` bitmap
-        is translated by its displacement and OR-merged into a single
-        window-block mask; all shards' changed spans are gathered and
-        shipped together with that mask in one masked span-write -- still
-        one round trip per target rank, however many shards contributed.
-        Shard regions must not overlap (the merged flush applies them in
-        list order).
+        per-device partitions).  Each shard's device bitmap is translated
+        by its displacement and OR-merged into a single window-block mask;
+        all shards' changed spans are gathered and shipped together with
+        that mask in one masked span-write -- still one round trip per
+        target rank, however many shards contributed.
+
+        Device->host movement depends on which kernel runs.  When the
+        fused ``diff_pack`` kernel is available (``impl`` resolves to
+        ``pallas`` or ``interpret``), each shard's changed blocks are
+        compacted *on device* (prefix-sum placement) and every shard's
+        compacted buffer crosses PCIe in ONE contiguous transfer per shard
+        set -- plus one tiny bitmap fetch -- regardless of how fragmented
+        the dirty set is.  The host fallback (``impl='ref'``, or a non-TPU
+        default) fetches one slice per changed span.  Both paths derive
+        their spans from the same ``changed_elem_spans`` geometry, so the
+        bytes shipped are identical; see :meth:`device_sync_stats` for the
+        transfer accounting.  Downstream, the spans may additionally ride
+        the transport's lossless wire codec (encoded origin-side, decoded
+        by the owner before applying -- page cache and disk layout never
+        see encoded bytes).
+
+        Shard regions must not overlap: the merged flush would apply them
+        in list order, silently making the outcome order-dependent, so
+        overlapping ``(target_disp, nelems)`` regions raise
+        :class:`WindowError` up front.
 
         Returns the flush's :class:`Request` (``wait()`` -> bytes flushed),
         or the bytes directly with ``blocking=True``.
         """
         from repro.kernels.dirty_diff import changed_elem_spans
+        from repro.kernels.ops import use_pallas
         shards = list(shards)
         if not shards:
             raise WindowError(
                 "sync_shards_from_device requires at least one shard")
-        spans: list[tuple[int, np.ndarray]] = []
-        mask: np.ndarray | None = None
-        for cur, snap, target_disp in shards:
-            flags = self._device_flags(rank, cur, snap, impl=impl,
-                                       tile_elems=tile_elems)
-            _, block_elems, _ = self._device_page_geometry(rank, cur.dtype)
-            itemsize = np.dtype(cur.dtype).itemsize
-            byte_off = target_disp * self.disp_unit
-            nelems = int(np.prod(np.shape(cur), dtype=np.int64))
-            m = self._flags_to_window_mask(rank, flags, cur.dtype, nelems,
-                                           target_disp)
-            mask = m if mask is None else mask | m
-            # only the changed element spans cross the device->host
-            # boundary (a jax slice transfers just that span)
-            cur_flat = cur.reshape(-1)
-            for lo_e, hi_e in changed_elem_spans(flags, block_elems, nelems):
-                chunk = np.ascontiguousarray(np.asarray(cur_flat[lo_e:hi_e]))
-                spans.append((byte_off + lo_e * itemsize,
-                              chunk.view(np.uint8).ravel()))
+        self._check_shard_overlap(shards)
+        resolved = impl or ("pallas" if use_pallas() else "ref")
+        stats = self.device_sync_stats()
+        stats["syncs"] += 1
+        if resolved in ("pallas", "interpret"):
+            spans, mask = self._packed_device_spans(rank, shards, resolved,
+                                                    tile_elems, stats)
+        else:
+            spans = []
+            mask = None
+            for cur, snap, target_disp in shards:
+                flags = self._device_flags(rank, cur, snap, impl=resolved,
+                                           tile_elems=tile_elems)
+                _, block_elems, _ = self._device_page_geometry(rank,
+                                                               cur.dtype)
+                itemsize = np.dtype(cur.dtype).itemsize
+                byte_off = target_disp * self.disp_unit
+                nelems = int(np.prod(np.shape(cur), dtype=np.int64))
+                m = self._flags_to_window_mask(rank, flags, cur.dtype,
+                                               nelems, target_disp)
+                mask = m if mask is None else mask | m
+                # host fallback: one device->host slice per changed span
+                # (same changed_elem_spans geometry as the packed path)
+                cur_flat = cur.reshape(-1)
+                for lo_e, hi_e in changed_elem_spans(flags, block_elems,
+                                                     nelems):
+                    chunk = np.ascontiguousarray(
+                        np.asarray(cur_flat[lo_e:hi_e]))
+                    spans.append((byte_off + lo_e * itemsize,
+                                  chunk.view(np.uint8).ravel()))
+                    stats["span_transfers"] += 1
+                    stats["logical_bytes"] += (hi_e - lo_e) * itemsize
         # normalize here with the tolerant device-diff rule (a device bitmap
         # may pad past the last page); sync/flush_async then see an
         # exact-length mask and keep their strict validation for everyone
@@ -1699,6 +1776,93 @@ class Window:
         if blocking:
             return self.sync(rank, mask=mask, spans=spans)
         return self.flush_async(rank, mask=mask, spans=spans)
+
+    def _check_shard_overlap(self, shards) -> None:
+        """Raise WindowError when two shards' byte regions intersect."""
+        regions = []
+        for i, (cur, _snap, target_disp) in enumerate(shards):
+            nbytes = (int(np.prod(np.shape(cur), dtype=np.int64))
+                      * np.dtype(cur.dtype).itemsize)
+            lo = int(target_disp) * self.disp_unit
+            regions.append((lo, lo + nbytes, i))
+        regions.sort()
+        for (alo, ahi, ai), (blo, bhi, bi) in zip(regions, regions[1:]):
+            if blo < ahi:
+                raise WindowError(
+                    f"shard regions overlap: shard {bi} (bytes "
+                    f"[{blo}, {bhi})) intersects shard {ai} (bytes "
+                    f"[{alo}, {ahi})); overlapping shards would be applied "
+                    "in list order")
+
+    def _packed_device_spans(self, rank: int, shards, impl: str,
+                             tile_elems: int | None, stats: dict):
+        """Fused-kernel span gathering: ONE payload transfer per shard set.
+
+        Runs ``dirty_pack`` per shard (bitmap + on-device compacted dirty
+        blocks), fetches all shards' bitmaps in one transfer and all
+        shards' compacted blocks (byte views, concatenated on device) in
+        one more, then rebuilds the span list host-side from the shared
+        ``changed_elem_spans`` geometry (``packed_run_layout``).
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.dirty_diff import _bit_view
+        from repro.kernels.ops import dirty_pack
+        from repro.kernels.pack_diff import packed_run_layout
+        per = []
+        for cur, snap, target_disp in shards:
+            self._check_shard_pair(cur, snap)
+            _, block_elems, _ = self._device_page_geometry(rank, cur.dtype)
+            flags_d, packed_d, _count_d = dirty_pack(
+                cur, snap, block_elems=block_elems, tile_elems=tile_elems,
+                impl=impl)
+            per.append((flags_d, packed_d, cur, target_disp, block_elems))
+        # one bitmap fetch covers every shard (int32 flags, concatenated)
+        flags_host = np.asarray(jnp.concatenate([p[0] for p in per])
+                                if len(per) > 1 else per[0][0])
+        stats["bitmap_transfers"] += 1
+        parts = []
+        split = 0
+        shard_flags = []
+        for flags_d, packed_d, cur, _disp, _be in per:
+            f = flags_host[split:split + flags_d.shape[0]]
+            split += flags_d.shape[0]
+            shard_flags.append(f)
+            k = int(f.sum())
+            if k:
+                rows = packed_d[:k]
+                u8 = (rows if rows.dtype == jnp.uint8
+                      else jax.lax.bitcast_convert_type(
+                          _bit_view(rows), jnp.uint8))
+                parts.append(u8.reshape(-1))
+        spans: list[tuple[int, np.ndarray]] = []
+        mask: np.ndarray | None = None
+        if parts:
+            payload = np.asarray(parts[0] if len(parts) == 1
+                                 else jnp.concatenate(parts))
+            payload = payload.view(np.uint8)
+            stats["payload_transfers"] += 1
+            stats["payload_bytes"] += payload.nbytes
+        else:
+            payload = np.zeros(0, np.uint8)
+        base = 0
+        for f, (flags_d, packed_d, cur, target_disp, block_elems) in zip(
+                shard_flags, per):
+            itemsize = np.dtype(cur.dtype).itemsize
+            byte_off = target_disp * self.disp_unit
+            nelems = int(np.prod(np.shape(cur), dtype=np.int64))
+            m = self._flags_to_window_mask(rank, f.astype(bool), cur.dtype,
+                                           nelems, target_disp)
+            mask = m if mask is None else mask | m
+            for lo_e, hi_e, poff in packed_run_layout(f, block_elems,
+                                                      nelems):
+                b0 = base + poff * itemsize
+                spans.append((byte_off + lo_e * itemsize,
+                              payload[b0:b0 + (hi_e - lo_e) * itemsize]))
+                stats["logical_bytes"] += (hi_e - lo_e) * itemsize
+            base += int(f.sum()) * block_elems * itemsize
+        return spans, mask
 
     # -- resilience: live rebuild -------------------------------------------
     def rebuild_rank(self, rank: int, *, mark_alive: bool = True) -> int:

@@ -16,11 +16,17 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.dirty_diff import _bit_view, dirty_diff_tpu
 from repro.kernels.flash_attention import flash_attention_tpu
+from repro.kernels.pack_diff import diff_pack_ref, diff_pack_tpu
 from repro.kernels.rg_lru import rg_lru_tpu
 from repro.kernels.ssd_scan import ssd_scan_tpu
 
 __all__ = ["flash_attention", "ssd_scan", "rg_lru_scan", "dirty_blocks",
-           "use_pallas"]
+           "dirty_pack", "use_pallas", "PACK_VMEM_LIMIT"]
+
+# The fused pack kernel keeps its compacted output resident in VMEM for the
+# whole pass; compiled (non-interpret) dispatch falls back to the host
+# reference above this many packed-buffer bytes.
+PACK_VMEM_LIMIT = 8 << 20
 
 
 def use_pallas() -> bool:
@@ -106,3 +112,33 @@ def dirty_blocks(cur, snap, *, block_elems=1024, tile_elems=None,
         return ref.dirty_diff_ref(c, s)
     return dirty_diff_tpu(c, s, tile_elems=tile_elems,
                           interpret=(impl == "interpret"))
+
+
+def dirty_pack(cur, snap, *, block_elems=1024, tile_elems=None,
+               impl: str | None = None):
+    """Fused diff+pack: ``(flags (nb,) int32, packed (nb, block_elems),
+    count (1,) int32)``.
+
+    ``packed[:count]`` holds the changed blocks in block order (bit-view
+    dtype), so one device->host fetch of those rows moves every changed
+    byte; ``repro.kernels.pack_diff.packed_run_layout`` maps the bitmap to
+    span geometry shared with the non-fused path.  Layout normalization
+    (bit view, flatten, zero-pad to a block multiple) matches
+    :func:`dirty_blocks` exactly, so the two bitmaps always agree.
+    """
+    impl = impl or ("pallas" if use_pallas() else "ref")
+    c = _bit_view(jnp.asarray(cur)).reshape(-1)
+    s = _bit_view(jnp.asarray(snap)).reshape(-1)
+    pad = (-c.shape[0]) % block_elems
+    if pad:
+        c = jnp.pad(c, (0, pad))
+        s = jnp.pad(s, (0, pad))
+    c = c.reshape(-1, block_elems)
+    s = s.reshape(-1, block_elems)
+    if impl == "ref" or (impl == "pallas"
+                         and c.size * c.dtype.itemsize > PACK_VMEM_LIMIT):
+        return diff_pack_ref(c, s)
+    flags, packed, count = diff_pack_tpu(c, s, tile_elems=tile_elems,
+                                         interpret=(impl == "interpret"))
+    # crop tile padding so a run of packed rows is one contiguous byte blob
+    return flags, packed[:, :block_elems], count

@@ -1,0 +1,135 @@
+"""Fused Pallas diff+pack kernel: changed bitmap + compacted dirty blocks.
+
+``dirty_diff`` alone leaves the expensive half of selective device sync on
+the host: once the bitmap is known, each changed span still crosses PCIe as
+its own device->host slice (`np.asarray` per span).  This kernel fuses the
+two steps into one streaming pass over (current, snapshot): it emits the
+per-block changed flags *and* a compacted buffer whose first ``count`` rows
+are exactly the changed blocks in block order (prefix-sum placement), so
+the changed bytes cross PCIe as ONE contiguous transfer regardless of how
+fragmented the dirty set is.
+
+Placement trick: the TPU grid is sequential, so the kernel keeps a running
+``count`` of committed dirty blocks and streams every block's tiles
+*optimistically* into packed row ``count``.  Only after the block's last
+tile, when the accumulated flag is known, is the row claimed
+(``count += flag``); a clean block's rows are simply overwritten by the
+next dirty block.  Rows at index >= final count are garbage and must not be
+read.  The packed output is resident in VMEM for the whole pass, which
+bounds the packable tensor size (see ``PACK_VMEM_LIMIT`` in ops.py); the
+dispatcher falls back to the host reference above it.
+
+Bit-pattern semantics match ``dirty_diff``: callers pass bit-views
+(`_bit_view`), so unchanged NaN blocks stay clean and the packed rows hold
+the exact bit patterns of the current tensor.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.dirty_diff import DEFAULT_TILE_ELEMS, changed_elem_spans
+
+__all__ = ["diff_pack_tpu", "diff_pack_ref", "packed_run_layout"]
+
+
+def packed_run_layout(flags, block_elems: int,
+                      nelems: int) -> list[tuple[int, int, int]]:
+    """Bitmap -> ``[(lo_elem, hi_elem, packed_elem_off)]`` for span rebuild.
+
+    Packing preserves block order, so a coalesced dirty run ``[b0, b1)``
+    occupies packed rows ``[pos(b0), pos(b0) + (b1 - b0))`` contiguously,
+    where ``pos`` is the exclusive prefix count of dirty blocks.  The
+    ``(lo_elem, hi_elem)`` geometry is exactly
+    :func:`~repro.kernels.dirty_diff.changed_elem_spans` -- the packed path
+    and the host fallback share one clipping rule by construction.
+    """
+    f = np.asarray(flags, np.int64).ravel()
+    excl = np.concatenate(([0], np.cumsum(f)[:-1])) if f.size else f
+    out = []
+    for lo, hi in changed_elem_spans(f, block_elems, nelems):
+        out.append((lo, hi, int(excl[lo // block_elems]) * block_elems))
+    return out
+
+
+def _kernel(tile_elems, cur_ref, snap_ref, flag_ref, packed_ref, count_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_count():
+        count_ref[0] = 0
+
+    @pl.when(j == 0)
+    def _init_flag():
+        flag_ref[0] = 0
+
+    flag_ref[0] |= jnp.any(cur_ref[0] != snap_ref[0]).astype(jnp.int32)
+    # Optimistic placement: stream this tile into the next free packed row;
+    # the row is only claimed below once the whole block is known dirty.
+    packed_ref[pl.ds(count_ref[0], 1),
+               pl.ds(j * tile_elems, tile_elems)] = cur_ref[...]
+
+    @pl.when(j == nt - 1)
+    def _commit():
+        count_ref[0] += flag_ref[0]
+
+
+def diff_pack_tpu(cur: jax.Array, snap: jax.Array, *,
+                  tile_elems: int | None = None, interpret: bool = False):
+    """cur, snap: (nblocks, block_elems) bit-view uints, same shape/dtype.
+
+    Returns ``(flags (nb,) int32, packed (nb, be_padded) cur.dtype,
+    count (1,) int32)``.  ``packed[:count]`` are the dirty blocks in block
+    order; rows past ``count`` are garbage.  ``be_padded`` rounds
+    ``block_elems`` up to the tile multiple (zero padding, like
+    ``dirty_diff_tpu``, so equal padding never marks a block dirty).
+    """
+    assert cur.shape == snap.shape and cur.dtype == snap.dtype
+    nb, be = cur.shape
+    if tile_elems is None:
+        tile_elems = DEFAULT_TILE_ELEMS
+    tile_elems = max(1, min(int(tile_elems), be))
+    pad = (-be) % tile_elems
+    if pad:
+        cur = jnp.pad(cur, ((0, 0), (0, pad)))
+        snap = jnp.pad(snap, ((0, 0), (0, pad)))
+    bep = be + pad
+    ntiles = bep // tile_elems
+    return pl.pallas_call(
+        functools.partial(_kernel, tile_elems),
+        grid=(nb, ntiles),
+        in_specs=[
+            pl.BlockSpec((1, tile_elems), lambda i, j: (i, j)),
+            pl.BlockSpec((1, tile_elems), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((nb, bep), lambda i, j: (0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb,), jnp.int32),
+            jax.ShapeDtypeStruct((nb, bep), cur.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cur, snap)
+
+
+def diff_pack_ref(cur: jax.Array, snap: jax.Array):
+    """Eager host reference with identical outputs (padding-free)."""
+    from repro.kernels import ref
+    flags = ref.dirty_diff_ref(cur, snap)
+    f = np.asarray(flags).astype(bool)
+    k = int(f.sum())
+    packed = jnp.zeros_like(cur)
+    if k:
+        packed = packed.at[:k].set(jnp.asarray(np.asarray(cur)[f]))
+    return flags, packed, jnp.asarray([k], jnp.int32)

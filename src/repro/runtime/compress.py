@@ -1,4 +1,15 @@
-"""Gradient compression: int8 quantization with error feedback.
+"""Compression entry points: lossy gradient quantization + lossless wire codec.
+
+Two distinct compression families live behind this module:
+
+* **Lossy** int8 gradient quantization with error feedback (below) for the
+  cross-pod DP reduction leg.
+* **Lossless** span/op-train wire codec (re-exported from
+  ``repro.core.codec``) used by the remote transport backends to cut
+  control-channel bytes: zero-run suppression, byte RLE, and byte-shuffle
+  + RLE, selected per message by a roofline-driven ``CodecPolicy``.  See
+  ``repro/core/codec.py`` for the wire format and threshold heuristic.
+
 
 Used for the *cross-pod* leg of the hierarchical DP reduction: inside a pod
 gradients reduce-scatter in bf16 over ICI; across pods (DCN, the scarce
@@ -19,8 +30,17 @@ from typing import Any, Mapping
 import jax
 import jax.numpy as jnp
 
+from repro.core.codec import (CODEC_NAMES, CODEC_RAW, CODEC_RLE,
+                              CODEC_SHUF_RLE, CODEC_ZRLE, CodecPolicy,
+                              decode_bytes, decode_ops, decode_spans,
+                              encode_bytes, encode_ops, encode_spans)
+
 __all__ = ["quantize_int8", "dequantize_int8", "init_error_feedback",
-           "compress_with_feedback"]
+           "compress_with_feedback",
+           # lossless wire codec (shared entry points; impl in core/codec.py)
+           "CODEC_NAMES", "CODEC_RAW", "CODEC_RLE", "CODEC_SHUF_RLE",
+           "CODEC_ZRLE", "CodecPolicy", "encode_bytes", "decode_bytes",
+           "encode_spans", "decode_spans", "encode_ops", "decode_ops"]
 
 
 def quantize_int8(x: jax.Array, axis=None):

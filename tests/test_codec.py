@@ -1,0 +1,212 @@
+"""Span-wire codec: bit-exact lossless property tests + policy behavior.
+
+The codec sits on the control channel between a worker and a window
+owner, so any corruption silently lands on disk.  Hypothesis drives the
+encoders with adversarial payloads -- zero runs (the selective-sync sweet
+spot), NaN-bearing floats (bit patterns must survive, value compare would
+not), and incompressible noise (must fall back to the RAW header, bounded
+overhead) -- and every blob must decode to the identical byte string.
+"""
+
+import struct
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.codec import (
+    CODEC_NAMES,
+    CODEC_RAW,
+    CODEC_RLE,
+    CODEC_SHUF_RLE,
+    CODEC_ZRLE,
+    CodecPolicy,
+    WireStats,
+    decode_bytes,
+    decode_ops,
+    decode_spans,
+    encode_bytes,
+    encode_ops,
+    encode_spans,
+    is_encoded_ops,
+    is_encoded_spans,
+)
+
+
+def _force_policy():
+    p = CodecPolicy(min_bytes=1)
+    p.mode = "force"
+    return p
+
+
+# ------------------------------------------------------ encode/decode
+
+@given(st.binary(min_size=0, max_size=4096))
+@settings(max_examples=200, deadline=None)
+def test_roundtrip_arbitrary_bytes(data):
+    """Auto-selected codec is lossless on arbitrary byte strings."""
+    blob = encode_bytes(data)
+    assert decode_bytes(blob).tobytes() == data
+    assert blob[0] in CODEC_NAMES
+
+
+@given(st.binary(min_size=0, max_size=2048),
+       st.sampled_from([CODEC_RAW, CODEC_ZRLE, CODEC_RLE, CODEC_SHUF_RLE]))
+@settings(max_examples=200, deadline=None)
+def test_roundtrip_every_forced_codec(data, codec):
+    """Every codec, forced, is individually lossless on any input."""
+    blob = encode_bytes(data, codec=codec)
+    assert blob[0] == codec
+    assert decode_bytes(blob).tobytes() == data
+
+
+@given(st.lists(st.tuples(st.integers(0, 60), st.integers(0, 255),
+                          st.integers(1, 300)), min_size=0, max_size=20))
+@settings(max_examples=100, deadline=None)
+def test_roundtrip_zero_runs(runs):
+    """Sparse dirty patterns (mostly-zero pages) round trip and shrink."""
+    buf = np.zeros(16384, np.uint8)
+    for start, val, ln in runs:
+        lo = start * 256
+        buf[lo:lo + ln] = val
+    blob = encode_bytes(buf)
+    assert decode_bytes(blob).tobytes() == buf.tobytes()
+    if not buf.any():
+        assert blob[0] != CODEC_RAW and len(blob) < 64
+
+
+@given(st.lists(st.floats(allow_nan=True, allow_infinity=True,
+                          width=32), min_size=1, max_size=500))
+@settings(max_examples=100, deadline=None)
+def test_roundtrip_float_bit_patterns(vals):
+    """Float payloads -- NaN and inf included -- survive bit-exactly."""
+    buf = np.asarray(vals, np.float32).tobytes()
+    for codec in (None, CODEC_ZRLE, CODEC_RLE, CODEC_SHUF_RLE):
+        assert decode_bytes(encode_bytes(buf, codec=codec)).tobytes() == buf
+
+
+def test_zero_run_page_shrinks_deterministic():
+    """Dirty page with a few hot cachelines: zero runs suppressed, exact.
+
+    (Deterministic twin of test_roundtrip_zero_runs for environments
+    without hypothesis.)
+    """
+    buf = np.zeros(8192, np.uint8)
+    buf[128:160] = 0xAB
+    buf[4096:4100] = np.arange(4, dtype=np.uint8)
+    blob = encode_bytes(buf)
+    assert blob[0] != CODEC_RAW and len(blob) < 1024
+    assert decode_bytes(blob).tobytes() == buf.tobytes()
+
+
+def test_nan_payload_compresses_via_shuffle():
+    """A constant-NaN page is highly compressible after byte shuffle."""
+    buf = np.full(4096, np.nan, np.float32).tobytes()
+    blob = encode_bytes(buf)
+    assert decode_bytes(blob).tobytes() == buf
+    assert len(blob) < len(buf) // 8
+
+
+def test_incompressible_noise_takes_raw_fallback():
+    """Noise must ship as CODEC_RAW with only the 9-byte header on top."""
+    rng = np.random.default_rng(0)
+    buf = rng.integers(0, 256, 65536, np.uint8).tobytes()
+    blob = encode_bytes(buf)
+    assert blob[0] == CODEC_RAW
+    assert len(blob) == len(buf) + 9
+    assert decode_bytes(blob).tobytes() == buf
+
+
+def test_long_run_split_exceeds_u16():
+    """Runs longer than 65535 split into multiple wire runs, losslessly."""
+    buf = (b"\x07" * 200_000) + b"\x01\x02" + (b"\x00" * 70_000)
+    blob = encode_bytes(buf, codec=CODEC_RLE)
+    assert decode_bytes(blob).tobytes() == buf
+
+
+def test_raw_header_roundtrip():
+    """The RAW header is exactly ``<B cid><Q len>`` and round trips."""
+    buf = b"abc123"
+    blob = encode_bytes(buf, codec=CODEC_RAW)
+    cid, n = struct.unpack_from("<BQ", blob)
+    assert cid == CODEC_RAW and n == len(buf) and blob[9:] == buf
+    assert decode_bytes(blob).tobytes() == buf
+
+
+# ------------------------------------------------- span/op wire tuples
+
+@given(st.lists(st.tuples(st.integers(0, 1 << 30),
+                          st.binary(min_size=0, max_size=512)),
+                min_size=0, max_size=8))
+@settings(max_examples=100, deadline=None)
+def test_spans_wire_tuple_roundtrip(spans):
+    """encode_spans under a forcing policy reproduces every (off, bytes)."""
+    enc, logical, wire = encode_spans(spans, _force_policy())
+    assert logical == sum(len(d) for _, d in spans)
+    assert enc is not None and is_encoded_spans(enc) and wire == len(enc[3])
+    got = decode_spans(enc)
+    assert [(o, bytes(d)) for o, d in got] == [(o, d) for o, d in spans]
+
+
+def test_spans_policy_decline_ships_raw():
+    """A declining policy returns None: the caller ships the raw list,
+    and the raw list never looks like an encoded tuple."""
+    spans = [(0, b"x" * 100)]
+    enc, logical, wire = encode_spans(spans, None)
+    assert enc is None and logical == wire == 100
+    assert not is_encoded_spans(spans)
+    off_policy = CodecPolicy(min_bytes=1)
+    off_policy.mode = "off"
+    assert encode_spans(spans, off_policy)[0] is None
+
+
+@given(st.lists(st.one_of(
+    st.tuples(st.just("put"), st.integers(0, 1 << 20),
+              st.binary(min_size=0, max_size=256)),
+    st.tuples(st.just("get"), st.integers(0, 1 << 20), st.integers(1, 64)),
+    st.tuples(st.just("cas"), st.integers(0, 1 << 20), st.integers(0, 9),
+              st.integers(0, 9))), min_size=0, max_size=10))
+@settings(max_examples=100, deadline=None)
+def test_ops_wire_tuple_roundtrip(ops):
+    """Op trains: put bytes compress, other ops pass through verbatim."""
+    enc, logical, wire = encode_ops(ops, _force_policy())
+    assert logical == sum(len(op[2]) for op in ops if op[0] == "put")
+    if not any(op[0] == "put" for op in ops):
+        assert enc is None  # nothing to compress -> raw train
+        return
+    assert enc is not None and is_encoded_ops(enc)
+    got = decode_ops(enc)
+    assert [(*op[:2], bytes(op[2])) if op[0] == "put" else op for op in got] \
+        == list(ops)
+
+
+# ------------------------------------------------------------- policy
+
+def test_policy_roofline_threshold():
+    """Encode iff predicted saving beats the wire/encode speed ratio."""
+    p = CodecPolicy(min_bytes=16, wire_bps=1e9, probe_every=10 ** 9)
+    p.mode = "auto"
+    p._encode_bps = 4e9
+    p._save_ratio = 0.5      # 0.5 > 1/4 -> encode
+    assert p.should_encode(1024)
+    p._save_ratio = 0.2      # 0.2 < 1/4 -> raw
+    assert not p.should_encode(1024)
+    assert not p.should_encode(8)  # below min_bytes always raw
+
+
+def test_policy_probe_retries_incompressible():
+    """Every probe_every-th send re-tests even a hopeless save ratio."""
+    p = CodecPolicy(min_bytes=1, probe_every=5)
+    p.mode = "auto"
+    p._save_ratio = 0.0
+    decisions = [p.should_encode(4096) for _ in range(10)]
+    assert decisions.count(True) == 2  # sends 5 and 10
+
+
+def test_wire_stats_snapshot_totals():
+    ws = WireStats()
+    ws.add("spans", 1000, 100, True)
+    ws.add("ops", 500, 500, False)
+    s = ws.snapshot()
+    assert s["logical_bytes"] == 1500 and s["wire_bytes"] == 600
+    assert s["spans_encoded_msgs"] == 1 and s["ops_encoded_msgs"] == 0

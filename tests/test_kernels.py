@@ -144,6 +144,88 @@ def test_dirty_diff_tiled_bit_exact_nan(impl):
     assert flags.tolist() == [0, 0, 1]
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
+@pytest.mark.parametrize("block_elems,n", [
+    (128, 1024),    # aligned
+    (96, 960),      # odd block size
+    (100, 930),     # odd block size + ragged tail (last partial block)
+])
+@pytest.mark.parametrize("pattern", ["sparse", "all_clean", "all_dirty"])
+def test_dirty_pack_matrix_matches_host_compare_on_write(
+        tmp_path, dtype, block_elems, n, pattern):
+    """The fused diff+pack kernel (interpret mode) must agree with the host
+    compare-on-write tracker on the bitmap AND emit the changed blocks'
+    exact bytes, compacted in block order, in ``packed[:count]``."""
+    from repro.core.storage import CachedBacking
+
+    key = jax.random.PRNGKey(n * 3 + block_elems)
+    if dtype == jnp.int8:
+        snap = jax.random.randint(key, (n,), -100, 100, jnp.int32).astype(dtype)
+    else:
+        snap = (jax.random.normal(key, (n,), jnp.float32) * 4).astype(dtype)
+    nblocks = -(-n // block_elems)
+    if pattern == "sparse":
+        dirty = sorted({0, nblocks // 2, nblocks - 1})
+    elif pattern == "all_dirty":
+        dirty = list(range(nblocks))
+    else:
+        dirty = []
+    cur = snap
+    for b in dirty:
+        idx = min(b * block_elems + (b % block_elems), n - 1)
+        cur = cur.at[idx].add(jnp.asarray(1, dtype))
+    flags, packed, count = ops.dirty_pack(cur, snap, block_elems=block_elems,
+                                          tile_elems=64, impl="interpret")
+    want = np.zeros(nblocks, dtype=bool)
+    want[dirty] = True
+    assert (np.asarray(flags, dtype=bool) == want).all()
+    assert int(np.asarray(count)[0]) == len(dirty)
+
+    # packed rows: changed blocks' bytes in block order (tail zero-padded,
+    # exactly like the dirty_blocks layout normalization)
+    itemsize = np.dtype(dtype).itemsize
+    page = block_elems * itemsize
+    cur_bytes = np.asarray(cur).tobytes()
+    cur_rows = np.zeros((nblocks, page), np.uint8)
+    cur_rows.reshape(-1)[:len(cur_bytes)] = np.frombuffer(cur_bytes, np.uint8)
+    got_rows = np.asarray(packed)[:len(dirty)]
+    got_rows = got_rows.view(np.uint8).reshape(len(dirty), page)
+    assert (got_rows == cur_rows[want]).all(), \
+        "packed rows != changed blocks' bytes"
+
+    # host path: page cache with compare-on-write must see the same bitmap
+    backing = CachedBacking(str(tmp_path / "p.bin"), n * itemsize,
+                            page_size=page, cache_bytes=nblocks * page,
+                            compare_on_write=True)
+    snap_b = np.frombuffer(np.asarray(snap).tobytes(), np.uint8)
+    backing.write(0, snap_b)
+    backing.sync()
+    backing.write(0, np.frombuffer(cur_bytes, np.uint8))
+    host_bits = backing.tracker._bits.copy()
+    backing.close(unlink=True)
+    assert (host_bits == np.asarray(flags, dtype=bool)).all(), \
+        "device bitmap != host compare-on-write bitmap"
+
+
+@pytest.mark.parametrize("impl", ["interpret", "ref"])
+def test_dirty_pack_nan_and_layout(impl):
+    """Bit-pattern compare keeps an unchanged NaN block clean, and
+    packed_run_layout maps the bitmap to (lo, hi, packed_off) spans whose
+    packed offsets are an exclusive prefix sum over dirty blocks."""
+    from repro.kernels.pack_diff import packed_run_layout
+    cur = jnp.zeros((4, 500), jnp.float32).at[1, 499].set(jnp.nan)
+    snap = cur.at[2, 0].add(1.0).at[3, 10].add(2.0)
+    flags, packed, count = ops.dirty_pack(cur.reshape(-1), snap.reshape(-1),
+                                          block_elems=500, tile_elems=128,
+                                          impl=impl)
+    assert flags.tolist() == [0, 0, 1, 1] and int(np.asarray(count)[0]) == 2
+    runs = packed_run_layout(np.asarray(flags, bool), 500, 2000)
+    assert runs == [(1000, 2000, 0)]  # adjacent dirty blocks coalesce
+    rows = np.asarray(packed)[:2].view(np.uint8).reshape(2, -1)[:, :2000]
+    want = np.asarray(cur, np.float32)[2:4].reshape(2, -1).view(np.uint8)
+    assert (rows == want).all()
+
+
 def test_dirty_diff_feeds_tracker():
     """Device-side diff plugs into the host DirtyTracker bitmap."""
     from repro.core.storage import DirtyTracker

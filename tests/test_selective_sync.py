@@ -244,6 +244,68 @@ def test_sync_shards_validation(tmp_path):
     win.free()
 
 
+def test_sync_shards_overlap_raises(tmp_path):
+    """Overlapping (target_disp, nelems) shard regions are rejected: they
+    would be applied in list order, silently losing earlier writes."""
+    from repro.core import WindowError
+    comm = Communicator(1)
+    win = Window.allocate(comm, PAGES * PAGE, info=storage_info(tmp_path))
+    a = np.zeros(2 * PAGE // 4, np.float32)        # bytes [0, 2*PAGE)
+    b = np.ones(PAGE // 4, np.float32)             # bytes [PAGE, 2*PAGE)
+    with pytest.raises(WindowError, match="overlap"):
+        win.sync_shards_from_device(
+            0, [(a, a.copy(), 0), (b, b.copy(), PAGE)], blocking=True)
+    # adjacent (touching, not overlapping) regions stay legal
+    win.sync_shards_from_device(
+        0, [(a, a.copy(), 0), (b, b.copy(), 2 * PAGE)], blocking=True)
+    win.free()
+
+
+def test_sync_shards_packed_single_transfer(tmp_path):
+    """The fused diff+pack path moves all changed bytes of a shard set in
+    ONE device->host payload transfer (plus one tiny bitmap fetch), and
+    the on-disk result is byte-identical to the per-span fallback."""
+    jnp = pytest.importorskip("jax.numpy")
+    comm = Communicator(1)
+    win = Window.allocate(comm, PAGES * PAGE, info=storage_info(tmp_path))
+    a_snap = np.zeros(4 * PAGE // 4, np.float32)   # pages 0-3
+    b_snap = np.ones(4 * PAGE // 4, np.float32)    # pages 8-11
+    win.put(a_snap, 0, 0)
+    win.put(b_snap, 0, 8 * PAGE)
+    win.sync(0)
+    a_cur = a_snap.copy()
+    a_cur[1] = 5.0                                 # page 0
+    a_cur[3 * PAGE // 4 + 7] = 6.0                 # page 3
+    b_cur = b_snap.copy()
+    b_cur[PAGE // 4] = 7.0                         # page 9
+    shards = [(jnp.asarray(a_cur), jnp.asarray(a_snap), 0),
+              (jnp.asarray(b_cur), jnp.asarray(b_snap), 8 * PAGE)]
+    win.sync_shards_from_device(0, shards, impl="interpret", blocking=True)
+    st = win.device_sync_stats()
+    assert st["syncs"] == 1
+    assert st["payload_transfers"] == 1, st       # ONE fetch per shard set
+    assert st["bitmap_transfers"] == 1
+    assert st["span_transfers"] == 0              # no per-span slicing
+    assert st["payload_bytes"] == 3 * PAGE        # exactly the dirty pages
+    disk = np.fromfile(tmp_path / "w.bin", np.float32)
+    assert (disk[: a_cur.size] == a_cur).all()
+    assert (disk[8 * PAGE // 4: 12 * PAGE // 4] == b_cur).all()
+
+    # host fallback over the same change set: same bytes, per-span fetches
+    win2 = Window.allocate(comm, PAGES * PAGE,
+                           info=storage_info(tmp_path, "w2.bin"))
+    win2.put(a_snap, 0, 0)
+    win2.put(b_snap, 0, 8 * PAGE)
+    win2.sync(0)
+    win2.sync_shards_from_device(0, shards, impl="ref", blocking=True)
+    st2 = win2.device_sync_stats()
+    assert st2["payload_transfers"] == 0 and st2["span_transfers"] == 3
+    disk2 = np.fromfile(tmp_path / "w2.bin", np.float32)
+    assert (disk2 == disk).all()                  # byte-identical layout
+    win2.free()
+    win.free()
+
+
 def test_offload_opt_sync_masters_from_device(tmp_path):
     """Device-resident master weights persist through the merged shard
     mask: only the changed pages of the changed tensors flush."""
@@ -691,4 +753,37 @@ def test_crash_replay_mp_worker_death_never_commits_manifest(tmp_path):
     assert r is not None and not r.fell_back
     assert r.step == 5 and (r.tree["w"] == w1).all()
     cm2.close()
+    comm.close()
+
+
+@pytest.mark.skipif(not _HAVE_SHM,
+                    reason="multiprocessing.shared_memory unavailable")
+def test_mp_codec_halves_wire_bytes_and_disk_is_exact(tmp_path):
+    """Under the mp transport a compressible masked-span flush crosses the
+    control channel encoded: wire bytes <= 50% of logical bytes, the
+    owner decodes before applying, and the on-disk layout is byte-for-byte
+    what the raw path would have written."""
+    comm = Communicator(1, transport="mp")
+    win = Window.allocate(comm, PAGES * PAGE, info=storage_info(tmp_path))
+    data = np.zeros(4 * PAGE, np.uint8)            # pages 0-3, mostly zero
+    data[::512] = 7
+    win.sync(0, mask=_mask(0, 1, 2, 3),
+             spans=[(0, data)])                    # staged-span flush path
+    ws = comm.transport.wire_stats_snapshot()
+    assert ws is not None and ws["spans_encoded_msgs"] >= 1
+    assert ws["spans_logical_bytes"] >= 4 * PAGE
+    assert ws["spans_wire_bytes"] * 2 <= ws["spans_logical_bytes"], ws
+
+    # aggregated op trains take the same codec on their put payloads
+    for i in range(16):
+        win.rput(np.zeros(1024, np.uint8), 0, 8 * PAGE + i * 1024)
+    win.flush(0)
+    ws2 = comm.transport.wire_stats_snapshot()
+    assert ws2["ops_encoded_msgs"] >= 1
+    assert ws2["ops_wire_bytes"] * 2 <= ws2["ops_logical_bytes"], ws2
+
+    disk = np.fromfile(tmp_path / "w.bin", np.uint8)
+    assert (disk[: data.size] == data).all()       # decoded before applied
+    assert not disk[data.size:].any()
+    win.free()
     comm.close()
