@@ -130,7 +130,7 @@ def _run_pipelines(bench: Bench, comm: Communicator) -> float:
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--transport", choices=("inproc", "mp"), default=None,
+    ap.add_argument("--transport", choices=("inproc", "mp", "tcp"), default=None,
                     help="window transport (default: $REPRO_TRANSPORT or inproc)")
     ap.add_argument("--min-speedup", type=float, default=0.0,
                     help="fail (exit 1) if async/blocking falls below this "

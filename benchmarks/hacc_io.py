@@ -110,7 +110,7 @@ def run(bench: Bench, transport: str | None = None,
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--transport", choices=("inproc", "mp"), default=None,
+    ap.add_argument("--transport", choices=("inproc", "mp", "tcp"), default=None,
                     help="window transport (default: $REPRO_TRANSPORT or "
                          "inproc)")
     ap.add_argument("--ranks", type=int, default=None, choices=RANK_SWEEP,

@@ -47,7 +47,7 @@ TRANSPORT_AWARE = ("imb_rma", "hacc_io", "async_win", "selective_sync")
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=SUITES, default=None)
-    ap.add_argument("--transport", choices=("inproc", "mp"), default=None,
+    ap.add_argument("--transport", choices=("inproc", "mp", "tcp"), default=None,
                     help="transport for the transport-aware suites "
                          f"{TRANSPORT_AWARE} (default: $REPRO_TRANSPORT "
                          "or inproc)")

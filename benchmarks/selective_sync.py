@@ -282,7 +282,7 @@ def _fused_pack_suite(bench: Bench, comm: Communicator, d: str,
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--transport", choices=("inproc", "mp"), default=None,
+    ap.add_argument("--transport", choices=("inproc", "mp", "tcp"), default=None,
                     help="window transport (default: $REPRO_TRANSPORT or "
                          "inproc)")
     ap.add_argument("--codec-only", action="store_true",

@@ -33,7 +33,7 @@ VICTIM = 1
 def main() -> None:
     tmp = tempfile.mkdtemp(prefix="repro_failover_")
     comm = Communicator.from_env(4)
-    real_kill = comm.transport.kind == "mp"
+    real_kill = comm.transport.kind in ("mp", "tcp")
     print(f"transport={comm.transport.kind} ranks={comm.size} "
           f"(kill={'SIGKILL' if real_kill else 'simulated'})")
 

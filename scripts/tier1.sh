@@ -13,6 +13,11 @@
 # start method (safe under threaded parents), bounded by a timeout, and
 # skipped gracefully where multiprocessing.shared_memory is unavailable.
 #
+# A tcp smoke lane runs the inter-host transport on loopback (2x: the
+# replicated SIGKILL-failover example and the enforced aggregated
+# small-op speedup gate on the tcp wire); skipped gracefully where
+# sockets are restricted.
+#
 # An SPMD smoke lane then runs real training with every rank as its own
 # origin (the repro.launch.train --spmd path): one rank is SIGKILLed
 # mid-run and must resume exactly from its own checkpoint after respawn,
@@ -89,6 +94,34 @@ else
     # replica-holding worker mid-traffic, assert continued DHT service via
     # failover (zero lost synced data) and a bit-exact respawn+rebuild
     timeout 300 "${MP_ENV[@]}" python examples/replicated_failover.py
+fi
+
+# -- tcp smoke lane -----------------------------------------------------------
+# The inter-host transport on loopback: every primitive crosses real
+# framed TCP sockets.  Two enforced pieces: (a) replicated failover --
+# SIGKILL one rank mid-traffic, probe reports it dead, DHT service
+# continues via replicas with zero lost synced data, respawn rebuilds
+# bit-exact (examples/replicated_failover.py asserts: exit 1); (b) the
+# aggregated small-op speedup gate on the tcp wire (batched rput trains
+# must beat the blocking path by the configured factor).  Skipped
+# gracefully where loopback sockets are restricted.
+if [[ "${TIER1_NO_MP:-0}" == "1" ]]; then
+    echo "tier1: TIER1_NO_MP=1 -- skipping tcp smoke lane" >&2
+elif ! python - >/dev/null 2>&1 <<'PY'
+import socket
+srv = socket.create_server(("127.0.0.1", 0))
+srv.close()
+PY
+then
+    echo "tier1: loopback sockets unavailable -- skipping tcp smoke lane" >&2
+else
+    echo "tier1: tcp smoke lane (REPRO_TRANSPORT=tcp, loopback," \
+         "SIGKILL failover + small-op gate)" >&2
+    TCP_ENV=(env REPRO_TRANSPORT=tcp REPRO_NRANKS=4
+             PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}")
+    timeout 300 "${TCP_ENV[@]}" python examples/replicated_failover.py
+    timeout 300 "${TCP_ENV[@]}" python -m benchmarks.imb_rma \
+        --transport tcp --smallop-only
 fi
 
 # -- SPMD smoke lane ----------------------------------------------------------

@@ -66,17 +66,72 @@ never see encoded payloads.
 from __future__ import annotations
 
 import abc
+import os
 
 import numpy as np
 
 __all__ = ["Transport", "TransportError", "ACC_OPS", "BATCH_OPS",
-           "DEFERRABLE_OPS", "apply_accumulate", "apply_get_accumulate",
-           "apply_compare_and_swap", "apply_masked_spans", "apply_op_batch",
+           "DEFERRABLE_OPS", "ENV_TIMEOUTS", "apply_accumulate",
+           "apply_get_accumulate", "apply_compare_and_swap",
+           "apply_masked_spans", "apply_op_batch", "env_timeout_s",
            "reduce_values"]
 
 
 class TransportError(RuntimeError):
     """A transport-level failure (e.g. an unreachable/crashed rank worker)."""
+
+
+#: Every transport timeout/retry env knob, with its default (seconds).
+#: All backends resolve these through :func:`env_timeout_s` -- one table
+#: to read, one table to document -- instead of scattered ``os.environ``
+#: lookups:
+#:
+#: ==========================  =======  ===================================
+#: knob                        default  governs
+#: ==========================  =======  ===================================
+#: REPRO_MP_TIMEOUT            120      mp/spmd control-channel reply wait
+#:                                      (0 disables; on expiry the channel
+#:                                      is poisoned -- its reply stream is
+#:                                      off by one)
+#: REPRO_MP_PROBE_TIMEOUT      5        mp/spmd liveness-ping reply wait
+#: REPRO_TCP_TIMEOUT           120      tcp control-channel reply wait
+#:                                      (0 disables; expiry poisons the
+#:                                      connection the same way)
+#: REPRO_TCP_PROBE_TIMEOUT     5        tcp liveness-ping reply wait
+#: REPRO_TCP_CONNECT_TIMEOUT   10       total tcp dial budget, including
+#:                                      retry-with-backoff redials to a
+#:                                      peer that is still binding (fleet
+#:                                      startup skew) or respawning
+#: REPRO_TCP_RETRY_BACKOFF     0.05     initial tcp redial backoff
+#:                                      (doubles per retry, capped at 1s)
+#: ==========================  =======  ===================================
+ENV_TIMEOUTS = {
+    "REPRO_MP_TIMEOUT": 120.0,
+    "REPRO_MP_PROBE_TIMEOUT": 5.0,
+    "REPRO_TCP_TIMEOUT": 120.0,
+    "REPRO_TCP_PROBE_TIMEOUT": 5.0,
+    "REPRO_TCP_CONNECT_TIMEOUT": 10.0,
+    "REPRO_TCP_RETRY_BACKOFF": 0.05,
+}
+
+
+def env_timeout_s(name: str) -> float:
+    """Resolve a transport timeout knob: env override or documented default.
+
+    ``name`` must be a key of :data:`ENV_TIMEOUTS` -- an unknown knob is a
+    programming error and raises ``KeyError`` rather than silently
+    returning a made-up default.  Empty/whitespace values fall back to the
+    default; malformed numbers raise ``ValueError`` naming the variable.
+    """
+    default = ENV_TIMEOUTS[name]
+    raw = os.environ.get(name, "").strip()
+    if not raw:
+        return default
+    try:
+        return float(raw)
+    except ValueError:
+        raise ValueError(f"{name}={raw!r} is not a number "
+                         f"(seconds; default {default})") from None
 
 
 #: MPI_Accumulate reduction ops shared by every backend (and by the
@@ -289,9 +344,18 @@ class Transport(abc.ABC):
         #: (:class:`repro.core.codec.WireStats`) on encoding backends.
         self.wire_stats = None
 
-    def wire_stats_snapshot(self) -> dict | None:
-        """Logical vs wire byte counters, or ``None`` on raw backends."""
-        return None if self.wire_stats is None else self.wire_stats.snapshot()
+    def wire_stats_snapshot(self) -> dict:
+        """Logical vs wire byte counters (always a well-formed snapshot).
+
+        Backends without a codec policy have no wire to account, but they
+        still return the full all-zero counter schema rather than ``None``
+        -- stats plumbing (``Window.pool_stats()["wire"]``, benchmark
+        reports) never has to branch on the backend kind.
+        """
+        if self.wire_stats is None:
+            from ..codec import WireStats
+            return WireStats().snapshot()
+        return self.wire_stats.snapshot()
 
     # -- segment lifecycle -------------------------------------------------
     @abc.abstractmethod

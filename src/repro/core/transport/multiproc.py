@@ -66,7 +66,7 @@ from ..hints import WindowHints
 from .base import (DEFERRABLE_OPS, Transport, TransportError,
                    apply_accumulate, apply_compare_and_swap,
                    apply_get_accumulate, apply_masked_spans, apply_op_batch,
-                   reduce_values)
+                   env_timeout_s, reduce_values)
 from .local import _make_segment, _MemorySegment
 
 __all__ = ["MultiprocessTransport"]
@@ -79,15 +79,16 @@ def _call_timeout_s() -> float:
     """Per-request reply timeout (a hung worker must surface as a
     TransportError, not block the driver forever).  Generous by default --
     a legitimate storage sync can take a while on a slow disk; tune with
-    ``REPRO_MP_TIMEOUT`` (seconds, 0 disables)."""
-    return float(os.environ.get("REPRO_MP_TIMEOUT", "120"))
+    ``REPRO_MP_TIMEOUT`` (seconds, 0 disables; defaults documented in
+    :data:`repro.core.transport.base.ENV_TIMEOUTS`)."""
+    return env_timeout_s("REPRO_MP_TIMEOUT")
 
 
 def _probe_timeout_s() -> float:
     """Reply timeout for liveness pings -- much tighter than the data-path
     timeout: a probe must answer "dead or alive" quickly, and it only runs
     on an otherwise idle channel (``REPRO_MP_PROBE_TIMEOUT`` seconds)."""
-    return float(os.environ.get("REPRO_MP_PROBE_TIMEOUT", "5"))
+    return env_timeout_s("REPRO_MP_PROBE_TIMEOUT")
 
 
 def _shm_open(name: str | None, size: int, create: bool):
@@ -400,8 +401,13 @@ class _SegmentService:
     origin process, exactly as the single progress thread guaranteed.
     """
 
-    def __init__(self, rank: int):
+    def __init__(self, rank: int, use_shm: bool = True):
         self.rank = rank
+        #: memory-window backing: shared-memory mappings the driver can view
+        #: zero-copy (mp/spmd, same host) vs. plain process-private buffers
+        #: served over the control channel (tcp: peers are on other hosts,
+        #: there is nothing to map)
+        self.use_shm = use_shm
         self.segments: dict[object, object] = {}
         self.lock = threading.RLock()
 
@@ -429,7 +435,8 @@ class _SegmentService:
                     return _seg_meta(self.segments[win_id])
                 hints = WindowHints(**hints_kw)
                 if not hints.is_storage:
-                    seg = _ShmBuf(size, create=True)
+                    seg = (_ShmBuf(size, create=True) if self.use_shm
+                           else _MemorySegment(size))
                 else:
                     seg = _make_segment(size, hints, name_rank,
                                         name_nranks, **spec)
@@ -524,7 +531,7 @@ class _SegmentService:
                 return msg[1]
             raise TransportError(f"unknown transport op {op!r}")
 
-    def serve_conn(self, conn, *, ready=None) -> None:
+    def serve_conn(self, conn, *, ready=None, handlers=None) -> None:
         """Service one origin's control channel until shutdown or EOF.
 
         ``ping`` is answered without taking the service lock: a probe must
@@ -537,6 +544,12 @@ class _SegmentService:
         back in one reply.  The state is per origin channel, so each
         origin reads exactly the completions -- and errors -- of its own
         posts.
+
+        ``handlers`` extends the op vocabulary for ops that are not
+        segment ops (``{op: callable(msg) -> reply}``, e.g. the tcp
+        fleet's rank-0 collective rounds).  They run *outside* the service
+        lock -- a handler may block waiting on other origins' connections
+        (a collective round) without wedging one-sided traffic.
         """
         nb_count: dict[object, int] = {}
         nb_err: dict[object, BaseException] = {}
@@ -589,7 +602,10 @@ class _SegmentService:
                         f"{payload[1]}"))))
                 continue
             try:
-                reply = self.execute(msg)
+                if handlers is not None and op in handlers:
+                    reply = handlers[op](msg)
+                else:
+                    reply = self.execute(msg)
             except BaseException as e:  # surfaced at the origin's call site
                 try:
                     conn.send(("err", e))

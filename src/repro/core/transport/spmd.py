@@ -343,6 +343,14 @@ class _WorkerTransport(Transport):
                     rank, self._addrs[rank], self._authkey)
             return ch
 
+    # timeout hooks: subclasses on another fabric (the tcp fleet) re-point
+    # these at their own env knobs without re-implementing _call/_post/probe
+    def _timeout_s(self) -> float:
+        return _call_timeout_s()
+
+    def _probe_s(self) -> float:
+        return _probe_timeout_s()
+
     def _call(self, rank: int, msg):
         if rank == self.rank:
             self.stats["local"][msg[0]] += 1
@@ -350,7 +358,7 @@ class _WorkerTransport(Transport):
         self.stats["remote"][msg[0]] += 1
         self.stats["targets"][rank] += 1
         try:
-            return self._chan(rank).call(msg, _call_timeout_s())
+            return self._chan(rank).call(msg, self._timeout_s())
         except TransportError:
             if msg[0] == "free":
                 # best-effort: the peer is dead, so its segment registry
@@ -439,7 +447,7 @@ class _WorkerTransport(Transport):
         if rank == self.rank:
             return True
         return self._chan(rank).ping(timeout if timeout is not None
-                                     else _probe_timeout_s())
+                                     else self._probe_s())
 
     # -- data path ---------------------------------------------------------
     def put(self, seg, offset: int, data) -> None:
@@ -481,7 +489,7 @@ class _WorkerTransport(Transport):
         """Fire-and-forget peer send (notified access): no reply consumed."""
         self.stats["remote"][msg[0]] += 1
         self.stats["targets"][rank] += 1
-        self._chan(rank).post(msg, _call_timeout_s())
+        self._chan(rank).post(msg, self._timeout_s())
 
     def op_batch(self, seg, ops, defer: bool = False):
         """Aggregated op train, routed like every other data op: own-rank
@@ -543,7 +551,7 @@ class _WorkerTransport(Transport):
     # -- collectives -------------------------------------------------------
     def _round(self, ptuple: tuple, payload) -> dict:
         self.stats["rounds"] += 1
-        return self._coll.round(ptuple, payload, _call_timeout_s())
+        return self._coll.round(ptuple, payload, self._timeout_s())
 
     def _barrier_on(self, ptuple: tuple) -> None:
         self._round(ptuple, ("barrier",))

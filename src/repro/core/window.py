@@ -793,9 +793,9 @@ class Window:
         if self._pool is None:
             return None
         st = self._pool.stats()
-        ws = self.comm.transport.wire_stats_snapshot()
-        if ws is not None:
-            st["wire"] = ws
+        # always a well-formed (possibly all-zero) snapshot -- see
+        # Transport.wire_stats_snapshot
+        st["wire"] = self.comm.transport.wire_stats_snapshot()
         dev = getattr(self, "_dev_sync_stats", None)
         if dev is not None:
             st["device_sync"] = dict(dev)

@@ -28,6 +28,9 @@ environment/flags, and every mode runs the *same* training code:
   bootstraps a rank-local view (``ranklocal`` transport): this process
   materializes only its own window partitions, with file naming identical
   to every other mode, and runs the same Trainer code path as rank 0.
+  With ``REPRO_TRANSPORT=tcp`` and a ``REPRO_HOSTS`` roster the process
+  instead *joins* the inter-host tcp fleet as an origin rank -- same
+  Trainer code, peers reachable across machines.
 
 On-disk checkpoint layout is byte-identical across all three modes, so a
 job may crash under one bootstrap and resume under another.
@@ -139,10 +142,13 @@ def main() -> None:
     ap.add_argument("--spmd", action="store_true",
                     help="launch REPRO_NRANKS/--nranks application ranks; "
                          "this process only monitors and respawns")
-    ap.add_argument("--transport", choices=("inproc", "mp", "ranklocal"),
+    ap.add_argument("--transport",
+                    choices=("inproc", "mp", "ranklocal", "tcp"),
                     default=None,
                     help="window transport (default: $REPRO_TRANSPORT or "
-                         "inproc; ignored under --spmd)")
+                         "inproc; ignored under --spmd).  tcp joins the "
+                         "REPRO_HOSTS fleet when a roster is set, else "
+                         "spawns a loopback fleet")
     ap.add_argument("--nranks", type=int, default=None,
                     help="communicator size (default: $REPRO_NRANKS or 1)")
     ap.add_argument("--probe-interval", type=float, default=1.0,

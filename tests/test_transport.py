@@ -1,14 +1,19 @@
-"""Transport conformance: the same window semantics over both backends.
+"""Transport conformance: the same window semantics over every backend.
 
-Every test in the parametrized half runs twice -- once on the in-process
-transport, once on the multiprocess transport (4 real worker processes) --
-and must observe identical behavior: that is the contract that lets every
-higher layer (DHT, MapReduce, checkpoints) ignore where ranks live.
+Every test in the parametrized half runs once per backend -- the
+in-process transport, the multiprocess transport (4 real worker
+processes), and the tcp transport (4 worker processes reached over real
+loopback sockets) -- and must observe identical behavior: that is the
+contract that lets every higher layer (DHT, MapReduce, checkpoints)
+ignore where ranks live.
 
-The mp-only half covers what only real processes can show: shared-memory
-windows, worker-kill fault tolerance with recovery from the storage
-window, and unreachable-rank errors.
+The backend-specific halves cover what only real processes can show:
+shared-memory windows (mp), worker-kill fault tolerance with recovery
+from the storage window, unreachable-rank errors, and cross-backend
+crash/recovery over the byte-identical file layout (tcp -> mp).
 """
+
+import socket
 
 import numpy as np
 import pytest
@@ -23,12 +28,26 @@ try:
 except ImportError:  # pragma: no cover - exotic platforms
     HAVE_SHM = False
 
-BACKENDS = ["inproc", "mp"]
+
+def _loopback_ok() -> bool:
+    try:
+        srv = socket.create_server(("127.0.0.1", 0))
+        srv.close()
+        return True
+    except OSError:  # pragma: no cover - sandboxed/socket-less platforms
+        return False
+
+
+HAVE_LOOPBACK = _loopback_ok()
+
+BACKENDS = ["inproc", "mp", "tcp"]
 
 
 def _skip_if_unavailable(kind: str) -> None:
     if kind == "mp" and not HAVE_SHM:
         pytest.skip("multiprocessing.shared_memory unavailable")
+    if kind == "tcp" and not HAVE_LOOPBACK:
+        pytest.skip("loopback sockets unavailable")
 
 
 @pytest.fixture(scope="module", params=BACKENDS)
@@ -313,8 +332,8 @@ def test_sync_from_device_one_round_trip_mp(comm4, tmp_path):
     """Under mp the whole device-sync epilogue -- spans, mask, masked flush
     -- is a single ``wsync`` control-channel message to the target rank."""
     pytest.importorskip("jax.numpy")
-    if comm4.transport.kind != "mp":
-        pytest.skip("round-trip accounting is mp-specific")
+    if comm4.transport.kind not in ("mp", "tcp"):
+        pytest.skip("round-trip accounting needs a control channel")
     win = Window.allocate(comm4, 16 * PAGE, info=storage_info(tmp_path))
     try:
         elems = 16 * PAGE // 4
@@ -565,8 +584,8 @@ def test_batched_ops_one_round_trip_mp(comm4, tmp_path):
     posted control-channel message, and their flush ONE completion read --
     the aggregation + notified-access contract.  A train containing a get
     instead ships as exactly one replying ``opbatch``."""
-    if comm4.transport.kind != "mp":
-        pytest.skip("round-trip accounting is mp-specific")
+    if comm4.transport.kind not in ("mp", "tcp"):
+        pytest.skip("round-trip accounting needs a control channel")
     win = Window.allocate(comm4, 4096, info=storage_info(tmp_path))
     try:
         calls, posts = [], []
@@ -711,3 +730,231 @@ def test_service_sync_without_sync_method_raises_transport_error():
         svc.execute(("sync", 7, False, None))
     with pytest.raises(TransportError, match="'wsync'.*memory window"):
         svc.execute(("wsync", 7, [], None))
+
+
+# -- wire-stats plumbing (satellite: never None, never missing keys) ----------
+
+def test_wire_stats_snapshot_well_formed_without_codec(tmp_path):
+    """Backends with no codec policy (inproc) must still return the full
+    all-zero counter schema -- from both Transport.wire_stats_snapshot and
+    pool_stats()["wire"] -- so stats consumers never branch on backend."""
+    from repro.core.codec import WireStats
+
+    comm = Communicator(2, transport="inproc")
+    try:
+        assert comm.transport.codec_policy is None
+        snap = comm.transport.wire_stats_snapshot()
+        assert snap == WireStats().snapshot()
+        assert snap["wire_bytes"] == 0 and snap["logical_bytes"] == 0
+        win = Window.allocate(comm, 4 * PAGE,
+                              info=storage_info(tmp_path, "ws.bin"))
+        try:
+            win.put(np.full(64, 3, np.uint8), 1, 0)
+            assert win.flush_async(1).wait(timeout=30.0) > 0
+            st = win.pool_stats()
+            assert st is not None
+            assert st["wire"] == WireStats().snapshot()
+        finally:
+            win.free()
+    finally:
+        comm.close()
+
+
+# -- make_transport bootstrap errors (satellite) -------------------------------
+
+def test_make_transport_unknown_kind_names_backends_and_env():
+    from repro.core.transport import make_transport
+    with pytest.raises(ValueError) as ei:
+        make_transport(2, 0, "rdma")
+    msg = str(ei.value)
+    for kind in ("inproc", "mp", "ranklocal", "tcp"):
+        assert kind in msg
+    for var in ("REPRO_TRANSPORT", "REPRO_NRANKS", "REPRO_RANK",
+                "REPRO_HOSTS"):
+        assert var in msg
+
+
+def test_tcp_worker_rank_requires_roster(monkeypatch):
+    """tcp with REPRO_RANK>0 must join, never spawn: without a roster the
+    error says exactly which env vars would provide one."""
+    from repro.core.transport import make_transport
+    monkeypatch.delenv("REPRO_HOSTS", raising=False)
+    monkeypatch.delenv("REPRO_RENDEZVOUS", raising=False)
+    with pytest.raises(ValueError, match="REPRO_HOSTS"):
+        make_transport(2, 1, "tcp")
+
+
+def test_env_hosts_parses_list_and_rendezvous_file(tmp_path, monkeypatch):
+    from repro.core.transport import env_hosts
+    monkeypatch.delenv("REPRO_HOSTS", raising=False)
+    monkeypatch.delenv("REPRO_RENDEZVOUS", raising=False)
+    assert env_hosts() is None
+    monkeypatch.setenv("REPRO_HOSTS", "10.0.0.1:7000, 10.0.0.2:7000")
+    assert env_hosts() == ["10.0.0.1:7000", "10.0.0.2:7000"]
+    monkeypatch.delenv("REPRO_HOSTS")
+    rv = tmp_path / "roster"
+    rv.write_text("# fleet\nhostA:9001\n\nhostB:9002\n")
+    monkeypatch.setenv("REPRO_RENDEZVOUS", str(rv))
+    assert env_hosts() == ["hostA:9001", "hostB:9002"]
+
+
+# -- tcp-only behavior --------------------------------------------------------
+
+needs_tcp = pytest.mark.skipif(not HAVE_LOOPBACK,
+                               reason="loopback sockets unavailable")
+
+
+@needs_tcp
+def test_tcp_payloads_never_ride_pickle():
+    """Framing contract: payload buffers cross as raw blob bytes after the
+    pickled skeleton, so the wire cost of a put is its size plus a small
+    constant -- never a pickle blow-up."""
+    import pickle
+
+    from repro.core.transport.tcp import _restore, _strip
+
+    data = np.arange(4096, dtype=np.uint8)
+    msg = ("put", 7, 128, data)
+    blobs = []
+    skel = _strip(msg, blobs)
+    assert len(blobs) == 1 and blobs[0].nbytes == 4096
+    assert len(pickle.dumps(skel)) < 256  # the array left the skeleton
+    blob = b"".join(bytes(memoryview(b).cast("B")) for b in blobs)
+    back = _restore(skel, bytearray(blob), [0])
+    assert back[0] == "put" and back[1] == 7 and back[2] == 128
+    np.testing.assert_array_equal(back[3], data)
+    # dtype/shape survive; nested containers and small scalars pass through
+    arr = np.linspace(0.0, 1.0, 64).reshape(8, 8)
+    msg2 = {"ops": [("acc", 0, arr, "sum")], "n": 3, "tag": b"id"}
+    blobs2 = []
+    skel2 = _strip(msg2, blobs2)
+    blob2 = b"".join(bytes(memoryview(b).cast("B")) for b in blobs2)
+    back2 = _restore(skel2, bytearray(blob2), [0])
+    got = back2["ops"][0][2]
+    assert got.dtype == np.float64 and got.shape == (8, 8)
+    np.testing.assert_array_equal(got, arr)
+    assert back2["n"] == 3 and back2["tag"] == b"id"
+
+
+@needs_tcp
+def test_tcp_handshake_rejects_wrong_token():
+    """A misconfigured host (wrong fleet secret) must fail loudly at dial
+    time, not corrupt another fleet's windows."""
+    from repro.core.transport.tcp import TcpTransport, _TcpChannel
+
+    t = TcpTransport(2)
+    try:
+        rogue = _TcpChannel(1, lambda: ("127.0.0.1", t._ports[1]),
+                            b"wrong-token")
+        with pytest.raises(TransportError, match="unreachable"):
+            rogue.call(("ping",), timeout=5.0)
+        rogue.close()
+        assert t.probe(1)  # the rejected dial did not wedge the worker
+    finally:
+        t.shutdown()
+
+
+@needs_tcp
+def test_tcp_worker_kill_failover_and_cross_backend_recovery(tmp_path):
+    """The byte-identical-layout claim, end to end: SIGKILL one tcp rank
+    mid-run (probe reports it dead, replicated reads fail over, operations
+    against it fail loudly), then a fresh *mp* world over the same files
+    restores the job byte-exact -- crash under tcp, recover under mp."""
+    rng = np.random.default_rng(11)
+    words = "one two three four five six seven".split()
+    tasks = [" ".join(rng.choice(words, 50)) for _ in range(8)]
+    expect = {}
+    for t in tasks:
+        for k, v in wordcount_map(t).items():
+            expect[k] = expect.get(k, 0) + v
+
+    comm = Communicator(4, transport="tcp")
+    mr = MapReduce1S(comm, 1 << 8, info=storage_info(tmp_path, "mr.bin"))
+    my0 = mr._tasks_of(0, len(tasks))
+    for pos in range(2):
+        for k, v in wordcount_map(tasks[my0[pos]]).items():
+            mr.table.insert(k, v, op="sum")
+        mr._commit_task(0, pos)
+    mr._drain_ckpt()
+    done = mr.completed_tasks()
+    assert done == 2
+
+    victim = comm.transport._procs[1]
+    victim.kill()
+    victim.join(timeout=10)
+    assert comm.transport.probe(1) is False
+    with pytest.raises(TransportError, match="unreachable"):
+        mr.table.win.get(1, 0, 8)
+    with pytest.raises(TransportError):
+        comm.close()
+    for p in comm.transport._procs:
+        assert not p.is_alive()
+
+    # recovery on a DIFFERENT backend: the mp world reads the tcp world's
+    # files (same <file>.<rank> naming) and resumes, replaying the
+    # unfinished tasks
+    comm2 = Communicator(4, transport="mp")
+    mr2 = MapReduce1S(comm2, 1 << 8, info=storage_info(tmp_path, "mr.bin"),
+                      resume=True)
+    assert mr2.completed_tasks() == done
+    mr2.run(tasks)
+    assert mr2.result() == expect
+    mr2.free()
+    comm2.close()
+
+
+@needs_tcp
+def test_tcp_replicated_failover_and_respawn_rebuild(tmp_path):
+    """Kill one tcp rank holding a replicated storage window: synced bytes
+    stay readable via the replica, respawn_rank brings a fresh worker up
+    on a new port, and rebuild_rank restores the partition bit-exact."""
+    comm = Communicator(3, transport="tcp")
+    try:
+        win = Window.allocate(comm, 16384, info={
+            "alloc_type": "storage",
+            "storage_alloc_filename": str(tmp_path / "rep.bin"),
+            "storage_alloc_replication": "2"})
+        synced = np.random.default_rng(5).integers(
+            0, 255, 16384).astype(np.uint8)
+        win.put(synced, 1, 0)
+        win.sync(1)
+
+        comm.transport._procs[1].kill()
+        comm.transport._procs[1].join(timeout=10)
+        assert comm.probe(1) is False
+
+        # zero lost synced bytes: the window read fails over to a replica
+        got = win.get(1, 0, 16384)
+        np.testing.assert_array_equal(np.asarray(got), synced)
+
+        comm.rebuild_rank(1)
+        assert comm.probe(1) is True
+        prim = np.asarray(comm.transport.get(win.segments[1], 0, 16384))
+        np.testing.assert_array_equal(prim, synced)
+        win.free()
+    finally:
+        comm.close()
+
+
+@needs_tcp
+def test_tcp_memory_windows_volatile_storage_durable(tmp_path):
+    """tcp has no shared memory: a memory window is served from the owning
+    rank's address space (no local view), while a storage window's bytes
+    land on disk under the same naming as every other backend."""
+    from repro.core import WindowError
+
+    comm = Communicator(2, transport="tcp")
+    try:
+        with Window.allocate(comm, 256) as win:
+            win.put(np.full(8, 5, np.uint8), 1, 0)
+            assert (win.get(1, 0, 8) == 5).all()
+            with pytest.raises(WindowError):
+                win.shared_view()  # nothing to map across a socket
+        with Window.allocate(comm, 4096,
+                             info=storage_info(tmp_path, "t.bin")) as win:
+            win.put(np.full(16, 9, np.uint8), 1, 32)
+            win.sync(1)
+        raw = np.fromfile(str(tmp_path / "t.bin.1"), dtype=np.uint8)
+        assert (raw[32:48] == 9).all()
+    finally:
+        comm.close()
