@@ -30,6 +30,7 @@ import numpy as np
 
 from benchmarks.common import Bench, workdir
 from repro.core import Communicator, Window
+from repro.core.transport import env_transport_kind
 
 SIZES = [256 << 10, 1 << 20, 4 << 20]
 ITERS = 40
@@ -65,7 +66,7 @@ def _bw(nbytes, secs):
 
 def run(bench: Bench, transport: str | None = None,
         smallop_only: bool = False) -> None:
-    transport = transport or os.environ.get("REPRO_TRANSPORT", "inproc")
+    transport = transport or env_transport_kind()
     # pipes serialize everything on the control channel: fewer reps keep
     # the mp lane's wall time sane without changing what is measured
     iters = ITERS if transport == "inproc" else 10
@@ -91,18 +92,16 @@ def _run(bench: Bench, comm, transport: str, iters: int,
                     # unidirectional put
                     t0 = time.perf_counter()
                     for _ in range(iters):
-                        win.lock(1)
-                        win.put(data, 1, 0)
-                        win.unlock(1)
+                        with win.locked(1):
+                            win.put(data, 1, 0)
                     dt = time.perf_counter() - t0
                     bench.add(f"uni_put/{kind}/{size >> 10}KiB", dt, iters,
                               _bw(size * iters, dt))
                     # unidirectional get
                     t0 = time.perf_counter()
                     for _ in range(iters):
-                        win.lock(1)
-                        win.get(1, 0, size)
-                        win.unlock(1)
+                        with win.locked(1):
+                            win.get(1, 0, size)
                     dt = time.perf_counter() - t0
                     bench.add(f"uni_get/{kind}/{size >> 10}KiB", dt, iters,
                               _bw(size * iters, dt))
@@ -113,8 +112,10 @@ def _run(bench: Bench, comm, transport: str, iters: int,
                                                          dtype=np.uint8)
                 t0 = time.perf_counter()
                 for _ in range(iters):
-                    win.lock(0); win.put(data, 0, 0); win.unlock(0)
-                    win.lock(1); win.put(data, 1, 0); win.unlock(1)
+                    with win.locked(0):
+                        win.put(data, 0, 0)
+                    with win.locked(1):
+                        win.put(data, 1, 0)
                 dt = time.perf_counter() - t0
                 bench.add(f"bidir_put/{kind}/1024KiB", dt, iters * 2,
                           _bw(2 * (1 << 20) * iters, dt))
@@ -132,7 +133,8 @@ def _run(bench: Bench, comm, transport: str, iters: int,
                     t0 = time.perf_counter()
                     for _ in range(iters // 4):
                         for r in range(1, 8):
-                            win.lock(r); win.put(data, r, 0); win.unlock(r)
+                            with win.locked(r):
+                                win.put(data, r, 0)
                     dt = time.perf_counter() - t0
                     bench.add(f"multi_put/{kind}/7targets", dt,
                               (iters // 4) * 7,
@@ -158,11 +160,13 @@ def _run(bench: Bench, comm, transport: str, iters: int,
             n = iters * 10
             t0 = time.perf_counter()
             for _ in range(n):
-                win.lock(1); win.put(small, 1, 0); win.unlock(1)
+                with win.locked(1):
+                    win.put(small, 1, 0)
             put_us = (time.perf_counter() - t0) / n * 1e6
             t0 = time.perf_counter()
             for _ in range(n):
-                win.lock(1); win.get(1, 0, 8); win.unlock(1)
+                with win.locked(1):
+                    win.get(1, 0, 8)
             get_us = (time.perf_counter() - t0) / n * 1e6
             gates_ok &= bench.gate(f"smallop_put/{kind}", put_us,
                                    SMALLOP_GATE_US)

@@ -87,9 +87,7 @@ def _recovery(bench: Bench, d: str) -> None:
         victim = 1
         win.put(blob, victim, 0)
         win.sync(victim)  # durable on primary AND replica
-        proc = comm.transport._procs[victim]
-        proc.kill()
-        proc.join(timeout=10)
+        comm.transport.kill_rank(victim)
         t0 = time.perf_counter()
         assert comm.probe(victim) is False
         back = win.get(victim, 0, SIZE)

@@ -29,11 +29,11 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import sys
 import traceback
 
 from benchmarks.common import Bench
+from repro.core.transport import env_transport_kind
 
 SUITES = ("imb_rma", "mstream", "dht", "hacc_io", "mapreduce",
           "combined_win", "async_win", "selective_sync", "replication",
@@ -55,7 +55,7 @@ def main() -> None:
                     help="also write machine-readable results (per-suite "
                          "metrics, transport, gate outcomes) to PATH")
     args = ap.parse_args()
-    transport = args.transport or os.environ.get("REPRO_TRANSPORT", "inproc")
+    transport = args.transport or env_transport_kind()
     failures = []
     report = []
     for name in SUITES:

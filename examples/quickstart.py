@@ -26,9 +26,8 @@ win = Window.allocate(comm, 1 << 20, info=info)
 for rank in range(0, comm.size, 2):
     for drank in range(1, comm.size, 2):
         k = np.asarray([rank + 42], np.int64)
-        win.lock(drank)
-        win.put(k.view(np.uint8), drank, 0)
-        win.unlock(drank)
+        with win.locked(drank):   # scoped epoch: unlocks on every path
+            win.put(k.view(np.uint8), drank, 0)
 
 print("rank1 sees:", win.get(1, 0, 1, np.int64)[0])
 

@@ -56,9 +56,7 @@ def main() -> None:
 
     # -- kill a replica-holding worker mid-traffic ------------------------
     if real_kill:
-        proc = comm.transport._procs[VICTIM]
-        proc.kill()
-        proc.join(timeout=10)
+        comm.transport.kill_rank(VICTIM)
         assert comm.probe(VICTIM) is False, "probe missed a SIGKILLed rank"
     else:
         comm.mark_dead(VICTIM)

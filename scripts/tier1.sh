@@ -36,6 +36,28 @@ if ! python -c "import hypothesis" >/dev/null 2>&1; then
                 "property tests will be skipped (conftest stub)" >&2
 fi
 
+# -- lint lane ----------------------------------------------------------------
+# Static gates run BEFORE the suite: a broken invariant should fail in
+# seconds, not after 400 tests.  ruff/mypy are baseline hygiene
+# (configured in pyproject.toml, pinned in requirements-dev.txt) and are
+# skipped gracefully where the tools are not installed; the repo's own
+# RMA epoch linter (repro.analysis.rmalint) is pure stdlib and therefore
+# ALWAYS enforced -- `--strict` fails the gate on warnings too.
+echo "tier1: lint lane (ruff + mypy + rmalint --strict)" >&2
+if python -c "import ruff" >/dev/null 2>&1 || command -v ruff >/dev/null 2>&1
+then
+    ruff check src tests examples benchmarks
+else
+    echo "tier1: ruff unavailable -- skipping (rmalint still enforced)" >&2
+fi
+if python -c "import mypy" >/dev/null 2>&1; then
+    python -m mypy --config-file pyproject.toml src/repro/analysis
+else
+    echo "tier1: mypy unavailable -- skipping (rmalint still enforced)" >&2
+fi
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.analysis.rmalint --strict
+
 export HYPOTHESIS_PROFILE="${HYPOTHESIS_PROFILE:-ci}"
 echo "tier1: hypothesis profile=${HYPOTHESIS_PROFILE}" \
      "(ci = derandomized, deadline disabled)" >&2
@@ -48,6 +70,18 @@ fi
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q ${MARKER_ARGS+"${MARKER_ARGS[@]}"} "$@"
+
+# -- sanitizer smoke lane -----------------------------------------------------
+# Re-run the transport conformance suite with the runtime window
+# sanitizer armed (REPRO_SANITIZE=1 wraps every built backend in
+# repro.analysis.WindowSanitizer): the whole inproc+mp+tcp matrix must
+# complete with zero findings -- a SanitizerError fails the suite.  The
+# suite's own HAVE_SHM/HAVE_LOOPBACK gates keep this lane graceful where
+# mp/tcp are unavailable.
+echo "tier1: sanitizer smoke lane (REPRO_SANITIZE=1, transport" \
+     "conformance)" >&2
+env REPRO_SANITIZE=1 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -x -q tests/test_transport.py
 
 # -- multiprocess smoke lane --------------------------------------------------
 if [[ "${TIER1_NO_MP:-0}" == "1" ]]; then

@@ -1,0 +1,35 @@
+"""Correctness tooling for the windows-on-storage RMA model.
+
+Two cooperating halves guard the epoch discipline every transport backend
+relies on by convention (see ``core/window.py`` "Epoch & lock discipline"):
+
+* **Static pass** -- :mod:`repro.analysis.rmalint`, an AST linter run as
+  ``python -m repro.analysis.rmalint`` (or ``scripts/rmalint``).  A rule
+  registry (:data:`repro.analysis.rules.RULES`; one id, severity,
+  rationale and fixture pair per rule) enforces the repo invariants over
+  ``src/``, ``examples/`` and ``benchmarks/``: lock/unlock pairing,
+  flush-before-free ordering, request handles never dropped before a
+  blocking read, the ``env_timeout_s`` knob contract, payload bytes never
+  pickled into control-channel skeletons, and no ``transport._`` private
+  access from outside the transport layer.
+
+* **Runtime pass** -- :class:`repro.analysis.sanitizer.WindowSanitizer`.
+  ``REPRO_SANITIZE=1`` wraps any :class:`~repro.core.transport.Transport`
+  in a shadow-state checker that tracks per-(segment, byte-range) access
+  sets per notified-access epoch and raises/records structured violations:
+  conflicting same-epoch put/put or put/get without an intervening
+  flush/sync, atomics mixed into non-exclusive posted trains, segment
+  use-after-free, and free/shutdown before the flush epoch completed.
+
+Both halves emit machine-readable JSON findings (mirroring
+``benchmarks/run.py --json``) and run as enforced tier1 lanes
+(``scripts/tier1.sh``: the lint lane and the sanitizer smoke lane).
+"""
+
+from .rules import RULES, Finding, iter_rules
+from .sanitizer import (SanitizerError, WindowSanitizer, maybe_sanitize,
+                        sanitize_enabled, sanitize_report)
+
+__all__ = ["RULES", "Finding", "iter_rules", "SanitizerError",
+           "WindowSanitizer", "maybe_sanitize", "sanitize_enabled",
+           "sanitize_report"]

@@ -1,0 +1,125 @@
+"""``rmalint`` -- static RMA-discipline lint over this repo.
+
+Usage::
+
+    python -m repro.analysis.rmalint [paths...] [--strict] [--json PATH]
+    python -m repro.analysis.rmalint --explain RMA001
+    python -m repro.analysis.rmalint --list-rules
+
+Default paths are ``src examples benchmarks`` (``tests/`` is deliberately
+out of scope: tests may reach into backend privates to kill workers and
+monkeypatch channels).  Exit status: 1 if any ``error``-severity finding
+(any finding at all under ``--strict``), else 0.  ``--json`` writes a
+machine-readable report shaped like ``benchmarks/run.py --json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from .rules import RULES, Finding, check_file
+
+DEFAULT_PATHS = ("src", "examples", "benchmarks")
+
+
+def iter_py_files(paths):
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if not d.startswith(".") and d != "__pycache__")
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    yield os.path.join(root, f)
+
+
+def lint_paths(paths) -> tuple[list[Finding], int]:
+    """Lint every ``.py`` under ``paths``; returns (findings, nfiles)."""
+    findings: list[Finding] = []
+    nfiles = 0
+    for path in iter_py_files(paths):
+        nfiles += 1
+        with open(path, "r", encoding="utf-8") as f:
+            findings.extend(check_file(path, f.read()))
+    return findings, nfiles
+
+
+def _explain(rid: str) -> int:
+    r = RULES.get(rid.upper())
+    if r is None:
+        print(f"rmalint: unknown rule {rid!r} "
+              f"(known: {', '.join(RULES)})", file=sys.stderr)
+        return 2
+    print(f"{r.id} [{r.severity}] -- {r.title}\n")
+    print(r.rationale)
+    print(f"\nfixtures: tests/fixtures/rmalint/{r.fixture}_fail.py "
+          f"(flags) / {r.fixture}_pass.py (clean)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="rmalint", description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on ANY finding, warnings included")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write machine-readable findings to PATH "
+                         "('-' for stdout)")
+    ap.add_argument("--explain", metavar="ID", default=None,
+                    help="print one rule's invariant + rationale and exit")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="list the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.explain:
+        return _explain(args.explain)
+    if args.list_rules:
+        for r in RULES.values():
+            print(f"{r.id}  [{r.severity:7s}] {r.title}")
+        return 0
+
+    paths = args.paths or [p for p in DEFAULT_PATHS if os.path.exists(p)]
+    findings, nfiles = lint_paths(paths)
+    for f in findings:
+        print(f.render())
+    errors = [f for f in findings if f.severity == "error"]
+    failed = bool(findings) if args.strict else bool(errors)
+
+    if args.json:
+        report = {
+            "tool": "rmalint",
+            "strict": args.strict,
+            "checked_files": nfiles,
+            "rules": [{"id": r.id, "severity": r.severity, "title": r.title}
+                      for r in RULES.values()],
+            "findings": [f.to_dict() for f in findings],
+            "gates_passed": not failed,
+        }
+        if args.json == "-":
+            json.dump(report, sys.stdout, indent=1)
+            sys.stdout.write("\n")
+        else:
+            with open(args.json, "w") as fh:
+                json.dump(report, fh, indent=1)
+                fh.write("\n")
+
+    print(f"rmalint: {nfiles} files, {len(findings)} findings "
+          f"({len(errors)} errors)"
+          + (" [strict]" if args.strict else ""), file=sys.stderr)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    try:
+        raise SystemExit(main())
+    except BrokenPipeError:  # e.g. `rmalint --explain X | head`
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        raise SystemExit(0)

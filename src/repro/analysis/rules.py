@@ -1,0 +1,458 @@
+"""`rmalint` rule registry: one RMA-discipline invariant per rule.
+
+Every rule is registered with :func:`rule` and carries an id
+(``RMA001``..), a severity (``error`` findings fail the lint; ``warning``
+findings fail only under ``--strict``), a one-line title, a rationale
+docstring (rendered by ``rmalint --explain <id>``), and a fixture stem --
+``tests/fixtures/rmalint/<stem>_fail.py`` must flag and
+``<stem>_pass.py`` must not (parametrized in ``tests/test_analysis.py``).
+
+Rules are pure-AST (stdlib :mod:`ast` only; no third-party deps, so the
+lint lane never skips): each check receives a :class:`FileContext` and
+yields :class:`Finding` records.  Checks are deliberately scoped to the
+*statement shapes this repo uses* -- they are invariant enforcers for
+``src/``, ``examples/`` and ``benchmarks/``, not a general Python linter.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+import textwrap
+from typing import Callable, Iterable, Iterator
+
+__all__ = ["Finding", "Rule", "RULES", "rule", "iter_rules", "check_file"]
+
+
+@dataclasses.dataclass
+class Finding:
+    """One lint (or sanitizer) violation, JSON-serializable."""
+
+    rule: str
+    severity: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.rule} [{self.severity}] {self.message}")
+
+
+@dataclasses.dataclass
+class Rule:
+    id: str
+    title: str
+    severity: str
+    rationale: str
+    fixture: str
+    check: Callable[["FileContext"], Iterator[Finding]]
+
+
+#: id -> Rule, in registration order
+RULES: dict[str, Rule] = {}
+
+
+def rule(id: str, title: str, severity: str = "error",
+         fixture: str | None = None):
+    """Register a check function under ``id``; its docstring is the
+    rationale shown by ``rmalint --explain``."""
+    def deco(fn):
+        RULES[id] = Rule(id=id, title=title, severity=severity,
+                         rationale=textwrap.dedent(fn.__doc__ or "").strip(),
+                         fixture=fixture or id.lower(), check=fn)
+        return fn
+    return deco
+
+
+def iter_rules() -> Iterable[Rule]:
+    return RULES.values()
+
+
+class FileContext:
+    """One parsed file plus the path predicates rules scope on.
+
+    Fixture files under ``tests/fixtures/rmalint/`` are treated as
+    in-scope for every path-scoped rule, so each rule's failing fixture
+    actually exercises it.
+    """
+
+    def __init__(self, path: str, tree: ast.Module):
+        self.path = path
+        self.rel = path.replace("\\", "/")
+        self.tree = tree
+        self.is_fixture = "tests/fixtures/rmalint/" in self.rel
+
+    def under(self, prefix: str) -> bool:
+        return f"/{prefix}" in f"/{self.rel}" or self.rel.startswith(prefix)
+
+    def finding(self, rid: str, node: ast.AST, message: str) -> Finding:
+        r = RULES[rid]
+        return Finding(rule=rid, severity=r.severity, path=self.path,
+                       line=getattr(node, "lineno", 0),
+                       col=getattr(node, "col_offset", 0), message=message)
+
+
+def check_file(path: str, source: str) -> list[Finding]:
+    """Run every registered rule over one file; syntax errors surface as
+    an ``RMA000`` error finding rather than crashing the lint."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(rule="RMA000", severity="error", path=path,
+                        line=e.lineno or 0, col=e.offset or 0,
+                        message=f"syntax error: {e.msg}")]
+    ctx = FileContext(path, tree)
+    out: list[Finding] = []
+    for r in RULES.values():
+        out.extend(r.check(ctx))
+    out.sort(key=lambda f: (f.line, f.col, f.rule))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# AST helpers
+# ---------------------------------------------------------------------------
+
+_SCOPE_BOUNDARY = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def _scopes(tree: ast.Module):
+    """Yield every lexical scope body: the module plus each function.
+    Nested functions re-appear as their own scope, so recursive walks
+    below stop at scope boundaries to avoid double-reporting."""
+    yield tree.body
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node.body
+
+
+def _walk_scope(stmts) -> Iterator[ast.AST]:
+    """Walk every node under ``stmts`` without descending into nested
+    function/lambda scopes, in source order."""
+    stack = list(reversed(stmts))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, _SCOPE_BOUNDARY):
+            continue  # a nested def is its own scope (yielded, not entered)
+        stack.extend(reversed(list(ast.iter_child_nodes(node))))
+
+
+def _blocks(stmts, in_finally: bool = False):
+    """Yield (block, in_finally) for every statement list under ``stmts``
+    (if/for/while/with/try bodies...), not crossing scope boundaries.
+    ``in_finally`` is sticky once a ``finally:`` block is entered."""
+    yield stmts, in_finally
+    for s in stmts:
+        if isinstance(s, _SCOPE_BOUNDARY):
+            continue
+        for field in ("body", "orelse", "finalbody"):
+            block = getattr(s, field, None)
+            if block and isinstance(block[0], ast.stmt):
+                yield from _blocks(block, in_finally or field == "finalbody")
+        for h in getattr(s, "handlers", []):
+            yield from _blocks(h.body, in_finally)
+
+
+def _method(call: ast.Call) -> tuple[str | None, str | None]:
+    """(receiver-dump, method-name) for ``recv.meth(...)``; receiver is
+    ``None`` for bare-name calls."""
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return ast.dump(f.value), f.attr
+    if isinstance(f, ast.Name):
+        return None, f.id
+    return None, None
+
+
+def _bare_call(stmt: ast.stmt) -> ast.Call | None:
+    """The call of an expression statement (``x.f(...)`` used for its
+    side effect, result dropped), else None."""
+    if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call):
+        return stmt.value
+    return None
+
+
+def _scope_calls(stmts):
+    """Every Call in the scope, source-ordered, as
+    (pos, receiver-dump, method-name, call-node)."""
+    out = []
+    for node in _walk_scope(stmts):
+        if isinstance(node, ast.Call):
+            recv, name = _method(node)
+            out.append(((node.lineno, node.col_offset), recv, name, node))
+    out.sort(key=lambda t: t[0])
+    return out
+
+
+def _kw_is_false(call: ast.Call, name: str) -> bool:
+    return any(kw.arg == name and isinstance(kw.value, ast.Constant)
+               and kw.value.value is False for kw in call.keywords)
+
+
+def _env_reads(tree: ast.Module) -> Iterator[tuple[ast.AST, str]]:
+    """Yield (node, KEY) for every ``os.environ.get("KEY", ...)``,
+    ``os.getenv("KEY", ...)`` and ``os.environ["KEY"]`` read, at any
+    nesting depth (env-read rules don't care about scope structure)."""
+    def _is_os_environ(node) -> bool:
+        return (isinstance(node, ast.Attribute) and node.attr == "environ"
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "os")
+
+    for node in ast.walk(tree):
+        key = None
+        if isinstance(node, ast.Call):
+            f = node.func
+            if (isinstance(f, ast.Attribute) and f.attr == "get"
+                    and _is_os_environ(f.value)) or \
+               (isinstance(f, ast.Attribute) and f.attr == "getenv"
+                    and isinstance(f.value, ast.Name) and f.value.id == "os"):
+                if node.args and isinstance(node.args[0], ast.Constant) \
+                        and isinstance(node.args[0].value, str):
+                    key = node.args[0].value
+        elif isinstance(node, ast.Subscript) and _is_os_environ(node.value):
+            sl = node.slice
+            if isinstance(sl, ast.Constant) and isinstance(sl.value, str):
+                key = sl.value
+        if key is not None:
+            yield node, key
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+@rule("RMA001", "lock/unlock must pair on all paths")
+def _check_lock_pairing(ctx: FileContext) -> Iterator[Finding]:
+    """A passive-target epoch opened with ``win.lock(rank)`` must reach
+    ``win.unlock(rank)`` on *every* path -- an exception between the two
+    leaves the epoch open, deadlocking later exclusive lockers and
+    leaking the epoch's deferred-flush bookkeeping.  The sanctioned
+    shapes are ``with win.locked(rank):`` or ``win.lock(rank)``
+    immediately followed by ``try: ... finally: win.unlock(rank)``.
+    Bare ``unlock`` calls outside a ``finally:`` block are flagged too.
+    """
+    for body in _scopes(ctx.tree):
+        for block, in_finally in _blocks(body):
+            for i, stmt in enumerate(block):
+                call = _bare_call(stmt)
+                if call is None:
+                    continue
+                recv, name = _method(call)
+                if recv is None or name not in ("lock", "unlock"):
+                    continue
+                if name == "unlock":
+                    if not in_finally:
+                        yield ctx.finding(
+                            "RMA001", stmt,
+                            "unlock() outside a finally block -- an "
+                            "exception in the epoch would skip it; use "
+                            "`with win.locked(rank):` or try/finally")
+                    continue
+                nxt = block[i + 1] if i + 1 < len(block) else None
+                paired = False
+                if isinstance(nxt, ast.Try) and nxt.finalbody:
+                    for node in _walk_scope(nxt.finalbody):
+                        if isinstance(node, ast.Call):
+                            r2, n2 = _method(node)
+                            if n2 == "unlock" and r2 == recv:
+                                paired = True
+                if not paired:
+                    yield ctx.finding(
+                        "RMA001", stmt,
+                        "lock() not immediately followed by try/finally "
+                        "unlock() on the same window -- use "
+                        "`with win.locked(rank):`")
+
+
+_REQ_METHODS = ("rput", "rget", "raccumulate", "flush_async")
+_COMPLETE_METHODS = ("flush", "flush_all", "sync", "wait", "waitall", "drain")
+
+
+@rule("RMA002", "no free/close while requests or trains can be un-flushed",
+      severity="warning")
+def _check_free_before_flush(ctx: FileContext) -> Iterator[Finding]:
+    """``Window.free`` / ``Communicator.close`` after nonblocking RMA
+    (``rput``/``rget``/``raccumulate``/``flush_async``/
+    ``sync(blocking=False)``) with no completion call (``flush``,
+    ``flush_all``, ``sync``, ``wait``, ``waitall``, ``drain``) in
+    between relies on teardown draining -- which reorders errors to the
+    free and hides which op failed (errors-at-flush discipline,
+    paper §2.2).  Complete the epoch first, then free.
+    """
+    for body in _scopes(ctx.tree):
+        calls = _scope_calls(body)
+        last_req = None        # position of latest un-completed request
+        for pos, recv, name, call in calls:
+            if name in _REQ_METHODS or (
+                    name == "sync" and _kw_is_false(call, "blocking")):
+                last_req = pos
+            elif name in _COMPLETE_METHODS:
+                last_req = None
+            elif last_req is not None and (
+                    name == "free"
+                    or (name == "close" and recv is not None
+                        and "comm" in recv.lower())):
+                yield ctx.finding(
+                    "RMA002", call,
+                    f"{name}() with a request/train possibly un-flushed "
+                    "(nonblocking op at line "
+                    f"{last_req[0]} has no flush/sync/wait before this "
+                    "teardown)")
+                last_req = None
+
+
+@rule("RMA003", "Request handles must not be dropped unawaited")
+def _check_dropped_request(ctx: FileContext) -> Iterator[Finding]:
+    """A ``Request`` from ``rget`` dropped on the floor is a read whose
+    payload nobody can ever observe -- always a bug.  ``rput``/
+    ``raccumulate`` results may be dropped *only* when a later
+    ``flush``/``flush_all``/``sync``/``free`` in the same scope completes
+    the train (the aggregation model completes by epoch, not by handle);
+    otherwise the write may still be sitting in an un-dispatched train
+    when a blocking ``get`` reads stale bytes.
+    """
+    for body in _scopes(ctx.tree):
+        calls = _scope_calls(body)
+        completions = [pos for pos, _, name, call in calls
+                       if name in ("flush", "flush_all", "free", "waitall")
+                       or (name == "sync"
+                           and not _kw_is_false(call, "blocking"))]
+        for block, _ in _blocks(body):
+            for stmt in block:
+                call = _bare_call(stmt)
+                if call is None:
+                    continue
+                recv, name = _method(call)
+                if recv is None:
+                    continue
+                if name == "rget":
+                    yield ctx.finding(
+                        "RMA003", stmt,
+                        "rget() request dropped -- the read's payload is "
+                        "unobservable; keep the handle and wait() it")
+                elif name in ("rput", "raccumulate"):
+                    pos = (stmt.lineno, stmt.col_offset)
+                    if not any(c > pos for c in completions):
+                        yield ctx.finding(
+                            "RMA003", stmt,
+                            f"{name}() request dropped with no later "
+                            "flush/sync/free in this scope -- the write "
+                            "may never leave its op train")
+
+
+_TIMEOUT_KEY = re.compile(r"^REPRO_.*(TIMEOUT|BACKOFF)")
+
+
+@rule("RMA004", "timeout knobs must go through env_timeout_s")
+def _check_raw_env_timeout(ctx: FileContext) -> Iterator[Finding]:
+    """Every ``REPRO_*_TIMEOUT``/``REPRO_*_BACKOFF`` knob is registered
+    in ``core/transport/base.ENV_TIMEOUTS`` with its default; reading it
+    through raw ``os.environ`` forks the default (two sites, two
+    numbers) and skips the float validation.  Call
+    ``env_timeout_s("REPRO_...")`` instead.  ``base.py`` itself is the
+    single sanctioned implementation site.
+    """
+    if ctx.rel.endswith("core/transport/base.py") and not ctx.is_fixture:
+        return
+    for node, key in _env_reads(ctx.tree):
+        if _TIMEOUT_KEY.match(key):
+            yield ctx.finding(
+                "RMA004", node,
+                f"raw os.environ read of timeout knob {key!r}; use "
+                "env_timeout_s() so the ENV_TIMEOUTS default stays "
+                "single-sourced")
+
+
+@rule("RMA005", "no payload bytes pickled into control-channel skeletons")
+def _check_payload_in_pickle(ctx: FileContext) -> Iterator[Finding]:
+    """The wire protocol pickles only the message *skeleton*; payload
+    ``bytes``/ndarrays ride after it as raw blobs (``_strip`` replaces
+    them with placeholders).  ``pickle.dumps`` on an un-stripped message
+    in the transport layer copies every payload through the pickler --
+    the exact overhead the blob framing exists to avoid (verified on the
+    wire by ``test_tcp_payloads_never_ride_pickle``).
+    """
+    if not (ctx.under("src/repro/core/") or ctx.is_fixture):
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if not (isinstance(f, ast.Attribute) and f.attr == "dumps"
+                and isinstance(f.value, ast.Name) and f.value.id == "pickle"):
+            continue
+        if not node.args:
+            continue
+        stripped = any(
+            isinstance(sub, ast.Call)
+            and _method(sub)[1] in ("_strip", "strip_blobs")
+            for sub in ast.walk(node.args[0]))
+        if not stripped:
+            yield ctx.finding(
+                "RMA005", node,
+                "pickle.dumps() of an un-stripped message -- payload "
+                "bytes would ride inside the pickled skeleton; pass it "
+                "through _strip() and frame the blobs raw")
+
+
+@rule("RMA006", "no transport._private access outside core/transport/")
+def _check_private_transport_access(ctx: FileContext) -> Iterator[Finding]:
+    """``comm.transport._procs`` and friends are backend internals: they
+    don't exist on other backends, bypass the failover/sanitizer layers,
+    and pin callers to one transport.  Outside ``core/transport/`` use
+    the public surface (``kill_rank``, ``probe``, ``wire_stats_snapshot``,
+    ``respawn_rank``...).
+    """
+    if ctx.under("src/repro/core/transport/") and not ctx.is_fixture:
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Attribute):
+            continue
+        if not (node.attr.startswith("_") and not node.attr.startswith("__")):
+            continue
+        base = node.value
+        is_transport = (
+            (isinstance(base, ast.Name) and base.id == "transport")
+            or (isinstance(base, ast.Attribute) and base.attr == "transport"))
+        if is_transport:
+            yield ctx.finding(
+                "RMA006", node,
+                f"private transport attribute {node.attr!r} accessed "
+                "outside core/transport/ -- use the public Transport "
+                "surface (kill_rank/probe/respawn_rank/...)")
+
+
+_BOOTSTRAP_KEYS = {
+    "REPRO_TRANSPORT": "env_transport_kind()",
+    "REPRO_NRANKS": "env_nranks()",
+    "REPRO_RANK": "env_rank()",
+    "REPRO_HOSTS": "env_hosts()",
+    "REPRO_RENDEZVOUS": "env_hosts()",
+}
+
+
+@rule("RMA007", "bootstrap env vars must go through the transport helpers",
+      severity="warning")
+def _check_raw_bootstrap_env(ctx: FileContext) -> Iterator[Finding]:
+    """``REPRO_TRANSPORT``/``REPRO_NRANKS``/``REPRO_RANK``/
+    ``REPRO_HOSTS``/``REPRO_RENDEZVOUS`` have parsing rules (defaults,
+    validation, joined-fleet roster splitting) implemented once in
+    ``core/transport/__init__``; raw reads drift from them.  Use
+    ``env_transport_kind()`` / ``env_nranks()`` / ``env_rank()`` /
+    ``env_hosts()``.
+    """
+    if ctx.rel.endswith("core/transport/__init__.py") and not ctx.is_fixture:
+        return
+    for node, key in _env_reads(ctx.tree):
+        if key in _BOOTSTRAP_KEYS:
+            yield ctx.finding(
+                "RMA007", node,
+                f"raw os.environ read of {key!r}; use "
+                f"{_BOOTSTRAP_KEYS[key]} from repro.core.transport")

@@ -173,7 +173,23 @@ def make_transport(size: int, rank: int = 0,
     view instead of spawning a second world, and ``tcp`` requests join
     the roster fleet (``REPRO_HOSTS``/``REPRO_RENDEZVOUS``) when one is
     named, else rank 0 spawns a loopback fleet.
+
+    ``REPRO_SANITIZE=1`` wraps the built backend in the runtime RMA
+    sanitizer (:class:`repro.analysis.sanitizer.WindowSanitizer`).
     """
+    return _maybe_sanitize(_make_transport(size, rank, kind))
+
+
+def _maybe_sanitize(transport: Transport) -> Transport:
+    if os.environ.get("REPRO_SANITIZE", "").strip().lower() in (
+            "1", "true", "yes", "on"):
+        from ...analysis.sanitizer import maybe_sanitize
+        return maybe_sanitize(transport)
+    return transport
+
+
+def _make_transport(size: int, rank: int = 0,
+                    kind: str | None = None) -> Transport:
     kind = (kind or env_transport_kind()).strip().lower()
     if kind == "inproc":
         if rank != 0:

@@ -400,6 +400,31 @@ class Transport(abc.ABC):
                 f"probe rank {rank} outside transport of size {self.size}")
         return True
 
+    #: does every op from this origin to one target ride a single FIFO
+    #: channel, so a later op is applied at the target strictly after
+    #: every earlier (even posted/notified) op?  All current backends
+    #: guarantee this ("channel-FIFO completion": one conn/socket per
+    #: rank, served in receive order) -- it is what makes a blocking
+    #: ``get`` after a waited ``rput`` train well-defined without a
+    #: flush.  The portable-MPI assumption is False (an RDMA fabric may
+    #: reorder), and the runtime sanitizer checks same-epoch data
+    #: hazards only where this is False (or REPRO_SANITIZE_PORTABLE=1
+    #: forces the portable model).
+    ordered_channels = False
+
+    def kill_rank(self, rank: int, timeout: float = 10.0) -> None:
+        """SIGKILL ``rank``'s worker (fault injection for failure drills).
+
+        The public alternative to reaching into backend privates like
+        ``_procs`` (rmalint RMA006): process-backed transports (mp, tcp
+        loopback fleets) kill and join the worker; backends with no
+        killable worker process refuse.
+        """
+        raise TransportError(
+            f"{self.kind} transport has no worker process to kill "
+            f"(rank {rank}); fault injection needs a process-backed "
+            "transport (mp, tcp)")
+
     # -- one-sided data movement ------------------------------------------
     def put(self, seg, offset: int, data: np.ndarray) -> None:
         """Write raw bytes into a (possibly remote) segment's memory copy."""

@@ -537,6 +537,16 @@ class _SegmentService:
         ``ping`` is answered without taking the service lock: a probe must
         report "alive" even while another origin (or the local application
         thread, under SPMD) holds the lock through a long storage sync.
+        **AUDIT EXEMPTION (lock discipline):** this is the one sanctioned
+        lock-free path on the service.  It is safe because the ping reply
+        reads only ``self.rank`` (immutable after construction) and this
+        connection's own socket; it never touches the shared
+        ``self.segments`` registry.  Likewise the ``nb_count``/``nb_err``
+        notified-access dicts below are *thread-confined locals* of this
+        connection's server thread -- per-origin by construction, so they
+        need no lock.  Every ``segments`` access goes through
+        :meth:`execute` (which takes the RLock) or ``close_all`` (which
+        swaps the registry under it).
 
         Notified access lives here, per connection: ``opbatch_nb`` applies
         a batch and sends NO reply, bumping a per-window applied counter
@@ -671,6 +681,10 @@ class MultiprocessTransport(Transport):
     """Spawned worker processes, one per rank, driven over socketpairs."""
 
     kind = "mp"
+    # One socketpair per rank served in receive order: channel-FIFO
+    # completion (see test_barrier_ordering / the rput->wait->rget
+    # conformance pipeline).
+    ordered_channels = True
 
     def __init__(self, size: int, rank: int = 0, *,
                  start_method: str | None = None):
@@ -686,6 +700,11 @@ class MultiprocessTransport(Transport):
         self._procs = []
         self._conns = []
         self._chan_locks = [threading.Lock() for _ in range(size)]
+        # serializes respawn_rank's proc/conn/lock slot swaps against each
+        # other; readers (_call/_post/probe) instead fetch the conn only
+        # AFTER acquiring the channel lock, so a swapped-in channel is
+        # never mixed with a pre-swap conn handle
+        self._respawn_lock = threading.Lock()
         self._win_ids = itertools.count()
         self._id_lock = threading.Lock()
         self._shutdown_done = False
@@ -721,9 +740,12 @@ class MultiprocessTransport(Transport):
 
     # -- control channel ---------------------------------------------------
     def _call(self, rank: int, msg):
-        conn = self._conns[rank]
         timeout = _call_timeout_s()
         with self._chan_locks[rank]:
+            # conn is read under the channel lock: respawn_rank swaps the
+            # conn slot before the lock slot, so a caller on the new lock
+            # always sees the new channel (never the poisoned one)
+            conn = self._conns[rank]
             try:
                 conn.send(msg)
                 if timeout > 0 and not conn.poll(timeout):
@@ -751,8 +773,8 @@ class MultiprocessTransport(Transport):
     def _post(self, rank: int, msg) -> None:
         """Fire-and-forget send (notified access): no reply is consumed, so
         the request/reply stream stays aligned for the next ``_call``."""
-        conn = self._conns[rank]
         with self._chan_locks[rank]:
+            conn = self._conns[rank]  # under the lock, as in _call
             try:
                 conn.send(msg)
             except (EOFError, OSError, BrokenPipeError) as e:
@@ -836,27 +858,44 @@ class MultiprocessTransport(Transport):
         terminated first -- both death modes must be recoverable, and its
         channel is already unusable.
         """
-        old = self._procs[rank]
-        if old.is_alive():
-            if self.probe(rank):
-                raise TransportError(
-                    f"rank {rank} worker is alive and responsive; "
-                    "refusing to respawn")
-            old.terminate()
-            old.join(timeout=_SHUTDOWN_JOIN_S)
+        with self._respawn_lock:
+            old = self._procs[rank]
             if old.is_alive():
-                old.kill()
-        old.join(timeout=_SHUTDOWN_JOIN_S)
-        try:
-            self._conns[rank].close()
-        except Exception:
-            pass
-        p, parent = self._spawn_worker(rank)
-        self._await_ready(rank, parent)
-        self._procs[rank] = p
-        self._conns[rank] = parent
-        # fresh lock: the old channel may have been poisoned mid-_call
-        self._chan_locks[rank] = threading.Lock()
+                if self.probe(rank):
+                    raise TransportError(
+                        f"rank {rank} worker is alive and responsive; "
+                        "refusing to respawn")
+                old.terminate()
+                old.join(timeout=_SHUTDOWN_JOIN_S)
+                if old.is_alive():
+                    old.kill()
+            old.join(timeout=_SHUTDOWN_JOIN_S)
+            try:
+                self._conns[rank].close()
+            except Exception:
+                pass
+            p, parent = self._spawn_worker(rank)
+            self._await_ready(rank, parent)
+            self._procs[rank] = p
+            # conn slot swaps BEFORE the lock slot: _call/_post read the
+            # conn after acquiring the lock, so anyone who lands on the
+            # fresh lock is guaranteed the fresh channel
+            self._conns[rank] = parent
+            # fresh lock: the old channel may have been poisoned mid-_call
+            self._chan_locks[rank] = threading.Lock()
+
+    def kill_rank(self, rank: int, timeout: float = 10.0) -> None:
+        """SIGKILL ``rank``'s worker process (fault injection).
+
+        The public surface for failure drills (examples/benchmarks/tests)
+        -- reaching into ``_procs`` pins callers to one backend and is
+        flagged by rmalint RMA006.  Joins the corpse so ``probe`` observes
+        the death immediately.
+        """
+        super().probe(rank)  # range check
+        p = self._procs[rank]
+        p.kill()
+        p.join(timeout=timeout)
 
     # -- target-side atomics ----------------------------------------------
     @staticmethod
@@ -982,6 +1021,8 @@ class _MpSubTransport(Transport):
     would produce).  The parent owns the worker processes -- shutting a
     sub-transport down is a no-op.
     """
+
+    ordered_channels = True  # delegates to the parent's FIFO channels
 
     kind = "mp"
 

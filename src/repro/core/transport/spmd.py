@@ -98,7 +98,11 @@ class _LocalSeg:
     def __init__(self, service: _SegmentService, win_id):
         object.__setattr__(self, "_service", service)
         object.__setattr__(self, "_win_id", win_id)
-        object.__setattr__(self, "_seg", service.segments[win_id])
+        # registry read under the service lock: a peer's server thread may
+        # be mid-execute (alloc/free mutates the same dict), and close_all
+        # swaps the registry wholesale during teardown
+        with service.lock:
+            object.__setattr__(self, "_seg", service.segments[win_id])
 
     def __getattr__(self, name):
         attr = getattr(object.__getattribute__(self, "_seg"), name)
@@ -312,6 +316,10 @@ class _WorkerTransport(Transport):
     """
 
     kind = "mp"
+    # One lazily-dialed persistent channel per peer, served in receive
+    # order -- posted trains and later calls to the same owner ride the
+    # same conn, so channel-FIFO completion holds per origin.
+    ordered_channels = True
 
     def __init__(self, rank: int, size: int, service: _SegmentService,
                  coll: _CollectiveChannel, addrs: list[str],
@@ -621,6 +629,7 @@ class _WorkerSubTransport(Transport):
     """
 
     kind = "mp"
+    ordered_channels = True  # delegates to the parent's FIFO channels
 
     def __init__(self, parent: _WorkerTransport, ranks: list[int]):
         member = parent.rank in ranks

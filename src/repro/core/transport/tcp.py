@@ -535,6 +535,9 @@ class TcpTransport(Transport):
     """
 
     kind = "tcp"
+    # One framed-TCP channel per rank served in receive order:
+    # channel-FIFO completion, exactly like mp.
+    ordered_channels = True
 
     def __init__(self, size: int, rank: int = 0, *,
                  start_method: str | None = None):
@@ -550,6 +553,10 @@ class TcpTransport(Transport):
         self._ports: list[int] = []
         self._boots: list = []  # kept open: worker-side driver-death watch
         self._chans: list[_TcpChannel] = []
+        # serializes respawn_rank's proc/port/boot/chan slot swaps; the
+        # data path reads each slot once (the channel object itself
+        # serializes its wire traffic under its own lock)
+        self._respawn_lock = threading.Lock()
         self._win_ids = itertools.count()
         self._id_lock = threading.Lock()
         self._shutdown_done = False
@@ -642,27 +649,39 @@ class TcpTransport(Transport):
         """Replace a dead rank's worker with a freshly spawned one (new
         ephemeral port, fresh channel).  Refuses a responsive worker;
         terminates a probe-dead one first -- same contract as mp."""
-        old = self._procs[rank]
-        if old.is_alive():
-            if self.probe(rank):
-                raise TransportError(
-                    f"rank {rank} worker is alive and responsive; "
-                    "refusing to respawn")
-            old.terminate()
-            old.join(timeout=_SHUTDOWN_JOIN_S)
+        with self._respawn_lock:
+            old = self._procs[rank]
             if old.is_alive():
-                old.kill()
-        old.join(timeout=_SHUTDOWN_JOIN_S)
-        self._chans[rank].close()
-        try:
-            self._boots[rank].close()
-        except Exception:
-            pass
-        p, port, boot = self._spawn_worker(rank)
-        self._procs[rank] = p
-        self._ports[rank] = port
-        self._boots[rank] = boot
-        self._chans[rank] = self._make_chan(rank)
+                if self.probe(rank):
+                    raise TransportError(
+                        f"rank {rank} worker is alive and responsive; "
+                        "refusing to respawn")
+                old.terminate()
+                old.join(timeout=_SHUTDOWN_JOIN_S)
+                if old.is_alive():
+                    old.kill()
+            old.join(timeout=_SHUTDOWN_JOIN_S)
+            self._chans[rank].close()
+            try:
+                self._boots[rank].close()
+            except Exception:
+                pass
+            p, port, boot = self._spawn_worker(rank)
+            self._procs[rank] = p
+            # port swaps before the channel: the new channel's dial
+            # closure resolves the port per dial, so it can never redial
+            # the dead worker's old port
+            self._ports[rank] = port
+            self._boots[rank] = boot
+            self._chans[rank] = self._make_chan(rank)
+
+    def kill_rank(self, rank: int, timeout: float = 10.0) -> None:
+        """SIGKILL ``rank``'s worker process (fault injection) -- the
+        public surface for failure drills; same contract as mp."""
+        super().probe(rank)  # range check
+        p = self._procs[rank]
+        p.kill()
+        p.join(timeout=timeout)
 
     # -- one-sided data movement -------------------------------------------
     @staticmethod

@@ -178,10 +178,44 @@ process.  Semantics:
   partition reconciled page-diff-granularly from the acting holder.
 
 See ``repro.core.resilience`` for the failure-model matrix.
+
+Epoch & lock discipline
+-----------------------
+
+The rules every caller of this class is expected to keep -- enforced
+statically by ``python -m repro.analysis.rmalint`` (rules catalogue:
+``rmalint --explain <id>``) and dynamically by ``REPRO_SANITIZE=1``
+(:class:`repro.analysis.sanitizer.WindowSanitizer`):
+
+* **Pair every lock.** A ``lock(rank)`` must reach ``unlock(rank)`` on
+  every path, exceptions included; the sanctioned shapes are
+  ``with win.locked(rank):`` (preferred) or ``lock`` immediately
+  followed by ``try: ... finally: unlock``.  An abandoned epoch
+  deadlocks later exclusive lockers.  (rmalint RMA001)
+* **Complete epochs before reading.** Nonblocking ``rput``/
+  ``raccumulate`` coalesce into per-target op trains that may still be
+  buffered or posted-unconfirmed; a blocking ``get`` of those bytes
+  before a ``flush(rank)``/``sync`` can observe pre-train data.  ``rget``
+  handles must always be waited.  (RMA003; sanitizer
+  ``put-get-no-flush``)
+* **Errors surface at flush.** A posted train's failure is reported by
+  the next ``flush``/``sync``/``op_complete`` on that target -- so
+  ``free()``/``comm.close()`` without an intervening completion call
+  reorders errors into teardown and hides which op failed.  Complete,
+  then free.  (RMA002; sanitizer ``flush-order``)
+* **Same-epoch conflicts are races.** Two overlapping puts, or an
+  atomic overlapping a bulk train, in one epoch have no defined order
+  across trains (within ONE train, list order holds -- the batch is
+  applied under a single service-lock acquisition).  (sanitizer
+  ``put-put-conflict``/``atomic-in-train``)
+* **put touches the page cache only; sync persists.**  Durability comes
+  from the ``sync``/``flush_async`` epoch completing, never from the
+  put returning (paper §2.2).
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import threading
@@ -1309,6 +1343,23 @@ class Window:
         ident = threading.get_ident()
         with self._epoch_lock:
             self._epoch_threads[ident] = self._epoch_threads.get(ident, 0) + 1
+
+    @contextlib.contextmanager
+    def locked(self, rank: int, exclusive: bool = False):
+        """Scoped passive-target epoch: ``with win.locked(rank): ...``.
+
+        The lint-sanctioned lock/unlock pairing (rmalint RMA001) -- the
+        epoch closes on every exit path, exceptions included.  Yields the
+        window so one-liners read naturally::
+
+            with win.locked(target) as w:
+                w.put(data, target, 0)
+        """
+        self.lock(rank, exclusive=exclusive)
+        try:
+            yield self
+        finally:
+            self.unlock(rank)
 
     def unlock(self, rank: int) -> None:
         """MPI_Win_unlock: completes all RMA ops at the target (ops here are

@@ -39,12 +39,12 @@ job may crash under one bootstrap and resume under another.
 from __future__ import annotations
 
 import argparse
-import os
 
 import jax
 
 from repro.configs import ARCHS, OFFLOAD_ARCHS, get_config
 from repro.core.comm import Communicator
+from repro.core.transport import env_nranks, env_rank
 from repro.data import SyntheticLM, make_batch_iter
 from repro.launch.mesh import make_production_mesh
 from repro.runtime.sharding import train_rules, use_rules
@@ -104,7 +104,7 @@ def _spmd_entry(comm: Communicator, opts: dict) -> dict:
 
 def _run_spmd(args) -> None:
     from repro.core.transport.spmd import SpmdLauncher
-    nranks = args.nranks or int(os.environ.get("REPRO_NRANKS", "0") or 2)
+    nranks = args.nranks or env_nranks(default=2)
     launcher = SpmdLauncher(nranks, _spmd_entry, (_train_opts(args),))
     try:
         results = launcher.monitor_until_done(
@@ -156,7 +156,7 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.spmd:
-        if int(os.environ.get("REPRO_RANK", "0") or 0) != 0:
+        if env_rank() != 0:
             raise SystemExit("--spmd is driver-only: worker ranks are "
                              "spawned by the launcher, not self-started")
         _run_spmd(args)

@@ -1,0 +1,16 @@
+"""RMA001 failing fixture: lock with no try/finally pairing."""
+
+
+def bad_bare_pair(win, data):
+    win.lock(1)
+    win.put(data, 1, 0)   # an exception here leaves the epoch open
+    win.unlock(1)
+
+
+def bad_unlock_in_body(win, data):
+    win.lock(1)
+    try:
+        win.put(data, 1, 0)
+        win.unlock(1)     # skipped when put raises: not in the finally
+    except ValueError:
+        pass

@@ -1,0 +1,22 @@
+"""RMA001 passing fixture: the two sanctioned epoch shapes."""
+
+
+def good_try_finally(win, data):
+    win.lock(1)
+    try:
+        win.put(data, 1, 0)
+    finally:
+        win.unlock(1)
+
+
+def good_context_manager(win, data):
+    with win.locked(1, exclusive=True):
+        win.put(data, 1, 0)
+
+
+def good_attribute_receiver(store, data):
+    store.win.lock(2)
+    try:
+        store.win.put(data, 2, 0)
+    finally:
+        store.win.unlock(2)

@@ -1,0 +1,12 @@
+"""RMA002 failing fixture: teardown with a train possibly un-flushed."""
+
+
+def bad_free_after_rput(win, data):
+    req = win.rput(data, 1, 0)
+    win.free()            # the train's errors reorder into teardown
+    return req
+
+
+def bad_close_after_async_flush(comm, win):
+    win.flush_async(1)
+    comm.close()          # nothing observed the queued flush's outcome

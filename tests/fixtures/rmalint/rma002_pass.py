@@ -1,0 +1,14 @@
+"""RMA002 passing fixture: complete the epoch, then tear down."""
+
+
+def good_flush_then_free(win, data):
+    req = win.rput(data, 1, 0)
+    win.flush(1)          # completion point: errors surface here
+    win.free()
+    return req
+
+
+def good_wait_then_close(comm, win):
+    win.flush_async(1)
+    win.sync(1)           # blocking sync drains the queued flush
+    comm.close()

@@ -1,0 +1,10 @@
+"""RMA003 failing fixture: request handles dropped unawaited."""
+
+
+def bad_dropped_rget(win):
+    win.rget(1, 0, 64)    # the read's payload is unobservable
+
+
+def bad_rput_never_completed(win, data):
+    win.rput(data, 1, 0)  # no flush/sync/free anywhere in this scope
+    return win.get(1, 0, 8)

@@ -1,0 +1,13 @@
+"""RMA003 passing fixture: trains completed by epoch, rget awaited."""
+
+
+def good_train_then_flush(win, data):
+    for i in range(8):
+        win.rput(data, 1, 8 * i)   # dropped handles are fine: the epoch
+    win.flush(1)                   # completes the whole train
+    return win.get(1, 0, 8)
+
+
+def good_awaited_rget(win):
+    req = win.rget(1, 0, 64)
+    return req.wait()

@@ -1,0 +1,10 @@
+"""RMA004 failing fixture: raw env reads of timeout/backoff knobs."""
+
+import os
+
+CALL_TIMEOUT = float(os.environ.get("REPRO_MP_TIMEOUT", "120"))
+PROBE_TIMEOUT = float(os.getenv("REPRO_TCP_PROBE_TIMEOUT", "5"))
+
+
+def bad_subscript():
+    return float(os.environ["REPRO_TCP_RETRY_BACKOFF"])

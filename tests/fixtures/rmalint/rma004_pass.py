@@ -1,0 +1,8 @@
+"""RMA004 passing fixture: knobs via env_timeout_s; non-knob env ok."""
+
+import os
+
+from repro.core.transport.base import env_timeout_s
+
+CALL_TIMEOUT = env_timeout_s("REPRO_MP_TIMEOUT")
+GATE_US = float(os.environ.get("REPRO_SMALLOP_GATE_US", "2000"))  # not a knob

@@ -1,0 +1,8 @@
+"""RMA005 failing fixture: payload pickled into the skeleton."""
+
+import pickle
+
+
+def bad_send(chan, msg):
+    raw = pickle.dumps(msg)   # ndarray payloads ride inside the pickle
+    chan.sendall(len(raw).to_bytes(4, "big") + raw)

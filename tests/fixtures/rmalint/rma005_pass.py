@@ -1,0 +1,15 @@
+"""RMA005 passing fixture: skeleton stripped, blobs framed raw."""
+
+import pickle
+
+
+def _strip(msg, blobs):
+    return msg  # placeholder for the real blob-stripping walk
+
+
+def good_send(chan, msg):
+    blobs = []
+    raw = pickle.dumps(_strip(msg, blobs), protocol=5)
+    chan.sendall(len(raw).to_bytes(4, "big") + raw)
+    for b in blobs:
+        chan.sendall(b)

@@ -1,0 +1,10 @@
+"""RMA006 failing fixture: backend privates reached through .transport."""
+
+
+def bad_kill(comm):
+    proc = comm.transport._procs[1]   # mp-only internals
+    proc.kill()
+
+
+def bad_call(transport, msg):
+    return transport._call(0, msg)    # bypasses failover + sanitizer

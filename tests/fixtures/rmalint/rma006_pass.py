@@ -1,0 +1,9 @@
+"""RMA006 passing fixture: the public Transport surface."""
+
+
+def good_kill(comm):
+    comm.transport.kill_rank(1)
+
+
+def good_probe(comm):
+    return comm.transport.probe(1) and comm.transport.wire_stats_snapshot()

@@ -1,0 +1,10 @@
+"""RMA007 failing fixture: raw reads of the bootstrap env contract."""
+
+import os
+
+KIND = os.environ.get("REPRO_TRANSPORT", "inproc")
+NRANKS = int(os.getenv("REPRO_NRANKS", "2"))
+
+
+def bad_rank():
+    return int(os.environ["REPRO_RANK"])

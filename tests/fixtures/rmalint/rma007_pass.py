@@ -1,0 +1,11 @@
+"""RMA007 passing fixture: the transport bootstrap helpers."""
+
+from repro.core.transport import (env_hosts, env_nranks, env_rank,
+                                  env_transport_kind)
+
+KIND = env_transport_kind()
+NRANKS = env_nranks(default=2)
+
+
+def good_identity():
+    return env_rank(), env_hosts()

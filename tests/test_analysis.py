@@ -1,0 +1,429 @@
+"""The correctness-tooling subsystem: rmalint rules + WindowSanitizer.
+
+Static half: every registered rule is exercised against its fixture pair
+(``tests/fixtures/rmalint/<stem>_fail.py`` must flag, ``_pass.py`` must
+not), and the repo itself must be ``--strict`` clean -- the acceptance
+criterion enforced as a test, not just a CI lane.
+
+Runtime half: a minimal deferring transport seeds each sanitizer
+violation class and proves it is caught exactly once, completion points
+clear the shadow epoch, and the real transports run zero-finding when
+wrapped (``REPRO_SANITIZE=1`` through ``make_transport``).
+"""
+
+import os
+import threading
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.analysis import RULES, SanitizerError, WindowSanitizer
+from repro.analysis import sanitizer as sanitizer_mod
+from repro.analysis.rmalint import lint_paths, main as rmalint_main
+from repro.analysis.sanitizer import sanitize_report
+from repro.core import Communicator, TransportError, Window
+from repro.core.transport.base import (DEFERRABLE_OPS, Transport,
+                                       apply_accumulate,
+                                       apply_compare_and_swap,
+                                       apply_get_accumulate, apply_op_batch)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXDIR = os.path.join(REPO, "tests", "fixtures", "rmalint")
+
+try:
+    import multiprocessing.shared_memory  # noqa: F401
+    HAVE_SHM = True
+except ImportError:  # pragma: no cover
+    HAVE_SHM = False
+
+
+# -- static pass: rule registry + fixtures ------------------------------------
+
+def test_registry_meets_floor():
+    assert len(RULES) >= 6
+    for r in RULES.values():
+        assert r.id.startswith("RMA") and r.severity in ("error", "warning")
+        assert r.rationale, f"{r.id} has no --explain rationale"
+        for kind in ("fail", "pass"):
+            assert os.path.exists(
+                os.path.join(FIXDIR, f"{r.fixture}_{kind}.py")), \
+                f"{r.id} is missing its {kind} fixture"
+
+
+@pytest.mark.parametrize("rid", list(RULES), ids=list(RULES))
+def test_fixture_flags_and_passes(rid):
+    r = RULES[rid]
+    flagged, _ = lint_paths([os.path.join(FIXDIR, f"{r.fixture}_fail.py")])
+    assert flagged, f"{rid}: failing fixture produced no findings"
+    assert all(f.rule == rid for f in flagged), \
+        f"{rid}: failing fixture tripped other rules: " \
+        f"{[f.rule for f in flagged]}"
+    assert all(f.severity == r.severity for f in flagged)
+    clean, _ = lint_paths([os.path.join(FIXDIR, f"{r.fixture}_pass.py")])
+    assert clean == [], \
+        f"{rid}: passing fixture flagged: {[f.render() for f in clean]}"
+
+
+def test_repo_is_strict_clean():
+    """The acceptance criterion: rmalint --strict exits 0 on the repo."""
+    paths = [os.path.join(REPO, d) for d in ("src", "examples", "benchmarks")]
+    findings, nfiles = lint_paths(paths)
+    assert nfiles > 50, "lint scope collapsed -- path wiring broke"
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_syntax_error_is_a_finding(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    findings, _ = lint_paths([str(bad)])
+    assert [f.rule for f in findings] == ["RMA000"]
+
+
+# -- static pass: CLI surface -------------------------------------------------
+
+def test_cli_explain_and_list(capsys):
+    assert rmalint_main(["--explain", "RMA001"]) == 0
+    out = capsys.readouterr().out
+    assert "RMA001" in out and "rma001_fail.py" in out
+    assert rmalint_main(["--explain", "NOPE"]) == 2
+    assert rmalint_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in RULES:
+        assert rid in out
+
+
+def test_cli_strict_exit_and_json(tmp_path, capsys):
+    fail = os.path.join(FIXDIR, "rma002_fail.py")  # warnings only
+    report_path = str(tmp_path / "lint.json")
+    # warning severity: clean exit without --strict, dirty with it
+    assert rmalint_main([fail]) == 0
+    assert rmalint_main([fail, "--strict", "--json", report_path]) == 1
+    capsys.readouterr()
+    import json
+    with open(report_path) as f:
+        report = json.load(f)
+    assert report["tool"] == "rmalint" and report["strict"]
+    assert report["gates_passed"] is False
+    assert {f["rule"] for f in report["findings"]} == {"RMA002"}
+    assert all({"path", "line", "severity", "message"} <= set(f)
+               for f in report["findings"])
+
+
+# -- runtime pass: seeded violations ------------------------------------------
+
+class _FakeSeg:
+    """Bytearray-backed segment with the handle surface the base-class op
+    appliers use (write/read/close)."""
+
+    def __init__(self, size):
+        self._buf = np.zeros(size, np.uint8)
+        self.closed = False
+
+    def write(self, offset, data):
+        u8 = np.ascontiguousarray(data).view(np.uint8).reshape(-1)
+        self._buf[offset:offset + u8.size] = u8
+
+    def read(self, offset, nbytes):
+        return self._buf[offset:offset + nbytes].copy()
+
+    def close(self, **_kw):
+        self.closed = True
+
+
+class _FakeDeferTransport(Transport):
+    """Deterministic notified-access backend: all-deferrable batches post
+    (return None) like mp/tcp do, without spawning any process."""
+
+    kind = "fake"
+
+    def __init__(self, size=2):
+        super().__init__(size, 0)
+        self.posted = 0
+
+    def allocate_segments(self, size, hints, spec):
+        return [_FakeSeg(size) for _ in range(self.size)]
+
+    def op_batch(self, seg, ops, defer=False):
+        if defer and ops and all(o[0] in DEFERRABLE_OPS for o in ops):
+            self.posted += 1
+            apply_op_batch(seg, ops)
+            return None
+        return apply_op_batch(seg, ops)
+
+    def op_complete(self, seg):
+        n, self.posted = self.posted, 0
+        return n
+
+    def accumulate(self, seg, offset, data, op):
+        apply_accumulate(seg, offset, data, op)
+
+    def get_accumulate(self, seg, offset, data, op):
+        return apply_get_accumulate(seg, offset, data, op)
+
+    def compare_and_swap(self, seg, offset, value, compare, dtype):
+        return apply_compare_and_swap(seg, offset, value, compare, dtype)
+
+    def barrier(self):
+        pass
+
+    def allreduce(self, value, op="sum"):
+        return value
+
+    def bcast(self, value, root=0):
+        return value
+
+    def split(self, color, ranks):
+        return self
+
+
+@pytest.fixture(autouse=True)
+def _clear_global_findings():
+    sanitizer_mod.FINDINGS.clear()
+    yield
+    sanitizer_mod.FINDINGS.clear()
+
+
+def _sanitized(mode="record"):
+    san = WindowSanitizer(_FakeDeferTransport(), mode=mode)
+    seg = san.allocate_segments(64, None, {})[0]
+    return san, seg
+
+
+def _post_train(san, seg, off=0, n=8):
+    arr = np.arange(n, dtype=np.uint8)
+    assert san.op_batch(seg, [("put", off, arr)], defer=True) is None
+
+
+def _rules(san):
+    return [f.rule for f in san.findings]
+
+
+def test_put_put_conflict_across_trains_caught_once():
+    san, seg = _sanitized()
+    _post_train(san, seg, off=0)
+    _post_train(san, seg, off=4)   # overlaps [0, 8)
+    assert _rules(san) == ["put-put-conflict"]
+
+
+def test_blocking_put_over_pending_train_caught_once():
+    san, seg = _sanitized()
+    _post_train(san, seg, off=0)
+    san.put(seg, 4, np.arange(8, dtype=np.uint8))
+    assert _rules(san) == ["put-put-conflict"]
+
+
+def test_blocking_get_over_pending_train_caught_once():
+    san, seg = _sanitized()
+    _post_train(san, seg, off=0)
+    san.get(seg, 0, 8)
+    assert _rules(san) == ["put-get-no-flush"]
+
+
+def test_atomic_over_pending_train_caught_once():
+    san, seg = _sanitized()
+    _post_train(san, seg, off=0)
+    san.accumulate(seg, 0, np.asarray([1], np.int64), "sum")
+    assert _rules(san) == ["atomic-in-train"]
+
+
+def test_ordered_channels_gate_data_hazards(monkeypatch):
+    # On a transport declaring channel-FIFO completion the rput -> wait
+    # -> rget pipeline is well-defined, so data-hazard checks are
+    # vacuous and skipped ...
+    class _OrderedFake(_FakeDeferTransport):
+        ordered_channels = True
+
+    san = WindowSanitizer(_OrderedFake(), mode="record")
+    seg = san.allocate_segments(64, None, {})[0]
+    _post_train(san, seg, off=0)
+    san.get(seg, 0, 8)
+    assert _rules(san) == []
+    # ... but lifecycle checks never relax: the unobserved epoch at
+    # close is a violation regardless of ordering
+    seg.close()
+    assert _rules(san) == ["flush-order"]
+
+    # REPRO_SANITIZE_PORTABLE=1 forces the portable MPI model even on
+    # an ordered transport
+    monkeypatch.setenv("REPRO_SANITIZE_PORTABLE", "1")
+    san2 = WindowSanitizer(_OrderedFake(), mode="record")
+    seg2 = san2.allocate_segments(64, None, {})[0]
+    _post_train(san2, seg2, off=0)
+    san2.get(seg2, 0, 8)
+    assert _rules(san2) == ["put-get-no-flush"]
+
+
+def test_use_after_free_caught_once():
+    san, seg = _sanitized()
+    seg.close()
+    assert seg.closed  # the patched close still runs the real one
+    san.put(seg, 0, np.arange(8, dtype=np.uint8))
+    assert _rules(san) == ["use-after-free"]
+
+
+def test_free_with_pending_train_is_flush_order():
+    san, seg = _sanitized()
+    _post_train(san, seg)
+    seg.close()
+    assert _rules(san) == ["flush-order"]
+
+
+def test_shutdown_with_pending_train_is_flush_order():
+    san, seg = _sanitized()
+    _post_train(san, seg)
+    san.shutdown()
+    assert _rules(san) == ["flush-order"]
+
+
+def test_completion_points_clear_the_epoch():
+    san, seg = _sanitized()
+    _post_train(san, seg)
+    san.op_complete(seg)
+    san.get(seg, 0, 8)            # flushed: reads are fine now
+    _post_train(san, seg, off=16)
+    san.barrier()                 # whole-world completion point
+    san.put(seg, 16, np.arange(8, dtype=np.uint8))
+    seg.close()
+    assert san.findings == []
+
+
+def test_clean_patterns_stay_clean():
+    san, seg = _sanitized()
+    _post_train(san, seg, off=0)
+    _post_train(san, seg, off=32)          # disjoint train
+    san.put(seg, 48, np.arange(8, dtype=np.uint8))   # disjoint blocking op
+    res = san.op_batch(seg, [("put", 56, np.arange(4, dtype=np.uint8)),
+                             ("get", 56, 4)])        # replying batch
+    assert isinstance(res, list)
+    san.op_complete(seg)
+    assert san.findings == []
+
+
+def test_raise_mode_raises_without_transport_error():
+    san, seg = _sanitized(mode="raise")
+    _post_train(san, seg)
+    with pytest.raises(SanitizerError) as ei:
+        san.get(seg, 0, 8)
+    # NOT a TransportError: failover must never treat a discipline
+    # violation as a dead rank
+    assert not isinstance(ei.value, TransportError)
+    assert ei.value.finding.rule == "put-get-no-flush"
+
+
+def test_report_shape_mirrors_run_json():
+    san, seg = _sanitized()
+    _post_train(san, seg)
+    san.get(seg, 0, 8)
+    report = sanitize_report()
+    assert report["tool"] == "sanitizer"
+    assert report["gates_passed"] is False
+    (f,) = report["findings"]
+    assert f["rule"] == "put-get-no-flush" and f["severity"] == "error"
+
+
+def test_delegation_and_monkeypatch_transparency():
+    inner = _FakeDeferTransport()
+    san = WindowSanitizer(inner, mode="record")
+    assert isinstance(san, Transport)      # virtual subclass (comm.py gate)
+    assert san.kind == "fake" and san.size == 2
+    san.some_channel = "patched"           # unknown attrs land on the inner
+    assert inner.some_channel == "patched"
+    sub = san.split(0, [0, 1])
+    assert isinstance(sub, WindowSanitizer)
+    assert sub.findings is san.findings    # one shared shadow world
+
+
+# -- runtime pass: real transports run clean under the wrap -------------------
+
+def test_sanitized_inproc_window_roundtrip_clean(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    comm = Communicator(2)
+    try:
+        assert isinstance(comm.transport, WindowSanitizer)
+        win = Window.allocate(comm, 4096)
+        data = np.arange(64, dtype=np.uint8)
+        win.put(data, 1, 0)
+        assert (win.get(1, 0, 64) == data).all()
+        for i in range(8):
+            win.rput(data, 1, 64 * (i + 1))
+        win.flush(1)
+        win.free()
+        assert comm.transport.findings == []
+    finally:
+        comm.close()
+    assert sanitize_report()["gates_passed"]
+
+
+@pytest.mark.skipif(not HAVE_SHM,
+                    reason="multiprocessing.shared_memory unavailable")
+def test_sanitized_mp_aggregated_trains_clean(monkeypatch, tmp_path):
+    """The notified-access hot path (posted trains + one op_complete per
+    flush) must be sanitizer-clean over real worker processes."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    comm = Communicator(2, transport="mp")
+    try:
+        assert isinstance(comm.transport, WindowSanitizer)
+        win = Window.allocate(comm, 4096, info={
+            "alloc_type": "storage",
+            "storage_alloc_filename": str(tmp_path / "san.bin")})
+        small = np.arange(8, dtype=np.uint8)
+        for _ in range(3):                      # several epochs
+            for i in range(32):
+                win.rput(small, 1, 8 * i)       # one posted train
+            win.flush(1)
+        assert (win.get(1, 0, 8) == small).all()
+        win.sync(1)
+        win.free()
+        assert comm.transport.findings == []
+    finally:
+        comm.close()
+    assert sanitize_report()["gates_passed"]
+
+
+# -- satellites: public kill surface, locked() epoch, service-lock audit ------
+
+def test_base_transport_kill_rank_refuses():
+    t = _FakeDeferTransport()
+    with pytest.raises(TransportError, match="no worker process"):
+        t.kill_rank(0)
+
+
+def test_window_locked_closes_epoch_on_exception():
+    comm = Communicator(2)
+    try:
+        win = Window.allocate(comm, 256)
+        with pytest.raises(RuntimeError, match="boom"):
+            with win.locked(1):
+                raise RuntimeError("boom")
+        # epoch really closed: an exclusive epoch can open immediately
+        with win.locked(1, exclusive=True) as w:
+            w.put(np.arange(8, dtype=np.uint8), 1, 0)
+        win.free()
+    finally:
+        comm.close()
+
+
+def test_localseg_construction_waits_for_service_lock():
+    """The SPMD rank-local segment view must read the shared registry
+    under the service lock (a peer server thread may be mid-alloc)."""
+    from repro.core.transport.multiproc import _SegmentService
+    from repro.core.transport.spmd import _LocalSeg
+
+    svc = _SegmentService(0, use_shm=False)
+    svc.segments[7] = types.SimpleNamespace(size=64)
+    built = threading.Event()
+
+    def build():
+        _LocalSeg(svc, 7)
+        built.set()
+
+    with svc.lock:
+        t = threading.Thread(target=build)
+        t.start()
+        time.sleep(0.2)
+        assert not built.is_set(), \
+            "_LocalSeg read the registry without the service lock"
+    t.join(timeout=5)
+    assert built.is_set()
